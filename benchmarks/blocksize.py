@@ -1,0 +1,39 @@
+"""Paper Table 2 analog: ASH block-size sweep B in {32..512}.
+
+The paper measures end-to-end TFLOPS on H100s; on CPU we report the two
+quantities that drive that result and can be measured honestly here:
+reconstruction fidelity (relRMSE on TP-like tensors) and fused-operator
+wall time per element (jnp path on CPU — relative scaling across B is the
+meaningful signal, matching the paper's B=256 sweet spot between kernel
+efficiency and scale granularity), plus wire bytes/element.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import emit, time_fn, tp_like_tensor
+from repro.core.taco import TacoConfig, compress, decompress, wire_bytes
+
+
+def run(out_dir="results/bench", quick=False):
+    rng = np.random.default_rng(7)
+    shape = (1024, 4096) if not quick else (256, 1024)
+    x = tp_like_tensor(rng, shape)
+    for b in [32, 64, 128, 256, 512]:
+        cfg = TacoConfig(block_size=b, impl="jnp")
+
+        @jax.jit
+        def roundtrip(v, cfg=cfg):
+            c = compress(v, cfg)
+            return decompress(c, cfg, shape=v.shape, dtype=v.dtype)
+
+        xh = roundtrip(x)
+        rel = float(jnp.linalg.norm(xh - x) / jnp.linalg.norm(x))
+        us = time_fn(roundtrip, x, iters=10)
+        c = compress(x, cfg)
+        bpe = wire_bytes(c) / x.size
+        emit(f"blocksize/B={b}", us,
+             f"relRMSE={rel:.5f};wire_bytes_per_elem={bpe:.4f};"
+             f"ns_per_elem={us*1e3/x.size:.3f}")

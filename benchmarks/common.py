@@ -1,0 +1,36 @@
+"""Shared benchmark utilities. Every table prints ``name,us_per_call,
+derived`` CSV rows via ``emit`` so benchmarks/run.py output is uniform."""
+from __future__ import annotations
+
+import time
+
+import jax
+import numpy as np
+
+
+def emit(name: str, us_per_call: float | None, derived: str):
+    us = "" if us_per_call is None else f"{us_per_call:.2f}"
+    print(f"{name},{us},{derived}", flush=True)
+
+
+def time_fn(fn, *args, iters: int = 20, warmup: int = 3) -> float:
+    """Median wall-time per call in microseconds (CPU; compiled fns)."""
+    for _ in range(warmup):
+        jax.block_until_ready(fn(*args))
+    ts = []
+    for _ in range(iters):
+        t0 = time.perf_counter()
+        jax.block_until_ready(fn(*args))
+        ts.append(time.perf_counter() - t0)
+    return float(np.median(ts) * 1e6)
+
+
+def tp_like_tensor(rng, shape, scale=0.02, outlier_frac=0.002, tail=2.0):
+    """Synthetic TP-intermediate tensor (paper Fig. 4 distribution)."""
+    import jax.numpy as jnp
+    x = rng.normal(0.0, scale, size=shape).astype(np.float32)
+    flat = x.reshape(-1)
+    k = max(1, int(flat.size * outlier_frac))
+    idx = rng.choice(flat.size, size=k, replace=False)
+    flat[idx] = rng.normal(0.0, tail, size=k).astype(np.float32)
+    return jnp.asarray(flat.reshape(shape))

@@ -1,0 +1,87 @@
+"""Paper Fig. 16 analog: fused vs unfused compression operator.
+
+The paper's fused CUDA kernel merges (1) the sigma reduction, (2) the
+rotation, (3) the max reduction, (4) the FP8 convert into one kernel. The
+unfused baseline launches each as a separate kernel with intermediate HBM
+round-trips. We measure both as separately-jitted stages (jit boundaries
+force materialization, reproducing the extra memory traffic) vs one jitted
+fused call, plus the rotated-domain fused decompress-reduce (DESIGN §7.2)
+vs per-peer decompression.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import emit, time_fn, tp_like_tensor
+from repro.core import ash as ash_mod
+from repro.core import quant as quant_mod
+from repro.core.taco import TacoConfig
+from repro.kernels import ops, ref
+
+
+def run(out_dir="results/bench", quick=False):
+    rng = np.random.default_rng(11)
+    m = 2048 if not quick else 256
+    cfg = TacoConfig(impl="jnp")
+    blocks = tp_like_tensor(rng, (m, 256))
+
+    # ---- fused: one jit covering all four stages
+    @jax.jit
+    def fused(v):
+        return ops.compress_blocks(v, cfg)
+
+    # ---- unfused: four separately-jitted stages (materialized between)
+    @jax.jit
+    def stage_sigma(v):
+        g = v.astype(jnp.float32)
+        return jnp.sqrt(jnp.mean(g * g, axis=-1) + cfg.eps)
+
+    @jax.jit
+    def stage_rotate(v, sigma):
+        h = ash_mod.hadamard_matrix(256, jnp.float32)
+        return ((cfg.tau / sigma)[:, None] * v.astype(jnp.float32)) @ h
+
+    @jax.jit
+    def stage_scale(z):
+        return jnp.maximum(jnp.max(jnp.abs(z), axis=-1) / 448.0, 1e-30)
+
+    @jax.jit
+    def stage_cvt(z, s):
+        return jnp.clip(z / s[:, None], -448, 448).astype(jnp.float8_e4m3fn)
+
+    def unfused(v):
+        sigma = stage_sigma(v)
+        z = stage_rotate(v, sigma)
+        s = stage_scale(z)
+        return stage_cvt(z, s), cfg.tau / sigma, s
+
+    us_f = time_fn(fused, blocks)
+    us_u = time_fn(unfused, blocks)
+    emit("fusion/compress_fused", us_f, f"speedup_vs_unfused={us_u/us_f:.2f}x")
+    emit("fusion/compress_unfused", us_u, "4 jit stages, materialized")
+
+    # ---- decompress-reduce: rotated-domain single rotation vs per-peer
+    peers = 16
+    q, a, s = ops.compress_blocks(blocks, cfg)
+    qs = jnp.stack([q] * peers)
+    ss = jnp.stack([s] * peers)
+    aa = jnp.stack([a] * peers)
+
+    @jax.jit
+    def reduce_fused(q_, s_, a_):
+        return ops.decompress_reduce(q_, s_, a_, cfg)
+
+    @jax.jit
+    def reduce_perpeer(q_, s_, a_):
+        return ref.decompress_reduce_ref(q_, s_, a_, cfg)
+
+    us_rf = time_fn(reduce_fused, qs, ss, aa, iters=10)
+    us_rp = time_fn(reduce_perpeer, qs, ss, aa, iters=10)
+    emit("fusion/decompress_reduce_rotated_domain", us_rf,
+         f"speedup_vs_per_peer={us_rp/us_rf:.2f}x;peers={peers}")
+    emit("fusion/decompress_reduce_per_peer", us_rp,
+         f"{peers} inverse rotations vs 1")

@@ -1,0 +1,57 @@
+"""Deliverable (g) presentation: the roofline table, read from the
+dry-run JSONs (results/dryrun/*.json). One row per (arch x shape x mesh x
+policy): three terms, dominant bottleneck, useful-FLOPs ratio, and modeled
+step time / MFU under the no-overlap and perfect-overlap bounds.
+"""
+from __future__ import annotations
+
+import glob
+import json
+import os
+
+from benchmarks.common import emit
+
+PEAK = 197e12
+
+
+def modeled(roof):
+    c, m, k = roof["compute_s"], roof["memory_s"], roof["collective_s"]
+    no_overlap = c + m + k
+    overlap = max(c, m, k)
+    return no_overlap, overlap
+
+
+def run(out_dir="results/bench", quick=False, dryrun_dir="results/dryrun"):
+    files = sorted(glob.glob(os.path.join(dryrun_dir, "*.json")))
+    if not files:
+        emit("roofline/none", None, "no dryrun results yet — run "
+             "python -m repro.launch.dryrun --all --mode roofline")
+        return
+    for fn in files:
+        with open(fn) as f:
+            rec = json.load(f)
+        tag = f"{rec['arch']}/{rec['shape']}/{rec['mesh']}/{rec['policy']}"
+        if rec.get("status") == "skipped":
+            emit(f"roofline/{tag}", None, f"SKIP:{rec['reason'][:60]}")
+            continue
+        if rec.get("status") != "ok" or "roofline" not in rec:
+            if rec.get("status") == "ok":
+                emit(f"roofline/{tag}", None,
+                     f"check_only;compile_s={rec.get('compile_s')}")
+            else:
+                emit(f"roofline/{tag}", None,
+                     f"ERROR:{rec.get('error', '?')[:80]}")
+            continue
+        roof = rec["roofline"]
+        no_ov, ov = modeled(roof)
+        mfu_ov = roof["model_flops"] / rec["devices"] / PEAK / max(ov, 1e-12)
+        emit(
+            f"roofline/{tag}", None,
+            f"compute_ms={roof['compute_s']*1e3:.2f};"
+            f"memory_ms={roof['memory_s']*1e3:.2f};"
+            f"collective_ms={roof['collective_s']*1e3:.2f};"
+            f"dominant={roof['dominant']};"
+            f"useful_ratio={roof['useful_ratio']:.3f};"
+            f"step_ms_no_overlap={no_ov*1e3:.2f};"
+            f"step_ms_overlapped={ov*1e3:.2f};"
+            f"roofline_fraction_mfu={mfu_ov:.3f}")

@@ -1,0 +1,54 @@
+"""Benchmark harness — one module per paper table/figure.
+
+  accuracy       Table 1 + Fig 11/13/14 (convergence under compression grid)
+  blocksize      Table 2 (ASH block-size sweep)
+  fusion         Fig 16 (fused vs unfused operator; rotated-domain reduce)
+  comm_volume    Fig 15 / §5.4 (TP wire bytes per step vs TP degree)
+  roofline_table deliverable (g) presentation from dry-run artifacts
+  threed         Table 3 (3D-parallel throughput model; needs PP results)
+
+Output format: ``name,us_per_call,derived`` CSV rows.
+Usage: PYTHONPATH=src python -m benchmarks.run [--quick] [--only NAME]
+"""
+import argparse
+import sys
+import traceback
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true")
+    ap.add_argument("--only", default=None)
+    args = ap.parse_args()
+
+    from benchmarks import (accuracy, blocksize, comm_volume, fusion,
+                            roofline_table)
+    tables = {
+        "blocksize": blocksize.run,
+        "fusion": fusion.run,
+        "comm_volume": comm_volume.run,
+        "roofline_table": roofline_table.run,
+        "accuracy": accuracy.run,
+    }
+    try:
+        from benchmarks import threed
+        tables["threed"] = threed.run
+    except ImportError:
+        pass
+    print("name,us_per_call,derived")
+    failures = []
+    for name, fn in tables.items():
+        if args.only and name != args.only:
+            continue
+        try:
+            fn(quick=args.quick)
+        except Exception as e:  # noqa: BLE001
+            failures.append(name)
+            print(f"{name},,ERROR:{type(e).__name__}:{e}", flush=True)
+            traceback.print_exc(file=sys.stderr)
+    if failures:
+        raise SystemExit(f"benchmark failures: {failures}")
+
+
+if __name__ == "__main__":
+    main()

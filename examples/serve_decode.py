@@ -1,0 +1,79 @@
+"""Batched-request serving example: greedy decode with a KV cache and
+TACO-compressed TP AllReduce (the decode path uses the two-shot compressed
+AllReduce since seq==1 cannot be sequence-sharded).
+
+    PYTHONPATH=src python examples/serve_decode.py --arch qwen2-0.5b
+"""
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax import shard_map
+from jax.sharding import PartitionSpec as P
+
+from repro.configs import get_config, make_plan, smoke_config
+from repro.core.parallel import CommPolicy, ParallelCtx
+from repro.core.taco import TacoConfig
+from repro.launch.mesh import make_mesh
+from repro.models.model import Model
+from repro.serve import serve_step as ss
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="qwen2-0.5b")
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--prompt-len", type=int, default=16)
+    ap.add_argument("--gen", type=int, default=32)
+    ap.add_argument("--no-compress", action="store_true")
+    args = ap.parse_args()
+
+    mesh = make_mesh((1, 1, 1), ("pod", "data", "model"))
+    cfg = smoke_config(get_config(args.arch))
+    plan = make_plan(cfg, tp=1, fsdp=1, remat=False)
+    model = Model(cfg, plan)
+    params = model.init(jax.random.PRNGKey(0))
+    policy = CommPolicy.baseline() if args.no_compress else \
+        CommPolicy.taco(TacoConfig(impl="jnp"))
+    ctx = ParallelCtx(policy=policy, tp_mode="allreduce")
+
+    max_len = args.prompt_len + args.gen
+    cache = ss.init_cache(model, args.batch, max_len=max(64, max_len))
+
+    def step(p, c, t, pos):
+        return ss.decode_forward(p, t, c, pos, model, ctx)
+
+    cspecs = jax.tree.map(lambda _: P(), cache)
+    fn = jax.jit(shard_map(
+        step, mesh=mesh,
+        in_specs=(jax.tree.map(lambda _: P(), params), cspecs, P(), P()),
+        out_specs=(P(), cspecs), check_vma=False))
+
+    rng = np.random.default_rng(0)
+    prompt = jnp.asarray(
+        rng.integers(0, cfg.vocab_size, (args.batch, args.prompt_len)),
+        jnp.int32)
+
+    # prefill by stepping the prompt (simple serving loop)
+    t0 = time.time()
+    nxt = None
+    for t in range(args.prompt_len):
+        nxt, cache = fn(params, cache, prompt[:, t:t + 1], t)
+    generated = [nxt]
+    for t in range(args.prompt_len, max_len - 1):
+        nxt, cache = fn(params, cache, nxt, t)
+        generated.append(nxt)
+    toks = jnp.concatenate(generated, axis=1)
+    dt = time.time() - t0
+    total_tokens = args.batch * (max_len - 1)
+    print(f"arch={cfg.name} batch={args.batch} generated {toks.shape[1]} "
+          f"tokens/request")
+    print(f"throughput {total_tokens/dt:.1f} tok/s on CPU "
+          f"({'baseline' if args.no_compress else 'TACO-compressed'} TP)")
+    print("sample token ids:", np.asarray(toks[0, :16]))
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,103 @@
+"""Generate EXPERIMENTS.md markdown tables from results/dryrun/*.json."""
+import glob
+import json
+import os
+import sys
+
+PEAK = 197e12
+
+
+def load(dryrun_dir):
+    recs = []
+    for fn in sorted(glob.glob(os.path.join(dryrun_dir, "*.json"))):
+        with open(fn) as f:
+            recs.append(json.load(f))
+    return recs
+
+
+def fmt_bytes(b):
+    if b is None:
+        return "-"
+    for unit in ["B", "KB", "MB", "GB", "TB"]:
+        if b < 1024:
+            return f"{b:.1f}{unit}"
+        b /= 1024
+    return f"{b:.1f}PB"
+
+
+def dryrun_table(recs):
+    print("| arch | shape | mesh | status | compile_s | args/dev | temps/dev |")
+    print("|---|---|---|---|---|---|---|")
+    seen = set()
+    for r in recs:
+        if r.get("policy") != "taco" or r.get("variant"):
+            continue
+        key = (r["arch"], r["shape"], r["mesh"])
+        if key in seen:
+            continue
+        seen.add(key)
+        if r["status"] == "skipped":
+            print(f"| {r['arch']} | {r['shape']} | {r['mesh']} | "
+                  f"SKIP ({r['reason'][:40]}...) | - | - | - |")
+            continue
+        if r["status"] != "ok":
+            print(f"| {r['arch']} | {r['shape']} | {r['mesh']} | "
+                  f"ERROR | - | - | - |")
+            continue
+        mem = r.get("memory", {})
+        print(f"| {r['arch']} | {r['shape']} | {r['mesh']} | ok | "
+              f"{r.get('compile_s', '-')} | "
+              f"{fmt_bytes(mem.get('argument_size_in_bytes'))} | "
+              f"{fmt_bytes(mem.get('temp_size_in_bytes'))} |")
+
+
+def roofline_table(recs):
+    print("| arch | shape | compute_ms | memory_ms | coll_ms | dominant | "
+          "useful | MFU(overlap) | top collective |")
+    print("|---|---|---|---|---|---|---|---|---|")
+    for r in recs:
+        if r.get("mesh") != "single" or r.get("policy") != "taco" \
+                or "roofline" not in r or r.get("variant"):
+            continue
+        roof = r["roofline"]
+        ov = max(roof["compute_s"], roof["memory_s"], roof["collective_s"])
+        mfu = roof["model_flops"] / r["devices"] / PEAK / max(ov, 1e-12)
+        by_kind = roof.get("coll_by_kind", {})
+        top = max(by_kind, key=by_kind.get) if by_kind else "-"
+        topv = by_kind.get(top, 0)
+        print(f"| {r['arch']} | {r['shape']} | "
+              f"{roof['compute_s']*1e3:.1f} | {roof['memory_s']*1e3:.1f} | "
+              f"{roof['collective_s']*1e3:.1f} | {roof['dominant']} | "
+              f"{roof['useful_ratio']:.3f} | {mfu:.3f} | "
+              f"{top} ({fmt_bytes(topv)}/dev) |")
+
+
+def variant_table(recs, arch, shape):
+    rows = [r for r in recs if r["arch"] == arch and r["shape"] == shape
+            and "roofline" in r]
+    print(f"\n#### {arch} / {shape}")
+    print("| policy | variant | compute_ms | memory_ms | coll_ms | "
+          "step_ms(overlap) |")
+    print("|---|---|---|---|---|---|")
+    for r in rows:
+        roof = r["roofline"]
+        ov = max(roof["compute_s"], roof["memory_s"], roof["collective_s"])
+        print(f"| {r['policy']} | {r.get('variant') or '-'} | "
+              f"{roof['compute_s']*1e3:.1f} | {roof['memory_s']*1e3:.1f} | "
+              f"{roof['collective_s']*1e3:.1f} | {ov*1e3:.1f} |")
+
+
+if __name__ == "__main__":
+    recs = load(sys.argv[1] if len(sys.argv) > 1 else "results/dryrun")
+    section = sys.argv[2] if len(sys.argv) > 2 else "all"
+    if section in ("all", "dryrun"):
+        print("### Dry-run matrix\n")
+        dryrun_table(recs)
+    if section in ("all", "roofline"):
+        print("\n### Roofline (single-pod, TACO policy)\n")
+        roofline_table(recs)
+    if section in ("all", "variants"):
+        for arch, shape in [("qwen2-0.5b", "train_4k"),
+                            ("llama4-maverick-400b-a17b", "train_4k"),
+                            ("llama3.2-3b", "decode_32k")]:
+            variant_table(recs, arch, shape)

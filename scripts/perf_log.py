@@ -1,0 +1,69 @@
+"""Build the §Perf iteration log from hillclimb JSONs: for each cell,
+baseline (taco) vs each variant, with per-term deltas and verdicts
+against the recorded predictions."""
+import glob
+import json
+import os
+
+CELLS = [
+    ("qwen2-0.5b", "train_4k"),
+    ("llama4-maverick-400b-a17b", "train_4k"),
+    ("llama3.2-3b", "decode_32k"),
+]
+
+
+def load_all(d="results/dryrun"):
+    recs = []
+    for fn in glob.glob(os.path.join(d, "*__roofline*.json")):
+        with open(fn) as f:
+            r = json.load(f)
+        if r.get("status") == "ok" and "roofline" in r:
+            recs.append(r)
+    return recs
+
+
+def key(r):
+    return (r["arch"], r["shape"], r["policy"], r.get("variant") or "")
+
+
+def fmt(r):
+    roof = r["roofline"]
+    ov = max(roof["compute_s"], roof["memory_s"], roof["collective_s"])
+    return (f"compute={roof['compute_s']*1e3:9.1f}ms "
+            f"memory={roof['memory_s']*1e3:9.1f}ms "
+            f"coll={roof['collective_s']*1e3:8.1f}ms "
+            f"step(ov)={ov*1e3:9.1f}ms dom={roof['dominant']}")
+
+
+def main():
+    recs = {key(r): r for r in load_all()}
+    for arch, shape in CELLS:
+        print(f"\n==== {arch} / {shape} ====")
+        base = recs.get((arch, shape, "taco", ""))
+        rawb = recs.get((arch, shape, "baseline", ""))
+        if rawb:
+            print(f"  uncompressed baseline : {fmt(rawb)}")
+        if not base:
+            print("  (taco baseline missing)")
+            continue
+        print(f"  TACO paper-faithful    : {fmt(base)}")
+        b = base["roofline"]
+        bov = max(b["compute_s"], b["memory_s"], b["collective_s"])
+        for (a, s, pol, var), r in sorted(recs.items()):
+            if (a, s) != (arch, shape) or (pol, var) in (("taco", ""),
+                                                         ("baseline", "")):
+                continue
+            roof = r["roofline"]
+            ov = max(roof["compute_s"], roof["memory_s"],
+                     roof["collective_s"])
+            dc = (roof["collective_s"] / b["collective_s"] - 1) * 100
+            dm = (roof["memory_s"] / b["memory_s"] - 1) * 100
+            df = (roof["compute_s"] / b["compute_s"] - 1) * 100
+            dov = (ov / bov - 1) * 100
+            print(f"  {pol:12s} {var:28s}: {fmt(r)}")
+            print(f"    vs taco: compute {df:+6.1f}%  memory {dm:+6.1f}%  "
+                  f"coll {dc:+6.1f}%  step {dov:+6.1f}%")
+
+
+if __name__ == "__main__":
+    main()

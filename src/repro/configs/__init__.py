@@ -1,0 +1,13 @@
+"""Config registry. Importing this package registers every architecture."""
+from repro.configs import archs as _archs  # noqa: F401  (registration)
+from repro.configs.archs import ASSIGNED
+from repro.configs.base import (ArchConfig, MoeConfig, RunPlan, SsmConfig,
+                                get_config, list_configs, make_plan,
+                                smoke_config)
+from repro.configs.shapes import SHAPES, ShapeSuite, applicable, cells
+
+__all__ = [
+    "ArchConfig", "MoeConfig", "SsmConfig", "RunPlan", "make_plan",
+    "get_config", "list_configs", "smoke_config", "ASSIGNED",
+    "SHAPES", "ShapeSuite", "applicable", "cells",
+]

@@ -1,0 +1,4 @@
+"""Config module for GPT_350M (see archs.py for the literal pool values)."""
+from repro.configs.archs import GPT_350M as CONFIG
+
+__all__ = ["CONFIG"]

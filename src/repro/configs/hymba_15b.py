@@ -1,0 +1,4 @@
+"""Config module for HYMBA_15B (see archs.py for the literal pool values)."""
+from repro.configs.archs import HYMBA_15B as CONFIG
+
+__all__ = ["CONFIG"]

@@ -1,0 +1,4 @@
+"""Config module for QWEN2_0_5B (see archs.py for the literal pool values)."""
+from repro.configs.archs import QWEN2_0_5B as CONFIG
+
+__all__ = ["CONFIG"]

@@ -1,0 +1,124 @@
+"""Adaptive Scale-Hadamard (ASH) transform — paper §4.2.
+
+Blocks of size B are (1) rescaled so their RMS energy hits a target tau
+(block-wise adaptive rescaling, Eq. 6-7), then (2) rotated by the
+orthogonal Walsh-Hadamard matrix H_B/sqrt(B) (Eq. 8). The rotation is
+exactly invertible (H/sqrt(B) is symmetric orthogonal).
+
+Two equivalent rotation implementations:
+  * ``hadamard_matrix`` + matmul — the TPU-native form (MXU systolic array
+    chews a 256x256 constant +-1 matmul far faster than a lane-serial
+    butterfly). Used by the Pallas kernel and the jnp ops.
+  * ``fwht`` — classic O(B log B) butterfly, used as an independent oracle.
+
+All functions operate on arrays of shape (..., B) where B is a power of 2.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+__all__ = [
+    "hadamard_matrix",
+    "fwht",
+    "block_partition",
+    "block_unpartition",
+    "ash_forward",
+    "ash_inverse",
+]
+
+
+@functools.lru_cache(maxsize=16)
+def _hadamard_np(block_size: int) -> np.ndarray:
+    """Sylvester-construction Hadamard matrix (entries +-1), cached."""
+    if block_size <= 0 or (block_size & (block_size - 1)) != 0:
+        raise ValueError(f"block_size must be a power of 2, got {block_size}")
+    h = np.array([[1.0]], dtype=np.float64)
+    base = np.array([[1.0, 1.0], [1.0, -1.0]], dtype=np.float64)
+    while h.shape[0] < block_size:
+        h = np.kron(h, base)
+    return h
+
+
+def hadamard_matrix(block_size: int, dtype=jnp.float32) -> jax.Array:
+    """Normalized (orthogonal) Hadamard matrix H_B / sqrt(B)."""
+    h = _hadamard_np(block_size) / np.sqrt(block_size)
+    return jnp.asarray(h, dtype=dtype)
+
+
+def fwht(x: jax.Array) -> jax.Array:
+    """Fast Walsh-Hadamard transform along the last axis (unnormalized).
+
+    Equivalent to ``x @ hadamard_matrix(B) * sqrt(B)`` (H is symmetric).
+    O(B log B) butterfly; serves as the reference oracle for the matmul form.
+    """
+    n = x.shape[-1]
+    if n & (n - 1) != 0:
+        raise ValueError(f"last dim must be a power of 2, got {n}")
+    lead = x.shape[:-1]
+    x = x.reshape(-1, n)
+    h = 1
+    while h < n:
+        x = x.reshape(-1, n // (2 * h), 2, h)
+        a = x[:, :, 0, :]
+        b = x[:, :, 1, :]
+        x = jnp.concatenate([a + b, a - b], axis=-1)
+        h *= 2
+    return x.reshape(*lead, n)
+
+
+def block_partition(x: jax.Array, block_size: int) -> tuple[jax.Array, int]:
+    """Flatten ``x`` and partition into (M, B) blocks, zero-padding the tail.
+
+    Returns (blocks, orig_size). Padding with zeros is benign: padded blocks
+    get sigma ~= sqrt(eps) and reconstruct to ~0; the tail is sliced off by
+    ``block_unpartition``.
+    """
+    flat = x.reshape(-1)
+    n = flat.shape[0]
+    rem = (-n) % block_size
+    if rem:
+        flat = jnp.concatenate([flat, jnp.zeros((rem,), flat.dtype)])
+    return flat.reshape(-1, block_size), n
+
+
+def block_unpartition(blocks: jax.Array, orig_size: int, shape) -> jax.Array:
+    flat = blocks.reshape(-1)[:orig_size]
+    return flat.reshape(shape)
+
+
+def ash_forward(
+    blocks: jax.Array,
+    *,
+    tau: float = 1.0,
+    eps: float = 1e-12,
+    compute_dtype=jnp.float32,
+) -> tuple[jax.Array, jax.Array]:
+    """Paper Eq. 6-8: blocks (M, B) -> (Z, alpha).
+
+    sigma_k = sqrt(mean(G_k^2) + eps);  alpha_k = tau / sigma_k
+    Z_k = (H_B / sqrt(B)) @ (alpha_k * G_k)
+    """
+    b = blocks.shape[-1]
+    g = blocks.astype(compute_dtype)
+    sigma = jnp.sqrt(jnp.mean(g * g, axis=-1, keepdims=True) + eps)
+    alpha = tau / sigma
+    h = hadamard_matrix(b, compute_dtype)
+    z = (alpha * g) @ h  # H symmetric: right-multiply == H @ g per block
+    return z, alpha[..., 0]
+
+
+def ash_inverse(
+    z: jax.Array,
+    alpha: jax.Array,
+    *,
+    compute_dtype=jnp.float32,
+) -> jax.Array:
+    """Paper Eq. 12-13: inverse rotation then undo the adaptive rescale."""
+    b = z.shape[-1]
+    h = hadamard_matrix(b, compute_dtype)
+    g = (z.astype(compute_dtype) @ h) / alpha[..., None]
+    return g

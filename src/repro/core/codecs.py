@@ -1,0 +1,195 @@
+"""Wire codecs: a uniform interface over the compression schemes used on
+each communication path of the 3D-parallel stack (paper §4.4.2 + §5.5):
+
+  * ``TacoCodec``     — TP intermediate tensors (FP8 ASH+DS; the paper).
+  * ``Sdp4BitCodec``  — DP gradient reduce-scatter (int4 + rotation).
+  * ``TahQuantCodec`` — PP stage boundaries (group int8).
+  * ``Int8Codec``     — weight all-gather compression (beyond-paper knob).
+  * ``IdentityCodec`` — no compression (baseline); collectives special-case
+    it to native lax collectives so the baseline HLO is untouched.
+
+All codecs operate on 2-D ``(slots, n)`` arrays where ``slots`` is a chunk/
+peer dimension and ``n`` (static) is a multiple of ``granule``. ``encode``
+returns a tuple of arrays that the collective layer transports; ``decode``
+inverts; ``decode_sum`` reduces a stacked peer axis during ReduceScatter
+(fused, rotated-domain where applicable).
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import dp_compress, pp_compress
+from repro.core.taco import TacoConfig
+from repro.kernels import ops as kops
+
+__all__ = [
+    "IdentityCodec", "TacoCodec", "Sdp4BitCodec", "TahQuantCodec",
+    "Int8Codec", "wire_bytes_per_element",
+]
+
+
+@dataclasses.dataclass(frozen=True)
+class IdentityCodec:
+    granule: int = 1
+
+    def encode(self, x):
+        return (x,)
+
+    def decode(self, enc, n, dtype):
+        return enc[0].astype(dtype)
+
+    def decode_sum(self, enc, n, dtype):
+        return jnp.sum(enc[0], axis=0).astype(dtype)
+
+    def bytes_per_element(self, in_dtype=jnp.bfloat16) -> float:
+        return np.dtype(in_dtype).itemsize
+
+
+@dataclasses.dataclass(frozen=True)
+class TacoCodec:
+    """The paper's compressor. Payload uint8 (bitcast fp8/int8) + scales."""
+
+    cfg: TacoConfig = TacoConfig()
+
+    @property
+    def granule(self) -> int:
+        return self.cfg.block_size
+
+    def _split(self, x):
+        slots, n = x.shape
+        b = self.cfg.block_size
+        return x.reshape(slots * (n // b), b), n // b
+
+    def encode(self, x):
+        from repro.core import taco as taco_mod
+        slots, n = x.shape
+        blocks, mb = self._split(x)
+        q, alpha, s = kops.compress_blocks(blocks, self.cfg)
+        payload = taco_mod._storage_to_wire(q, self.cfg.format_spec)
+        payload = payload.reshape(slots, n)
+        groups = s.shape[-1]
+        if self.cfg.metadata == "folded":
+            return payload, (s / alpha[:, None]).reshape(slots, mb * groups)
+        return payload, s.reshape(slots, mb * groups), alpha.reshape(slots, mb)
+
+    def _meta(self, enc, slots_shape):
+        b = self.cfg.block_size
+        groups = b // (self.cfg.quant_group_size or b)
+        if self.cfg.metadata == "folded":
+            payload, s = enc
+            return payload, s, None, groups
+        payload, s, alpha = enc
+        return payload, s, alpha, groups
+
+    def decode(self, enc, n, dtype):
+        from repro.core import taco as taco_mod
+        payload, s, alpha, groups = self._meta(enc, None)
+        slots = payload.shape[0]
+        b = self.cfg.block_size
+        m = slots * (n // b)
+        q = taco_mod._wire_to_storage(payload.reshape(m, b), self.cfg.format_spec)
+        s = s.reshape(m, groups)
+        alpha = None if alpha is None else alpha.reshape(m)
+        out = kops.decompress_blocks(q, s, alpha, self.cfg)
+        return out.reshape(slots, n).astype(dtype)
+
+    def decode_sum(self, enc, n, dtype):
+        from repro.core import taco as taco_mod
+        payload, s, alpha, groups = self._meta(enc, None)
+        p = payload.shape[0]
+        b = self.cfg.block_size
+        m = (payload.size // p) // b
+        q = taco_mod._wire_to_storage(payload.reshape(p, m, b), self.cfg.format_spec)
+        s = s.reshape(p, m, groups)
+        alpha = None if alpha is None else alpha.reshape(p, m)
+        out = kops.decompress_reduce(q, s, alpha, self.cfg)
+        return out.reshape(-1)[:n].astype(dtype) if out.ndim > 1 else out.astype(dtype)
+
+    def bytes_per_element(self, in_dtype=jnp.bfloat16) -> float:
+        b = self.cfg.block_size
+        groups = b // (self.cfg.quant_group_size or b)
+        scalars = groups + (0 if self.cfg.metadata == "folded" else 1)
+        return 1.0 + 4.0 * scalars / b
+
+
+@dataclasses.dataclass(frozen=True)
+class Sdp4BitCodec:
+    block: int = 128
+    rotate: bool = True
+
+    @property
+    def granule(self) -> int:
+        return self.block
+
+    def encode(self, x):
+        return dp_compress.compress_int4(x, self.block, self.rotate)
+
+    def decode(self, enc, n, dtype):
+        packed, s = enc
+        return dp_compress.decompress_int4(packed, s, n, self.block, self.rotate, dtype)
+
+    def decode_sum(self, enc, n, dtype):
+        packed, s = enc
+        return dp_compress.decompress_sum_int4(
+            packed, s, n, self.block, self.rotate, dtype).reshape(-1)[:n]
+
+    def bytes_per_element(self, in_dtype=jnp.bfloat16) -> float:
+        return 0.5 + 4.0 / self.block
+
+
+@dataclasses.dataclass(frozen=True)
+class TahQuantCodec:
+    group: int = 64
+
+    @property
+    def granule(self) -> int:
+        return self.group
+
+    def encode(self, x):
+        return pp_compress.compress_int8_group(x, self.group)
+
+    def decode(self, enc, n, dtype):
+        q, s = enc
+        return pp_compress.decompress_int8_group(q, s, n, self.group, dtype)
+
+    def decode_sum(self, enc, n, dtype):
+        q, s = enc
+        return pp_compress.decompress_sum_int8_group(
+            q, s, n, self.group, dtype).reshape(-1)[:n]
+
+    def bytes_per_element(self, in_dtype=jnp.bfloat16) -> float:
+        return 1.0 + 4.0 / self.group
+
+
+@dataclasses.dataclass(frozen=True)
+class Int8Codec:
+    """Per-group int8 for weight all-gather (beyond-paper, DESIGN.md §7.3)."""
+
+    group: int = 128
+
+    @property
+    def granule(self) -> int:
+        return self.group
+
+    def encode(self, x):
+        return pp_compress.compress_int8_group(x, self.group)
+
+    def decode(self, enc, n, dtype):
+        q, s = enc
+        return pp_compress.decompress_int8_group(q, s, n, self.group, dtype)
+
+    def decode_sum(self, enc, n, dtype):
+        q, s = enc
+        return pp_compress.decompress_sum_int8_group(
+            q, s, n, self.group, dtype).reshape(-1)[:n]
+
+    def bytes_per_element(self, in_dtype=jnp.bfloat16) -> float:
+        return 1.0 + 4.0 / self.group
+
+
+def wire_bytes_per_element(codec, in_dtype=jnp.bfloat16) -> float:
+    return codec.bytes_per_element(in_dtype)

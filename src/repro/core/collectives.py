@@ -1,0 +1,299 @@
+"""Compressed collectives — the paper's §4.4.2 communication layer on TPU.
+
+All functions run INSIDE ``shard_map`` and operate on per-device local
+arrays. Compression semantics follow COCCL's two-shot decomposition:
+
+  ReduceScatter = one compressed AlltoAll + ONE fused local reduction
+  AllGather     = one compressed AllGather + fused decompress
+  AllReduce     = ReduceScatter ∘ AllGather  (two compressions per round)
+
+Every collective takes a forward codec and a backward codec and installs a
+``custom_vjp`` so the backward-pass communication (activation gradients /
+parameter gradients) is compressed too — quantization is applied to the
+cotangent straight-through, exactly as in the paper (no differentiation
+through the quantizer).
+
+Megatron conjugate pairs provided for both TP modes:
+  SP mode        : ``all_gather_c``(seq) fwd / ``psum_scatter_c``(seq) bwd
+  AllReduce mode : ``allreduce_g`` (fwd AR, bwd id) / ``copy_f`` (fwd id, bwd AR)
+
+Tuple axis names (e.g. fsdp = ("pod","data")) are handled hierarchically,
+innermost axis first for gathers and outermost first for scatters, matching
+``lax.all_gather``'s major-to-minor concatenation order — on hardware this
+is also the right order (intra-pod ICI stage before the cross-pod DCN
+stage, cf. MegaScale).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.codecs import IdentityCodec
+
+Identity = IdentityCodec()
+
+
+def _axes_tuple(axis_name):
+    return axis_name if isinstance(axis_name, tuple) else (axis_name,)
+
+
+def _pad_to(x, mult):
+    n = x.shape[-1]
+    rem = (-n) % mult
+    if rem:
+        pad = [(0, 0)] * (x.ndim - 1) + [(0, rem)]
+        x = jnp.pad(x, pad)
+    return x, n
+
+
+# --------------------------------------------------------------------------
+# all_gather
+# --------------------------------------------------------------------------
+
+def _ag_one(x, ax, dim, codec):
+    if isinstance(codec, IdentityCodec):
+        return jax.lax.all_gather(x, ax, axis=dim, tiled=True)
+    p = jax.lax.axis_size(ax)
+    flat, n = _pad_to(x.reshape(1, -1), codec.granule)
+    enc = codec.encode(flat)
+    enc = tuple(
+        jax.lax.all_gather(a, ax, axis=0, tiled=False)[:, 0] for a in enc
+    )  # each -> (P, ...)
+    dec = codec.decode(enc, flat.shape[-1], x.dtype)          # (P, n_pad)
+    dec = dec[:, :n].reshape(p, *x.shape)
+    out = jnp.moveaxis(dec, 0, dim)                           # (..., P, d, ...)
+    shape = list(x.shape)
+    shape[dim] *= p
+    return out.reshape(shape)
+
+
+def _ag_impl(x, axis_name, dim, codec):
+    for ax in reversed(_axes_tuple(axis_name)):
+        x = _ag_one(x, ax, dim, codec)
+    return x
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(1, 2, 3, 4))
+def all_gather_c(x, axis_name, dim, fwd_codec, bwd_codec):
+    """Compressed all-gather concatenating along ``dim`` (tiled layout)."""
+    return _ag_impl(x, axis_name, dim, fwd_codec)
+
+
+def _ag_fwd(x, axis_name, dim, fwd_codec, bwd_codec):
+    return _ag_impl(x, axis_name, dim, fwd_codec), None
+
+
+def _ag_bwd(axis_name, dim, fwd_codec, bwd_codec, _, ct):
+    return (psum_scatter_c(ct, axis_name, dim, bwd_codec, fwd_codec),)
+
+
+all_gather_c.defvjp(_ag_fwd, _ag_bwd)
+
+
+# --------------------------------------------------------------------------
+# psum_scatter (reduce-scatter)
+# --------------------------------------------------------------------------
+
+def _rs_one(x, ax, dim, codec):
+    if isinstance(codec, IdentityCodec):
+        return jax.lax.psum_scatter(x, ax, scatter_dimension=dim, tiled=True)
+    p = jax.lax.axis_size(ax)
+    moved = jnp.moveaxis(x, dim, 0)
+    d = moved.shape[0]
+    assert d % p == 0, f"scatter dim {d} not divisible by axis size {p}"
+    chunks = moved.reshape(p, -1)                              # chunk i -> peer i
+    chunks, nc = _pad_to(chunks, codec.granule)
+    enc = codec.encode(chunks)
+    # Paper's two-shot phase 1: ONE compressed AlltoAll ...
+    enc = tuple(
+        jax.lax.all_to_all(a, ax, split_axis=0, concat_axis=0, tiled=False)
+        for a in enc
+    )
+    # ... followed by ONE fused local reduction (rotated-domain, single
+    # inverse rotation — DESIGN.md §7.2).
+    summed = codec.decode_sum(enc, chunks.shape[-1], x.dtype)[:nc]
+    out = summed.reshape(d // p, *moved.shape[1:])
+    return jnp.moveaxis(out, 0, dim) if dim != 0 else out
+
+
+def _rs_impl(x, axis_name, dim, codec):
+    for ax in _axes_tuple(axis_name):
+        x = _rs_one(x, ax, dim, codec)
+    return x
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(1, 2, 3, 4))
+def psum_scatter_c(x, axis_name, dim, fwd_codec, bwd_codec):
+    """Compressed reduce-scatter along ``dim`` (tiled layout)."""
+    return _rs_impl(x, axis_name, dim, fwd_codec)
+
+
+def _rs_fwd(x, axis_name, dim, fwd_codec, bwd_codec):
+    return _rs_impl(x, axis_name, dim, fwd_codec), None
+
+
+def _rs_bwd(axis_name, dim, fwd_codec, bwd_codec, _, ct):
+    return (all_gather_c(ct, axis_name, dim, bwd_codec, fwd_codec),)
+
+
+psum_scatter_c.defvjp(_rs_fwd, _rs_bwd)
+
+
+# --------------------------------------------------------------------------
+# all_reduce (two-shot) and the Megatron f/g conjugate pair
+# --------------------------------------------------------------------------
+
+def _ar_impl(x, axis_name, codec):
+    if isinstance(codec, IdentityCodec):
+        return jax.lax.psum(x, axis_name)
+    axes = _axes_tuple(axis_name)
+    ptot = 1
+    for ax in axes:
+        ptot *= jax.lax.axis_size(ax)
+    flat, n = _pad_to(x.reshape(1, -1), ptot * codec.granule)
+    flat = flat[0]
+    rs = _rs_impl(flat, axis_name, 0, codec)
+    ag = _ag_impl(rs, axis_name, 0, codec)
+    return ag[:n].reshape(x.shape)
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(1, 2, 3))
+def allreduce_g(x, axis_name, fwd_codec, bwd_codec):
+    """Megatron "g": forward compressed two-shot AllReduce, backward
+    identity. Use at row-parallel outputs (non-SP TP mode / decode)."""
+    return _ar_impl(x, axis_name, fwd_codec)
+
+
+def _g_fwd(x, axis_name, fwd_codec, bwd_codec):
+    return _ar_impl(x, axis_name, fwd_codec), None
+
+
+def _g_bwd(axis_name, fwd_codec, bwd_codec, _, ct):
+    return (ct,)
+
+
+allreduce_g.defvjp(_g_fwd, _g_bwd)
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(1, 2, 3))
+def copy_f(x, axis_name, fwd_codec, bwd_codec):
+    """Megatron "f": forward identity, backward compressed AllReduce.
+    Use at column-parallel inputs (non-SP TP mode)."""
+    return x
+
+
+def _f_fwd(x, axis_name, fwd_codec, bwd_codec):
+    return x, None
+
+
+def _f_bwd(axis_name, fwd_codec, bwd_codec, _, ct):
+    return (_ar_impl(ct, axis_name, bwd_codec),)
+
+
+copy_f.defvjp(_f_fwd, _f_bwd)
+
+
+# --------------------------------------------------------------------------
+# ppermute (pipeline stage boundary; TahQuant compression site)
+# --------------------------------------------------------------------------
+
+def _pp_impl(x, axis_name, perm, codec):
+    if isinstance(codec, IdentityCodec):
+        return jax.lax.ppermute(x, axis_name, perm)
+    flat, n = _pad_to(x.reshape(1, -1), codec.granule)
+    enc = codec.encode(flat)
+    enc = tuple(jax.lax.ppermute(a, axis_name, perm) for a in enc)
+    dec = codec.decode(enc, flat.shape[-1], x.dtype)
+    return dec[0, :n].reshape(x.shape)
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(1, 2, 3, 4))
+def ppermute_c(x, axis_name, perm, fwd_codec, bwd_codec):
+    """Compressed point-to-point send (pipeline boundaries). ``perm`` is a
+    tuple of (src, dst) pairs, as lax.ppermute."""
+    return _pp_impl(x, axis_name, perm, fwd_codec)
+
+
+def _pp_fwd(x, axis_name, perm, fwd_codec, bwd_codec):
+    return _pp_impl(x, axis_name, perm, fwd_codec), None
+
+
+def _pp_bwd(axis_name, perm, fwd_codec, bwd_codec, _, ct):
+    inv = tuple((d, s) for s, d in perm)
+    return (ppermute_c(ct, axis_name, inv, bwd_codec, fwd_codec),)
+
+
+ppermute_c.defvjp(_pp_fwd, _pp_bwd)
+
+
+def psum_exact(x, axis_name):
+    """psum whose backward passes the (replicated) cotangent through
+    unchanged — the mathematically correct transpose when every consumer of
+    the summed value is replicated over ``axis_name`` (scalar losses,
+    softmax statistics). Avoids the psum->psum transpose inflation that
+    shard_map applies under check_vma=False."""
+    return allreduce_g(x, axis_name, Identity, Identity)
+
+
+# --------------------------------------------------------------------------
+# all_to_all (MoE expert-parallel dispatch; paper's compressed AlltoAll)
+# --------------------------------------------------------------------------
+
+def _a2a_impl(x, axis_name, split_dim, concat_dim, codec):
+    if isinstance(codec, IdentityCodec):
+        return jax.lax.all_to_all(
+            x, axis_name, split_axis=split_dim, concat_axis=concat_dim, tiled=True)
+    if concat_dim != split_dim:
+        raise NotImplementedError(
+            "compressed all_to_all currently requires split_dim == concat_dim")
+    p = jax.lax.axis_size(axis_name)
+    moved = jnp.moveaxis(x, split_dim, 0)
+    d = moved.shape[0]
+    assert d % p == 0, f"split dim {d} not divisible by axis size {p}"
+    chunks = moved.reshape(p, -1)
+    chunks, nc = _pad_to(chunks, codec.granule)
+    enc = codec.encode(chunks)
+    enc = tuple(
+        jax.lax.all_to_all(a, axis_name, split_axis=0, concat_axis=0, tiled=False)
+        for a in enc
+    )
+    dec = codec.decode(enc, chunks.shape[-1], x.dtype)[:, :nc]
+    # peer-major concat along the split dim == lax.all_to_all tiled layout
+    dec = dec.reshape(d, *moved.shape[1:])
+    return jnp.moveaxis(dec, 0, split_dim)
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(1, 2, 3, 4, 5))
+def all_to_all_c(x, axis_name, split_dim, concat_dim, fwd_codec, bwd_codec):
+    return _a2a_impl(x, axis_name, split_dim, concat_dim, fwd_codec)
+
+
+def _a2a_fwd(x, axis_name, split_dim, concat_dim, fwd_codec, bwd_codec):
+    return _a2a_impl(x, axis_name, split_dim, concat_dim, fwd_codec), None
+
+
+def _a2a_bwd(axis_name, split_dim, concat_dim, fwd_codec, bwd_codec, _, ct):
+    return (all_to_all_c(ct, axis_name, concat_dim, split_dim,
+                         bwd_codec, fwd_codec),)
+
+
+all_to_all_c.defvjp(_a2a_fwd, _a2a_bwd)
+
+
+# --------------------------------------------------------------------------
+# Communication-volume accounting (for benchmarks / roofline cross-check)
+# --------------------------------------------------------------------------
+
+def gather_wire_bytes(local_shape, dtype, p, codec) -> float:
+    """Approx. bytes put on the wire per device by one all_gather."""
+    import numpy as np
+    n = int(np.prod(local_shape))
+    return n * codec.bytes_per_element(dtype) * (p - 1)
+
+
+def scatter_wire_bytes(local_shape, dtype, p, codec) -> float:
+    import numpy as np
+    n = int(np.prod(local_shape))
+    return n * codec.bytes_per_element(dtype) * (p - 1) / p

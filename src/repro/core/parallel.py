@@ -1,0 +1,100 @@
+"""Parallelism context: axis names + per-path codec policy.
+
+Models never call lax collectives directly; they go through a
+``ParallelCtx`` so that every communication site in the framework is a
+named, compressible path (paper Fig. 7 integration points):
+
+  tp_fwd / tp_bwd : TP intermediate tensors          -> TACO (the paper)
+  grad_rs         : DP/fsdp gradient reduce-scatter  -> SDP4bit-style int4
+  weight_ag       : fsdp weight all-gather           -> optional int8
+  pp              : pipeline stage boundaries        -> TahQuant-style int8
+"""
+from __future__ import annotations
+
+import dataclasses
+
+from repro.core import collectives as cc
+from repro.core.codecs import (IdentityCodec, Sdp4BitCodec, TacoCodec,
+                               TahQuantCodec)
+from repro.core.taco import TacoConfig
+
+Identity = IdentityCodec()
+
+
+@dataclasses.dataclass(frozen=True)
+class CommPolicy:
+    tp_fwd: object = Identity
+    tp_bwd: object = Identity
+    grad_rs: object = Identity
+    weight_ag: object = Identity
+    pp: object = Identity
+
+    @staticmethod
+    def baseline() -> "CommPolicy":
+        """Uncompressed bf16 everywhere (paper's Baseline w/o Comp)."""
+        return CommPolicy()
+
+    @staticmethod
+    def taco(taco_cfg: TacoConfig | None = None,
+             compress_dp: bool = False,
+             compress_pp: bool = False) -> "CommPolicy":
+        """TP compressed with TACO; optionally the full 3D policy of §5.5
+        (TACO + SDP4bit-style DP + TahQuant-style PP)."""
+        t = TacoCodec(taco_cfg or TacoConfig())
+        return CommPolicy(
+            tp_fwd=t,
+            tp_bwd=t,
+            grad_rs=Sdp4BitCodec() if compress_dp else Identity,
+            pp=TahQuantCodec() if compress_pp else Identity,
+        )
+
+
+@dataclasses.dataclass(frozen=True)
+class ParallelCtx:
+    """Axis naming + codec policy, passed through the model stack.
+
+    All methods must be called inside ``shard_map`` over a mesh containing
+    the named axes. Axes of size 1 are fine (single-device tests).
+    """
+
+    tp_axis: str = "model"
+    fsdp_axes: tuple = ("pod", "data")
+    pp_axis: str | None = None
+    policy: CommPolicy = CommPolicy()
+    tp_mode: str = "sp"  # "sp" (AllGather/ReduceScatter) | "allreduce" (f/g)
+
+    # ---- TP: sequence-parallel conjugate pair (Megatron-SP; the paper's
+    # two-shot decomposition is the native communication pattern here).
+    def sp_gather(self, x, dim: int):
+        return cc.all_gather_c(x, self.tp_axis, dim,
+                               self.policy.tp_fwd, self.policy.tp_bwd)
+
+    def sp_scatter(self, x, dim: int):
+        return cc.psum_scatter_c(x, self.tp_axis, dim,
+                                 self.policy.tp_fwd, self.policy.tp_bwd)
+
+    # ---- TP: AllReduce conjugate pair (classic Megatron mode; also the
+    # decode path where seq==1 cannot be scattered).
+    def tp_g(self, x):
+        return cc.allreduce_g(x, self.tp_axis,
+                              self.policy.tp_fwd, self.policy.tp_bwd)
+
+    def tp_f(self, x):
+        return cc.copy_f(x, self.tp_axis,
+                         self.policy.tp_fwd, self.policy.tp_bwd)
+
+    # ---- fsdp: weight gather (fwd) whose autodiff transpose is the DP
+    # gradient reduce-scatter (bwd) — ZeRO falls out of the chain rule.
+    def weight_gather(self, w, dim: int = 0):
+        if not self.fsdp_axes:
+            return w
+        return cc.all_gather_c(w, self.fsdp_axes, dim,
+                               self.policy.weight_ag, self.policy.grad_rs)
+
+    # ---- MoE expert-parallel dispatch (paper's compressed AlltoAll).
+    def ep_all_to_all(self, x, split_dim: int, concat_dim: int):
+        return cc.all_to_all_c(x, self.tp_axis, split_dim, concat_dim,
+                               self.policy.tp_fwd, self.policy.tp_bwd)
+
+    # ---- PP boundary send (ppermute with codec) lives in
+    # train/pipeline_parallel.py; exposed there to keep this file lean.

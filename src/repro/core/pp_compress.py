@@ -1,0 +1,42 @@
+"""TahQuant-style fine-grained int8 activation quantization for the PP
+boundary path (paper §2.2, §5.5: PP communications quantized with TahQuant
+while TACO handles TP).
+
+Per-group symmetric int8 with a per-group fp32 scale; group=64 matches
+TahQuant's fine-grained activation setting. No rotation: PP boundary
+tensors are post-residual hidden states whose distribution is far less
+zero-concentrated than TP partial sums, so uniform int8 suffices there —
+this asymmetry is exactly the paper's motivation for treating TP specially.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+INT8_MAX = 127.0
+
+
+def compress_int8_group(x: jax.Array, group: int):
+    """x (..., n), n % group == 0 -> (q int8 (..., n), s (..., n/group))."""
+    lead = x.shape[:-1]
+    n = x.shape[-1]
+    z = x.astype(jnp.float32).reshape(*lead, n // group, group)
+    s = jnp.maximum(jnp.max(jnp.abs(z), axis=-1) / INT8_MAX, 1e-30)
+    q = jnp.clip(jnp.round(z / s[..., None]), -INT8_MAX, INT8_MAX).astype(jnp.int8)
+    return q.reshape(*lead, n), s.reshape(*lead, n // group)
+
+
+def decompress_int8_group(q, s, n: int, group: int, dtype):
+    lead = q.shape[:-1]
+    z = q.astype(jnp.float32).reshape(*lead, n // group, group)
+    z = z * s.reshape(*lead, n // group, 1)
+    return z.reshape(*lead, n).astype(dtype)
+
+
+def decompress_sum_int8_group(q, s, n: int, group: int, dtype):
+    """q (P, ..., n) -> sum over P peers."""
+    p = q.shape[0]
+    lead = q.shape[1:-1]
+    z = q.astype(jnp.float32).reshape(p, *lead, n // group, group)
+    z = jnp.sum(z * s.reshape(p, *lead, n // group, 1), axis=0)
+    return z.reshape(*lead, n).astype(dtype)

@@ -1,0 +1,117 @@
+"""TACO compression API — paper §4 (Algorithm 1).
+
+``compress``/``decompress`` operate on an arbitrary-shape local tensor:
+flatten -> (M, B) blocks -> [adaptive rescale] -> [Hadamard rotation]
+-> dual-scale FP8 quantize -> wire payload + per-block metadata.
+
+The ``transform`` / ``scale_granularity`` knobs span the paper's entire
+ablation grid (naive NVFP8, DS-only, ASH-only, standard-Hadamard, full
+TACO; E4M3/E5M2/INT8), see DESIGN.md §8.
+
+Metadata modes:
+  * ``dual``   — transmit (alpha_k, s_k) per block, faithful to Alg. 1.
+  * ``folded`` — transmit the single ratio s_k/alpha_k. Bit-identical
+    reconstruction whenever s is max-based at block-or-finer granularity
+    (alpha cancels; DESIGN.md §7.1) and halves metadata bytes.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Literal, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import ash as ash_mod
+from repro.core import quant as quant_mod
+
+__all__ = ["TacoConfig", "Compressed", "compress", "decompress", "wire_bytes", "raw_bytes"]
+
+
+@dataclasses.dataclass(frozen=True)
+class TacoConfig:
+    """Static compression configuration (hashable; closed over by jit)."""
+
+    enabled: bool = True
+    block_size: int = 256
+    fmt: str = "e4m3"                     # e4m3 | e5m2 | int8
+    tau: float = 1.0
+    eps: float = 1e-12
+    transform: Literal["ash", "hadamard", "none"] = "ash"
+    scale_granularity: Literal["block", "tensor"] = "block"
+    quant_group_size: int | None = None   # finer-than-block s granularity
+    metadata: Literal["dual", "folded"] = "dual"
+    impl: Literal["auto", "jnp", "pallas", "pallas_interpret"] = "auto"
+    compute_dtype: object = jnp.float32
+
+    @property
+    def format_spec(self) -> quant_mod.FormatSpec:
+        return quant_mod.FORMATS[self.fmt]
+
+    def resolved_impl(self) -> str:
+        if self.impl != "auto":
+            return self.impl
+        return "pallas" if jax.default_backend() == "tpu" else "jnp"
+
+
+class Compressed(NamedTuple):
+    """Wire representation. ``alpha`` is None in folded-metadata mode."""
+
+    payload: jax.Array          # (M, B) wire dtype (uint8 bitcast of fp8 / int8)
+    scale: jax.Array            # (M, groups) f32 — s_k (dual) or s_k/alpha_k (folded)
+    alpha: jax.Array | None     # (M,) f32 — dual mode only
+
+
+def _storage_to_wire(q: jax.Array, fmt: quant_mod.FormatSpec) -> jax.Array:
+    if fmt.is_float:
+        return jax.lax.bitcast_convert_type(q, jnp.uint8)
+    return q
+
+
+def _wire_to_storage(p: jax.Array, fmt: quant_mod.FormatSpec) -> jax.Array:
+    if fmt.is_float:
+        return jax.lax.bitcast_convert_type(p, fmt.dtype)
+    return p
+
+
+def compress(x: jax.Array, cfg: TacoConfig) -> Compressed:
+    """Alg. 1 sender side on a local tensor of any shape."""
+    from repro.kernels import ops  # late import: kernels layer sits above core
+
+    blocks, _ = ash_mod.block_partition(x, cfg.block_size)
+    q, alpha, s = ops.compress_blocks(blocks, cfg)
+    fmt = cfg.format_spec
+    payload = _storage_to_wire(q, fmt)
+    if cfg.metadata == "folded":
+        return Compressed(payload, s / alpha[:, None], None)
+    return Compressed(payload, s, alpha)
+
+
+def decompress(c: Compressed, cfg: TacoConfig, *, shape, dtype) -> jax.Array:
+    """Alg. 1 receiver side -> tensor of ``shape``/``dtype``."""
+    from repro.kernels import ops
+
+    fmt = cfg.format_spec
+    q = _wire_to_storage(c.payload, fmt)
+    if cfg.metadata == "folded":
+        scale, alpha = c.scale, None
+    else:
+        scale, alpha = c.scale, c.alpha
+    blocks = ops.decompress_blocks(q, scale, alpha, cfg)
+    size = 1
+    for d in shape:
+        size *= d
+    return ash_mod.block_unpartition(blocks, size, shape).astype(dtype)
+
+
+def wire_bytes(c: Compressed) -> int:
+    """Bytes actually transmitted for a Compressed value (static)."""
+    total = c.payload.size * c.payload.dtype.itemsize
+    total += c.scale.size * c.scale.dtype.itemsize
+    if c.alpha is not None:
+        total += c.alpha.size * c.alpha.dtype.itemsize
+    return total
+
+
+def raw_bytes(x: jax.Array) -> int:
+    return x.size * x.dtype.itemsize

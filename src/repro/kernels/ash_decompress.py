@@ -1,0 +1,118 @@
+"""Fused ASH-decompress Pallas TPU kernels — paper §4.1 "fused_ash_decompress".
+
+Two kernels:
+
+* ``decompress_blocks_pallas`` — dequantize + inverse rotation + inverse
+  rescale in one VMEM-resident pass (receiver side of AllGather).
+
+* ``decompress_reduce_pallas`` — the ReduceScatter local reduction, fused
+  *in the rotated domain* (beyond-paper, DESIGN.md §7.2): because the
+  Hadamard rotation is linear,
+      sum_p H^-1(q_p s_p)/alpha_p  ==  H^-1( sum_p q_p (s_p/alpha_p) )
+  so P peer contributions cost ONE inverse rotation instead of P. The
+  accumulation itself is a fp8-dequant + fused-multiply-add on the VPU.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from repro.core import ash as ash_mod
+
+ROW_TILE = 128
+
+
+def _expand_scale(s, r, b, groups):
+    return jnp.repeat(s, b // groups, axis=-1).reshape(r, b)
+
+
+def _decompress_kernel(q_ref, s_ref, alpha_ref, h_ref, o_ref, *, groups,
+                       apply_rotation, out_dtype):
+    q = q_ref[...].astype(jnp.float32)                      # (R, B)
+    r, b = q.shape
+    z = q * _expand_scale(s_ref[...], r, b, groups)
+    if apply_rotation:
+        g = z @ h_ref[...]
+    else:
+        g = z
+    g = g / alpha_ref[...][:, None]
+    o_ref[...] = g.astype(out_dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("cfg", "interpret"))
+def decompress_blocks_pallas(q, s, alpha, cfg, interpret: bool = False):
+    """(q (M,B), s (M,G), alpha (M,)|None) -> blocks (M,B) compute dtype."""
+    fmt = cfg.format_spec
+    m, b = q.shape
+    groups = s.shape[-1]
+    if alpha is None:  # folded metadata: scale already carries s/alpha
+        alpha = jnp.ones((m,), jnp.float32)
+    mp = ((m + ROW_TILE - 1) // ROW_TILE) * ROW_TILE
+    if mp != m:
+        q = jnp.pad(q, ((0, mp - m), (0, 0)))
+        s = jnp.pad(s, ((0, mp - m), (0, 0)))
+        alpha = jnp.pad(alpha, (0, mp - m), constant_values=1.0)
+    h = ash_mod.hadamard_matrix(b, jnp.float32)
+    kernel = functools.partial(
+        _decompress_kernel, groups=groups,
+        apply_rotation=cfg.transform in ("ash", "hadamard"),
+        out_dtype=cfg.compute_dtype)
+    out = pl.pallas_call(
+        kernel,
+        grid=(mp // ROW_TILE,),
+        in_specs=[
+            pl.BlockSpec((ROW_TILE, b), lambda i: (i, 0)),
+            pl.BlockSpec((ROW_TILE, groups), lambda i: (i, 0)),
+            pl.BlockSpec((ROW_TILE,), lambda i: (i,)),
+            pl.BlockSpec((b, b), lambda i: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((ROW_TILE, b), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((mp, b), cfg.compute_dtype),
+        interpret=interpret,
+    )(q, s, alpha, h)
+    return out[:m] if mp != m else out
+
+
+def _decompress_reduce_kernel(q_ref, f_ref, h_ref, o_ref, *, groups,
+                              apply_rotation, out_dtype):
+    q = q_ref[...].astype(jnp.float32)                      # (P, R, B)
+    p, r, b = q.shape
+    f = f_ref[...]                                          # (P, R, G) = s/alpha
+    fe = jnp.repeat(f, b // groups, axis=-1).reshape(p, r, b)
+    acc = jnp.sum(q * fe, axis=0)                           # rotated-domain sum
+    if apply_rotation:
+        acc = acc @ h_ref[...]                              # ONE inverse rotation
+    o_ref[...] = acc.astype(out_dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("cfg", "interpret"))
+def decompress_reduce_pallas(q, s, alpha, cfg, interpret: bool = False):
+    """Stacked peers: q (P,M,B), s (P,M,G), alpha (P,M)|None -> sum (M,B)."""
+    peers, m, b = q.shape
+    groups = s.shape[-1]
+    f = s if alpha is None else s / alpha[..., None]
+    mp = ((m + ROW_TILE - 1) // ROW_TILE) * ROW_TILE
+    if mp != m:
+        q = jnp.pad(q, ((0, 0), (0, mp - m), (0, 0)))
+        f = jnp.pad(f, ((0, 0), (0, mp - m), (0, 0)))
+    h = ash_mod.hadamard_matrix(b, jnp.float32)
+    kernel = functools.partial(
+        _decompress_reduce_kernel, groups=groups,
+        apply_rotation=cfg.transform in ("ash", "hadamard"),
+        out_dtype=cfg.compute_dtype)
+    out = pl.pallas_call(
+        kernel,
+        grid=(mp // ROW_TILE,),
+        in_specs=[
+            pl.BlockSpec((peers, ROW_TILE, b), lambda i: (0, i, 0)),
+            pl.BlockSpec((peers, ROW_TILE, groups), lambda i: (0, i, 0)),
+            pl.BlockSpec((b, b), lambda i: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((ROW_TILE, b), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((mp, b), cfg.compute_dtype),
+        interpret=interpret,
+    )(q, f, h)
+    return out[:m] if mp != m else out

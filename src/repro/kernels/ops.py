@@ -1,0 +1,64 @@
+"""Jit'd dispatch wrappers over the TACO operators.
+
+Selects between the Pallas TPU kernels (fast path for the production TACO
+configuration), Pallas interpret mode (CPU validation of the exact kernel
+body), and the pure-jnp reference (oracle; also the CPU/dry-run path and
+the only path for ablation configurations the kernel doesn't implement).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import ash_compress, ash_decompress, ref
+
+
+def _impl_for(cfg) -> str:
+    impl = cfg.resolved_impl()
+    if impl in ("pallas", "pallas_interpret") and not ash_compress.supported(cfg):
+        return "jnp"
+    return impl
+
+
+def compress_blocks(blocks: jax.Array, cfg):
+    """(M, B) -> (q storage dtype, alpha (M,), s (M,G))."""
+    impl = _impl_for(cfg)
+    if impl == "jnp":
+        return ref.compress_blocks_ref(blocks, cfg)
+    return ash_compress.compress_blocks_pallas(
+        blocks, cfg, interpret=(impl == "pallas_interpret"))
+
+
+def decompress_blocks(q: jax.Array, s: jax.Array, alpha, cfg):
+    """(q, s, alpha|None) -> blocks (M, B) in cfg.compute_dtype."""
+    impl = _impl_for(cfg)
+    if impl == "jnp":
+        out = ref.decompress_blocks_ref(q, s, alpha, cfg)
+        return out.astype(cfg.compute_dtype)
+    return ash_decompress.decompress_blocks_pallas(
+        q, s, alpha, cfg, interpret=(impl == "pallas_interpret"))
+
+
+def decompress_reduce(q: jax.Array, s: jax.Array, alpha, cfg):
+    """Stacked-peer fused dequant+reduce: q (P,M,B) -> summed blocks (M,B).
+
+    jnp path also uses the rotated-domain single-rotation identity so CPU
+    dry-runs see the same FLOP structure as the TPU kernel.
+    """
+    impl = _impl_for(cfg)
+    if impl == "jnp":
+        from repro.core import ash as ash_mod
+        from repro.core import quant as quant_mod
+        peers, m, b = q.shape
+        groups = s.shape[-1]
+        f = s if alpha is None else s / alpha[..., None]
+        zsum = jnp.einsum(
+            "pmb,pmb->mb",
+            q.astype(cfg.compute_dtype),
+            jnp.repeat(f, b // groups, axis=-1).reshape(peers, m, b).astype(cfg.compute_dtype),
+        )
+        if cfg.transform in ("ash", "hadamard"):
+            zsum = zsum @ ash_mod.hadamard_matrix(b, cfg.compute_dtype)
+        return zsum
+    return ash_decompress.decompress_reduce_pallas(
+        q, s, alpha, cfg, interpret=(impl == "pallas_interpret"))

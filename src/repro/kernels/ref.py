@@ -1,0 +1,90 @@
+"""Pure-jnp oracle for the TACO fused compression/decompression operators.
+
+This is the semantic ground truth: the Pallas kernels in
+``ash_compress.py`` / ``ash_decompress.py`` are validated allclose against
+these functions (interpret mode on CPU, hardware on TPU).
+
+Block layout convention everywhere: blocks (M, B), alpha (M,), s (M, G)
+where G = B / quant_group_size (G == 1 for the paper's default).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import ash as ash_mod
+from repro.core import quant as quant_mod
+
+
+def _transform_fwd(blocks, cfg):
+    """-> (z, alpha) applying cfg.transform."""
+    cd = cfg.compute_dtype
+    g = blocks.astype(cd)
+    if cfg.transform == "ash":
+        z, alpha = ash_mod.ash_forward(g, tau=cfg.tau, eps=cfg.eps, compute_dtype=cd)
+    elif cfg.transform == "hadamard":
+        h = ash_mod.hadamard_matrix(blocks.shape[-1], cd)
+        z = g @ h
+        alpha = jnp.ones((blocks.shape[0],), cd)
+    elif cfg.transform == "none":
+        z = g
+        alpha = jnp.ones((blocks.shape[0],), cd)
+    else:
+        raise ValueError(cfg.transform)
+    return z, alpha
+
+
+def compress_blocks_ref(blocks: jax.Array, cfg) -> tuple[jax.Array, jax.Array, jax.Array]:
+    """(M, B) -> (q storage-dtype (M,B), alpha (M,), s (M,G))."""
+    fmt = cfg.format_spec
+    z, alpha = _transform_fwd(blocks, cfg)
+    if cfg.scale_granularity == "tensor":
+        # Single per-tensor scale (the paper's "ASH alone" / naive regimes).
+        s_val = jnp.maximum(jnp.max(jnp.abs(z)) / fmt.qmax, 1e-30)
+        m = blocks.shape[0]
+        s = jnp.broadcast_to(s_val, (m, 1))
+        scaled = jnp.clip(z / s_val, -fmt.qmax, fmt.qmax)
+        if fmt.is_float:
+            q = scaled.astype(fmt.dtype)
+        else:
+            q = jnp.round(scaled).astype(jnp.int8)
+        return q, alpha, s
+    q, s = quant_mod.quantize_ds(z, fmt, group_size=cfg.quant_group_size)
+    return q, alpha, s
+
+
+def decompress_blocks_ref(q, s, alpha, cfg) -> jax.Array:
+    """(q, s, alpha|None) -> reconstructed blocks (M, B) in compute dtype.
+
+    alpha=None means folded metadata: s already carries s/alpha.
+    """
+    cd = cfg.compute_dtype
+    fmt = cfg.format_spec
+    z = quant_mod.dequantize_ds(q, s, fmt, compute_dtype=cd)
+    if cfg.transform in ("ash", "hadamard"):
+        h = ash_mod.hadamard_matrix(q.shape[-1], cd)
+        g = z @ h
+    else:
+        g = z
+    if alpha is not None and cfg.transform == "ash":
+        g = g / alpha[:, None]
+    return g
+
+
+def decompress_reduce_ref(q, s, alpha, cfg) -> jax.Array:
+    """Sum-of-peers decompression oracle.
+
+    Inputs are stacked over a leading peer axis: q (P, M, B), s (P, M, G),
+    alpha (P, M) or None. Semantics: sum_p decompress(q_p, s_p, alpha_p).
+
+    The optimized kernel exploits linearity of the rotation: accumulate
+    q_p * (s_p / alpha_p) in the rotated domain, rotate back ONCE
+    (DESIGN.md §7.2). This oracle computes the naive per-peer form.
+    """
+    peers = q.shape[0]
+    out = None
+    for p in range(peers):
+        a = None if alpha is None else alpha[p]
+        g = decompress_blocks_ref(q[p], s[p], a, cfg)
+        out = g if out is None else out + g
+    return out

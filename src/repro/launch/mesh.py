@@ -1,0 +1,36 @@
+"""Production mesh construction (spec-mandated shapes).
+
+A FUNCTION, not a module constant — importing this module never touches
+jax device state (device count is locked on first jax init, and only
+launch/dryrun.py may force the 512-device placeholder world).
+"""
+from __future__ import annotations
+
+import jax
+from jax.sharding import AxisType
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes,
+                         axis_types=(AxisType.Auto,) * len(axes))
+
+
+def make_mesh(shape, axes):
+    """Small-mesh helper for tests/examples (silences the v0.9 axis_types
+    default-change warning)."""
+    return jax.make_mesh(tuple(shape), tuple(axes),
+                         axis_types=(AxisType.Auto,) * len(axes))
+
+
+def mesh_axis_info(mesh):
+    """(fsdp_axes, tp_axis, tp, fsdp_size, dp_axes) for a production mesh."""
+    names = mesh.axis_names
+    tp_axis = "model"
+    fsdp_axes = tuple(n for n in names if n != tp_axis)
+    tp = mesh.shape[tp_axis]
+    fsdp = 1
+    for n in fsdp_axes:
+        fsdp *= mesh.shape[n]
+    return fsdp_axes, tp_axis, tp, fsdp

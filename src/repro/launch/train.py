@@ -1,0 +1,80 @@
+"""Production training launcher.
+
+On real hardware this runs under `python -m repro.launch.train` on every
+host of the pod slice (jax.distributed handles cross-host init); in this
+container it drives the same code path on small meshes.
+
+    PYTHONPATH=src python -m repro.launch.train --arch qwen2-0.5b \
+        --smoke --steps 50 --policy taco
+"""
+from __future__ import annotations
+
+import argparse
+import logging
+
+from repro.configs import get_config, make_plan, smoke_config
+from repro.core.parallel import CommPolicy, ParallelCtx
+from repro.core.taco import TacoConfig
+from repro.data.pipeline import DataConfig, SyntheticLM
+from repro.launch.mesh import make_mesh, mesh_axis_info
+from repro.models.model import Model
+from repro.optim.adamw import OptConfig
+from repro.train.trainer import Trainer, TrainerConfig
+
+
+def build_policy(name: str) -> CommPolicy:
+    return {
+        "baseline": CommPolicy.baseline(),
+        "taco": CommPolicy.taco(TacoConfig()),
+        "taco3d": CommPolicy.taco(TacoConfig(), compress_dp=True,
+                                  compress_pp=True),
+    }[name]
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="gpt-350m")
+    ap.add_argument("--smoke", action="store_true",
+                    help="reduced config (CPU-sized)")
+    ap.add_argument("--steps", type=int, default=100)
+    ap.add_argument("--seq", type=int, default=None)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--mesh", default="1,1,1",
+                    help="pod,data,model sizes (needs matching device count)")
+    ap.add_argument("--policy", default="taco")
+    ap.add_argument("--lr", type=float, default=3e-4)
+    ap.add_argument("--ckpt", default="/tmp/repro_train_ckpt")
+    ap.add_argument("--resume", action="store_true", default=True)
+    args = ap.parse_args()
+
+    logging.basicConfig(level=logging.INFO,
+                        format="%(asctime)s %(name)s %(message)s")
+    shape = tuple(int(x) for x in args.mesh.split(","))
+    mesh = make_mesh(shape, ("pod", "data", "model"))
+    fsdp_axes, tp_axis, tp, fsdp = mesh_axis_info(mesh)
+
+    cfg = get_config(args.arch)
+    if args.smoke:
+        cfg = smoke_config(cfg)
+    plan = make_plan(cfg, tp, fsdp)
+    model = Model(cfg, plan, fsdp_axes=fsdp_axes, tp_axis=tp_axis)
+    ctx = ParallelCtx(tp_axis=tp_axis, fsdp_axes=fsdp_axes,
+                      policy=build_policy(args.policy))
+
+    seq = args.seq or (64 if args.smoke else 4096)
+    data = SyntheticLM(DataConfig(vocab_size=cfg.vocab_size, seq_len=seq,
+                                  global_batch=args.batch), cfg)
+    oc = OptConfig(lr_max=args.lr, lr_min=args.lr / 10,
+                   warmup_steps=max(args.steps // 20, 5),
+                   total_steps=args.steps)
+    tc = TrainerConfig(total_steps=args.steps,
+                       ckpt_every=max(args.steps // 4, 10),
+                       log_every=10, ckpt_dir=args.ckpt)
+    trainer = Trainer(model, mesh, ctx, oc, tc, data)
+    _, _, losses = trainer.run(resume=args.resume)
+    print(f"{cfg.name}: loss {losses[0]:.4f} -> {losses[-1]:.4f} "
+          f"({len(losses)} steps, policy={args.policy})")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,33 @@
+"""Cost-analysis mode for roofline lowerings.
+
+XLA's cost analysis counts a while-loop body ONCE regardless of trip
+count (verified empirically), so any lax.scan/map-chunked inner loop
+hides (trips-1)/trips of its flops/bytes from the dry-run roofline.
+
+When this flag is on, chunked code paths switch to either a single-trip
+configuration (where the total cost is chunk-invariant: full attention,
+xent, MoE grouping) or a Python-unrolled loop (where the chunk size IS
+the algorithm: SWA windows, RWKV/SSM chunk recurrences) so the compiled
+artifact exposes the true per-step cost. NEVER enabled for runtime paths
+— memory behaviour of analysis-mode HLO is not representative.
+"""
+from __future__ import annotations
+
+import contextlib
+
+_ON = False
+
+
+def on() -> bool:
+    return _ON
+
+
+@contextlib.contextmanager
+def enabled():
+    global _ON
+    prev = _ON
+    _ON = True
+    try:
+        yield
+    finally:
+        _ON = prev

@@ -1,0 +1,293 @@
+"""TP-sharded GQA attention with head padding / KV replication.
+
+Head layout (DESIGN.md §4): q heads padded to a multiple of tp. If
+n_kv >= tp the kv heads are group-padded and sharded alongside q; else the
+(few) kv heads are stored replicated across the model axis and each device
+statically selects the kv head(s) its local q heads map to.
+
+The attention core is a flash-style two-level chunked scan in pure JAX
+(f32 softmax accumulators). Sliding-window attention slices a static
+(W + Cq)-wide kv window per q chunk, giving true O(S*W) cost — this is
+what qualifies SWA archs for long_500k.
+
+Dead (padding) q heads are masked out of the output so their parameter
+gradients are exactly zero (keeps padded model == unpadded reference).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models.layers import COMPUTE_DTYPE, apply_rope
+
+NEG_INF = -1e30
+
+
+# --------------------------------------------------------------------------
+# specs
+# --------------------------------------------------------------------------
+
+def attn_specs(pb, name: str, cfg, plan):
+    d, hd = cfg.d_model, cfg.hd
+    pb.add(f"{name}.wq", (d, plan.heads_pad * hd), fsdp_dim=0, tp_dim=1)
+    kv_dim = plan.kv_pad * hd
+    kv_tp = 1 if plan.kv_mode == "sharded" else None
+    pb.add(f"{name}.wk", (d, kv_dim), fsdp_dim=0, tp_dim=kv_tp)
+    pb.add(f"{name}.wv", (d, kv_dim), fsdp_dim=0, tp_dim=kv_tp)
+    pb.add(f"{name}.wo", (plan.heads_pad * hd, d), fsdp_dim=1, tp_dim=0)
+    if cfg.qkv_bias:
+        bias_tp = 0 if kv_tp is not None else None
+        pb.add(f"{name}.bq", (plan.heads_pad * hd,), tp_dim=0, init="zeros")
+        pb.add(f"{name}.bk", (kv_dim,), tp_dim=bias_tp, init="zeros")
+        pb.add(f"{name}.bv", (kv_dim,), tp_dim=bias_tp, init="zeros")
+
+
+def _local_head_ids(plan, ctx):
+    """Global q-head ids held by this device, and their validity mask."""
+    idx = jax.lax.axis_index(ctx.tp_axis)
+    ids = idx * plan.q_local + jnp.arange(plan.q_local)
+    return ids
+
+
+def head_mask(plan, ctx, n_heads: int):
+    return (_local_head_ids(plan, ctx) < n_heads).astype(COMPUTE_DTYPE)
+
+
+def _expand_kv(k, plan, ctx, cfg):
+    """k (B, S, kv_local, hd) -> (B, S, q_local, hd), aligned to the
+    device's local q heads."""
+    if plan.kv_mode == "sharded":
+        gsz = plan.group_size
+        return jnp.repeat(k, gsz, axis=2) if gsz > 1 else k
+    # replicated mode: kv head for global q head h is h // gsz (dead q heads
+    # clamp to the last kv head; their output is masked anyway)
+    gsz = max(cfg.n_heads // max(cfg.n_kv_heads, 1), 1)
+    ids = _local_head_ids(plan, ctx)
+    kv_ids = jnp.clip(ids // gsz, 0, plan.kv_local - 1)
+    return jnp.take(k, kv_ids, axis=2)
+
+
+# --------------------------------------------------------------------------
+# QKV projection
+# --------------------------------------------------------------------------
+
+def q_project(x_full, p, cfg, plan, ctx, positions):
+    b, s, _ = x_full.shape
+    hd = cfg.hd
+    wq = ctx.weight_gather(p["wq"], 0)
+    q = x_full @ wq
+    if cfg.qkv_bias:
+        q = q + p["bq"].astype(q.dtype)
+    q = q.reshape(b, s, plan.q_local, hd)
+    if cfg.pos == "rope" and positions is not None:
+        q = apply_rope(q, positions, cfg.rope_theta)
+    return q
+
+
+def kv_project(x_kv, p, cfg, plan, ctx, positions):
+    """positions=None skips rope (cross-attention keys)."""
+    b, s, _ = x_kv.shape
+    hd = cfg.hd
+    wk = ctx.weight_gather(p["wk"], 0)
+    wv = ctx.weight_gather(p["wv"], 0)
+    k = x_kv @ wk
+    v = x_kv @ wv
+    if cfg.qkv_bias:
+        k = k + p["bk"].astype(k.dtype)
+        v = v + p["bv"].astype(v.dtype)
+    k = k.reshape(b, s, -1, hd)
+    v = v.reshape(b, s, -1, hd)
+    if cfg.pos == "rope" and positions is not None:
+        k = apply_rope(k, positions, cfg.rope_theta)
+    return k, v
+
+
+def qkv_project(x_full, p, cfg, plan, ctx, positions):
+    q = q_project(x_full, p, cfg, plan, ctx, positions)
+    k, v = kv_project(x_full, p, cfg, plan, ctx, positions)
+    return q, k, v
+
+
+# --------------------------------------------------------------------------
+# flash-style chunked attention core
+# --------------------------------------------------------------------------
+
+def _softmax_scan(q, k, v, mask_fn, kv_chunk: int):
+    """q (B,H,Cq,hd) vs k,v (B,H,Sk,hd) -> (B,H,Cq,hd). Online softmax over
+    kv chunks; mask_fn(kv_start, ck) -> (Cq, ck) additive mask."""
+    b, h, cq, hd = q.shape
+    sk = k.shape[2]
+    kv_chunk = min(kv_chunk, sk)
+    n = sk // kv_chunk
+    scale = 1.0 / np.sqrt(hd)
+    qf = q.astype(jnp.float32) * scale
+
+    ks = k.reshape(b, h, n, kv_chunk, hd).transpose(2, 0, 1, 3, 4)
+    vs = v.reshape(b, h, n, kv_chunk, hd).transpose(2, 0, 1, 3, 4)
+
+    def body(carry, inp):
+        acc, m, l = carry
+        kc, vc, j = inp
+        s_ = jnp.einsum("bhqd,bhkd->bhqk", qf, kc.astype(jnp.float32))
+        s_ = s_ + mask_fn(j * kv_chunk, kv_chunk)[None, None]
+        m_new = jnp.maximum(m, jnp.max(s_, axis=-1))
+        p_ = jnp.exp(s_ - m_new[..., None])
+        corr = jnp.exp(m - m_new)
+        l = l * corr + jnp.sum(p_, axis=-1)
+        acc = acc * corr[..., None] + jnp.einsum(
+            "bhqk,bhkd->bhqd", p_, vc.astype(jnp.float32))
+        return (acc, m_new, l), None
+
+    init = (jnp.zeros((b, h, cq, hd), jnp.float32),
+            jnp.full((b, h, cq), NEG_INF, jnp.float32),
+            jnp.zeros((b, h, cq), jnp.float32))
+    (acc, m, l), _ = jax.lax.scan(body, init, (ks, vs, jnp.arange(n)))
+    return acc / jnp.maximum(l, 1e-30)[..., None]
+
+
+def attention_core(q, k, v, *, causal: bool, window: int | None,
+                   q_offset=0, kv_len: int | None = None,
+                   q_chunk: int = 512, kv_chunk: int = 512):
+    """q (B,Sq,H,hd), k/v (B,Sk,H,hd) head-aligned -> (B,Sq,H,hd).
+
+    q_offset: global position of q[0] (decode / chunked prefill).
+    kv_len: actual valid kv length (<= Sk) for cache attention.
+    """
+    from repro.models import analysis_mode
+    b, sq, h, hd = q.shape
+    sk = k.shape[1]
+    qt = q.transpose(0, 2, 1, 3)
+    kt = k.transpose(0, 2, 1, 3)
+    vt = v.transpose(0, 2, 1, 3)
+
+    if analysis_mode.on():
+        # single-trip (full attn) / python-unrolled (SWA) so cost analysis
+        # sees every chunk — see models/analysis_mode.py
+        q_chunk = sq if window is None else min(2048, sq)
+        kv_chunk = sk
+    q_chunk = min(q_chunk, sq)
+    nq = sq // q_chunk if sq % q_chunk == 0 else 1
+    if sq % q_chunk != 0:
+        q_chunk = sq
+
+    def one_q_chunk(qi):
+        qc = jax.lax.dynamic_slice_in_dim(qt, qi * q_chunk, q_chunk, axis=2)
+        q_pos = q_offset + qi * q_chunk + jnp.arange(q_chunk)
+        if window is not None:
+            # static-width kv window: [lo, lo + W + Cq)
+            w = min(window, sk)
+            width = min(w + q_chunk, sk)
+            lo = jnp.clip(q_pos[0] - w + 1, 0, sk - width)
+            kc = jax.lax.dynamic_slice_in_dim(kt, lo, width, axis=2)
+            vc = jax.lax.dynamic_slice_in_dim(vt, lo, width, axis=2)
+
+            def mask_fn(kv_start, ck, lo=lo):
+                kpos = lo + kv_start + jnp.arange(ck)
+                m = jnp.zeros((q_chunk, ck), jnp.float32)
+                m = jnp.where(kpos[None, :] > q_pos[:, None], NEG_INF, m)
+                m = jnp.where(kpos[None, :] <= q_pos[:, None] - w, NEG_INF, m)
+                if kv_len is not None:
+                    m = jnp.where(kpos[None, :] >= kv_len, NEG_INF, m)
+                return m
+
+            return _softmax_scan(qc, kc, vc, mask_fn, kv_chunk)
+
+        def mask_fn(kv_start, ck):
+            kpos = kv_start + jnp.arange(ck)
+            m = jnp.zeros((q_chunk, ck), jnp.float32)
+            if causal:
+                m = jnp.where(kpos[None, :] > q_pos[:, None], NEG_INF, m)
+            if kv_len is not None:
+                m = jnp.where(kpos[None, :] >= kv_len, NEG_INF, m)
+            return m
+
+        return _softmax_scan(qc, kt, vt, mask_fn, kv_chunk)
+
+    if nq == 1:
+        out = one_q_chunk(0)
+    elif analysis_mode.on():
+        outs = jnp.stack([one_q_chunk(i) for i in range(nq)])
+        out = outs.transpose(1, 2, 0, 3, 4).reshape(b, h, sq, hd)
+        return out.transpose(0, 2, 1, 3).astype(COMPUTE_DTYPE)
+    else:
+        outs = jax.lax.map(one_q_chunk, jnp.arange(nq))     # (nq,B,H,Cq,hd)
+        out = outs.transpose(1, 2, 0, 3, 4).reshape(b, h, sq, hd)
+        return out.transpose(0, 2, 1, 3).astype(COMPUTE_DTYPE)
+    return out.transpose(0, 2, 1, 3).astype(COMPUTE_DTYPE)
+
+
+# --------------------------------------------------------------------------
+# full attention layer (train path)
+# --------------------------------------------------------------------------
+
+def attention_apply(x_full, p, cfg, plan, ctx, *, causal=True,
+                    window=None, positions=None, kv_source=None):
+    """x_full (B, S, D) -> partial output (B, S, D) (caller reduces).
+
+    kv_source: encoder output (B, S_enc, D) for cross-attention (keys and
+    values are projected from it with this layer's wk/wv, no rope)."""
+    b, s, _ = x_full.shape
+    hd = cfg.hd
+    if positions is None:
+        positions = jnp.arange(s)
+    q = q_project(x_full, p, cfg, plan, ctx, positions)
+    if kv_source is not None:
+        k, v = kv_project(kv_source, p, cfg, plan, ctx, None)
+    else:
+        k, v = kv_project(x_full, p, cfg, plan, ctx, positions)
+    k = _expand_kv(k, plan, ctx, cfg)
+    v = _expand_kv(v, plan, ctx, cfg)
+    out = attention_core(q, k, v, causal=causal, window=window)
+    out = out * head_mask(plan, ctx, cfg.n_heads)[None, None, :, None]
+    wo = ctx.weight_gather(p["wo"], 1)
+    return out.reshape(b, s, plan.q_local * hd) @ wo
+
+
+# --------------------------------------------------------------------------
+# decode path (KV cache, single token)
+# --------------------------------------------------------------------------
+
+def attention_decode(x, p, cfg, plan, ctx, cache, pos):
+    """x (B, 1, D) full-D; cache dict {k,v}: (B, S_cache, kv_local, hd).
+    Returns (partial_out (B,1,D), new_cache). SWA uses a ring buffer of
+    width ``window`` (cache S_cache == window)."""
+    b = x.shape[0]
+    hd = cfg.hd
+    q, k_new, v_new = qkv_project(x, p, cfg, plan, ctx,
+                                  positions=jnp.full((1,), pos))
+    s_cache = cache["k"].shape[1]
+    slot = pos % s_cache if cfg.window is not None else pos
+    k = jax.lax.dynamic_update_slice_in_dim(cache["k"],
+                                            k_new.astype(cache["k"].dtype),
+                                            slot, axis=1)
+    v = jax.lax.dynamic_update_slice_in_dim(cache["v"],
+                                            v_new.astype(cache["v"].dtype),
+                                            slot, axis=1)
+    new_cache = {"k": k, "v": v}
+    ke = _expand_kv(k, plan, ctx, cfg)
+    ve = _expand_kv(v, plan, ctx, cfg)
+    # single-token attention: direct softmax over the cache. attn_f32=False
+    # (hillclimb variant) keeps the cache reads in bf16 and only promotes
+    # the (tiny) score/prob tensors.
+    acc_t = jnp.float32 if plan.attn_f32 else ke.dtype
+    scale = 1.0 / np.sqrt(hd)
+    qf = q.astype(acc_t) * scale                           # (B,1,H,hd)
+    scores = jnp.einsum("bqhd,bshd->bhqs", qf,
+                        ke.astype(acc_t)).astype(jnp.float32)
+    kv_pos = jnp.arange(s_cache)
+    if cfg.window is not None:
+        # ring buffer: slot j holds position pos - ((pos - j) mod W);
+        # valid iff that position has been written (>= 0)
+        age = jnp.mod(pos - kv_pos, s_cache)
+        valid = age <= pos
+    else:
+        valid = kv_pos <= pos
+    scores = jnp.where(valid[None, None, None, :], scores, NEG_INF)
+    probs = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum("bhqs,bshd->bqhd", probs.astype(acc_t),
+                     ve.astype(acc_t))
+    out = out.astype(COMPUTE_DTYPE)
+    out = out * head_mask(plan, ctx, cfg.n_heads)[None, None, :, None]
+    wo = ctx.weight_gather(p["wo"], 1)
+    return out.reshape(b, 1, plan.q_local * hd) @ wo, new_cache

@@ -1,0 +1,108 @@
+"""Public model API: param specs -> init -> shardings -> forwards.
+
+``Model`` binds (ArchConfig, RunPlan) and exposes everything the training/
+serving/launch layers need:
+
+  specs()            nested ParamSpec pytree (global shapes)
+  init(rng)          materialized params (small configs / tests)
+  abstract_params()  ShapeDtypeStruct pytree (dry-run, no allocation)
+  partition_specs()  PartitionSpec pytree for jit in/out shardings
+  shard_map in/out specs for params and batches
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.configs.base import ArchConfig, RunPlan
+from repro.models import transformer
+from repro.models.layers import (COMPUTE_DTYPE, ParamSpec, init_params,
+                                 partition_spec)
+
+IS_SPEC = lambda x: isinstance(x, ParamSpec)  # noqa: E731
+
+
+@dataclasses.dataclass(frozen=True)
+class Model:
+    cfg: ArchConfig
+    plan: RunPlan
+    fsdp_axes: tuple = ("pod", "data")
+    tp_axis: str = "model"
+
+    # ---- parameters -------------------------------------------------------
+    def specs(self):
+        return transformer.model_specs(self.cfg, self.plan)
+
+    def init(self, rng, dtype=COMPUTE_DTYPE):
+        return init_params(self.specs(), rng, dtype)
+
+    def abstract_params(self, dtype=COMPUTE_DTYPE):
+        return jax.tree.map(
+            lambda s: jax.ShapeDtypeStruct(s.shape, dtype),
+            self.specs(), is_leaf=IS_SPEC)
+
+    def partition_specs(self):
+        return jax.tree.map(
+            lambda s: partition_spec(s, self.fsdp_axes, self.tp_axis),
+            self.specs(), is_leaf=IS_SPEC)
+
+    def param_pspec_tree(self):
+        """shard_map in_specs == storage partition specs."""
+        return self.partition_specs()
+
+    def replicated_grad_axes(self, spec: ParamSpec) -> tuple:
+        """Axes over which this param's grads must be psum'd after autodiff
+        (params replicated over an axis but used divergently: norm scales
+        and replicated-kv weights over the model axis; fully-replicated
+        small params additionally over fsdp)."""
+        axes = []
+        if spec.tp_dim is None:
+            axes.append(self.tp_axis)
+        if spec.fsdp_dim is None:
+            axes.extend(self.fsdp_axes)
+        return tuple(axes)
+
+    # ---- batches ----------------------------------------------------------
+    def batch_shape(self, seq_len: int, global_batch: int) -> dict:
+        """Global train-batch ShapeDtypeStructs keyed like the data pipeline
+        output. The frontend stubs follow the spec: precomputed patch/frame
+        embeddings replace the modality encoder."""
+        cfg = self.cfg
+        b, s = global_batch, seq_len
+        shapes = {}
+        if cfg.family == "encdec":
+            s_enc, s_dec = s // 2, s // 2
+            shapes["frames"] = jax.ShapeDtypeStruct((b, s_enc, cfg.d_model),
+                                                    jnp.bfloat16)
+            s_tok = s_dec
+        elif cfg.frontend == "patches":
+            s_tok = s - cfg.frontend_tokens
+            shapes["patches"] = jax.ShapeDtypeStruct(
+                (b, cfg.frontend_tokens, cfg.d_model), jnp.bfloat16)
+        else:
+            s_tok = s
+        shapes["tokens"] = jax.ShapeDtypeStruct((b, s_tok), jnp.int32)
+        shapes["labels"] = jax.ShapeDtypeStruct((b, s_tok), jnp.int32)
+        shapes["mask"] = jax.ShapeDtypeStruct((b, s_tok), jnp.float32)
+        return shapes
+
+    def batch_pspecs(self) -> dict:
+        """Batch arrays shard over the dp axes on dim 0."""
+        dp = self.fsdp_axes if len(self.fsdp_axes) > 1 else \
+            (self.fsdp_axes[0] if self.fsdp_axes else None)
+        specs = {"tokens": P(dp), "labels": P(dp), "mask": P(dp)}
+        if self.cfg.family == "encdec":
+            specs["frames"] = P(dp)
+        if self.cfg.frontend == "patches":
+            specs["patches"] = P(dp)
+        return specs
+
+    # ---- forwards (call INSIDE shard_map) ---------------------------------
+    def loss_parts(self, params, batch, ctx):
+        """(loss_sum, count, aux) — local partial sums over this device's
+        batch shard; caller psums over dp axes."""
+        return transformer.forward_train(params, batch, self.cfg, self.plan,
+                                         ctx)

@@ -1,0 +1,101 @@
+"""Mixture-of-Experts layer (grok-1, llama4-maverick).
+
+Megatron-style tensor-parallel MoE: every expert's FFN is sharded over the
+model axis exactly like the dense MLP (so the TP communication pattern —
+and TACO's compression sites — are unchanged); the expert dimension is
+fsdp-sharded for storage and gathered per layer.
+
+Dispatch is sort-based with a static per-expert capacity (capacity_factor
+over the mean load): tokens are routed top-k, sorted by expert, packed
+into an (E, C, D) buffer (overflow drops into a scratch slot), processed
+with batched expert einsums, and combined with renormalized router
+weights. All shapes static; autodiff-safe.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import COMPUTE_DTYPE
+
+
+def moe_specs(pb, name: str, cfg, plan):
+    d, f, e = cfg.d_model, cfg.d_ff, cfg.moe.n_experts
+    pb.add(f"{name}.router", (d, e), init="normal", scale=0.01)
+    pb.add(f"{name}.w1", (e, d, f), fsdp_dim=1, tp_dim=2)
+    pb.add(f"{name}.w3", (e, d, f), fsdp_dim=1, tp_dim=2)
+    pb.add(f"{name}.w2", (e, f, d), fsdp_dim=2, tp_dim=1)
+
+
+def _capacity(tokens: int, e: int, k: int, cf: float) -> int:
+    c = int(tokens * k * cf / e) + 1
+    return max(c, 4)
+
+
+def moe_apply(x_full, p, cfg, plan, ctx, *, group: int = 4096):
+    """x_full (B, S, D) -> (partial (B, S, D), aux_loss scalar).
+
+    Router runs replicated across tp (identical inputs after sp_gather);
+    expert FFNs produce tp-partial outputs reduced by the caller's
+    sp_scatter — the same single TACO-compressed collective as dense."""
+    from repro.models import analysis_mode
+    b, s, d = x_full.shape
+    e, k = cfg.moe.n_experts, cfg.moe.top_k
+    tokens = x_full.reshape(b * s, d)
+    t = tokens.shape[0]
+    if analysis_mode.on():
+        group = t  # single trip: exact cost analysis
+    group = min(group, t)
+    if t % group:
+        group = t
+    n_groups = t // group
+    cap = _capacity(group, e, k, cfg.moe.capacity_factor)
+
+    w1 = ctx.weight_gather(p["w1"], 1)     # (E, D, F/tp)
+    w3 = ctx.weight_gather(p["w3"], 1)
+    w2 = ctx.weight_gather(p["w2"], 2)     # (E, F/tp, D)
+    wr = p["router"]
+
+    def one_group(xg):
+        logits = (xg @ wr).astype(jnp.float32)            # (G, E)
+        probs = jax.nn.softmax(logits, axis=-1)
+        top_p, top_e = jax.lax.top_k(probs, k)            # (G, k)
+        top_p = top_p / jnp.maximum(jnp.sum(top_p, axis=-1, keepdims=True),
+                                    1e-9)
+        # load-balancing aux loss (Switch-style)
+        density = jnp.mean(jax.nn.one_hot(top_e[:, 0], e), axis=0)
+        mean_prob = jnp.mean(probs, axis=0)
+        aux = e * jnp.sum(density * mean_prob)
+
+        flat_e = top_e.reshape(-1)                        # (G*k,)
+        flat_p = top_p.reshape(-1)
+        flat_tok = jnp.repeat(jnp.arange(group), k)
+        order = jnp.argsort(flat_e, stable=True)
+        se, sp_, st = flat_e[order], flat_p[order], flat_tok[order]
+        seg_start = jnp.searchsorted(se, jnp.arange(e))
+        pos = jnp.arange(group * k) - seg_start[se]
+        keep = pos < cap
+        slot = jnp.where(keep, pos, cap)                  # overflow -> scratch
+
+        buf = jnp.zeros((e, cap + 1, d), COMPUTE_DTYPE)
+        buf = buf.at[se, slot].set(xg[st])
+        h = jnp.einsum("ecd,edf->ecf", buf, w1)
+        g = jnp.einsum("ecd,edf->ecf", buf, w3)
+        act = jax.nn.silu(h) if cfg.mlp == "swiglu" else jax.nn.gelu(h)
+        out_buf = jnp.einsum("ecf,efd->ecd", act * g, w2)  # (E, cap+1, D)
+
+        gathered = out_buf[se, slot]                      # (G*k, D)
+        gathered = jnp.where(keep[:, None], gathered, 0)
+        combined = jnp.zeros((group, d), COMPUTE_DTYPE)
+        combined = combined.at[st].add(
+            gathered * sp_[:, None].astype(COMPUTE_DTYPE))
+        return combined, aux
+
+    if n_groups == 1:
+        out, aux = one_group(tokens)
+    else:
+        outs, auxs = jax.lax.map(
+            jax.checkpoint(one_group),
+            tokens.reshape(n_groups, group, d))
+        out, aux = outs.reshape(t, d), jnp.mean(auxs)
+    return out.reshape(b, s, d), aux

@@ -1,0 +1,106 @@
+"""Selective SSM (Mamba-style) branch for the hymba hybrid layer.
+
+d_inner channels shard over the model axis (aligned with hymba's parallel
+attention heads); the recurrence over sequence uses a chunked associative
+scan (parallel within chunks, O(S) total, O(1) decode state).
+
+State: h (B, d_inner_local, N). Discretization: zero-order hold
+    h_t = exp(dt_t * A) h_{t-1} + dt_t * B_t * x_t
+    y_t = C_t . h_t + D_skip * x_t
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import COMPUTE_DTYPE
+
+
+def ssm_specs(pb, name: str, cfg, plan):
+    d = cfg.d_model
+    di = d * cfg.ssm.expand
+    n = cfg.ssm.d_state
+    pb.add(f"{name}.w_in", (d, 2 * di), fsdp_dim=0, tp_dim=1)   # x and gate z
+    pb.add(f"{name}.conv_w", (3, di), tp_dim=1, scale=0.1)      # depthwise k=3
+    pb.add(f"{name}.w_bc", (di, 2 * n + 1), tp_dim=0, scale=0.01)  # B, C, dt
+    pb.add(f"{name}.a_log", (di, n), tp_dim=0, init="zeros")
+    pb.add(f"{name}.d_skip", (di,), tp_dim=0, init="ones")
+    pb.add(f"{name}.dt_bias", (di,), tp_dim=0, init="zeros")
+    pb.add(f"{name}.w_out", (di, d), fsdp_dim=1, tp_dim=0)
+
+
+def _depthwise_conv3(x, w, prev):
+    """x (B,S,C), w (3,C), prev (B,2,C) last two tokens of prior segment."""
+    ext = jnp.concatenate([prev, x], axis=1)
+    return (ext[:, :-2] * w[0] + ext[:, 1:-1] * w[1] + ext[:, 2:] * w[2])
+
+
+def _assoc_scan_chunked(a, b, h0, chunk: int):
+    """Linear recurrence h_t = a_t * h_{t-1} + b_t over axis 1.
+    a,b (B,S,C,N) -> h (B,S,C,N); carried across chunks via lax.scan."""
+    bsz, s, c, n = a.shape
+    chunk = min(chunk, s)
+    if s % chunk:
+        chunk = s
+    nc = s // chunk
+    a_ = a.reshape(bsz, nc, chunk, c, n).transpose(1, 0, 2, 3, 4)
+    b_ = b.reshape(bsz, nc, chunk, c, n).transpose(1, 0, 2, 3, 4)
+
+    def combine(x, y):
+        (ax, bx), (ay, by) = x, y
+        return ax * ay, by + ay * bx
+
+    def body(h, inp):
+        ac, bc = inp
+        # fold carried state into the first step
+        bc = bc.at[:, 0].add(ac[:, 0] * h)
+        aa, bb = jax.lax.associative_scan(combine, (ac, bc), axis=1)
+        return bb[:, -1], bb
+
+    # analysis-mode note: scan body counted once; the SSM recurrence is a
+    # tiny share of layer flops (d_state=16, elementwise) — see rwkv.py.
+    h_fin, hs = jax.lax.scan(body, h0, (a_, b_))
+    return hs.transpose(1, 0, 2, 3, 4).reshape(bsz, s, c, n), h_fin
+
+
+def ssm_apply(x_full, p, cfg, plan, ctx, *, state=None, chunk=256,
+              gathered=None):
+    """x_full (B,S,D) -> (partial out (B,S,D), new_state).
+
+    state (decode): {conv (B,2,C_loc), h (B,C_loc,N)}.
+    gathered: optionally pre-gathered weights (shared with the caller)."""
+    b, s, d = x_full.shape
+    n = cfg.ssm.d_state
+    w_in = ctx.weight_gather(p["w_in"], 0)
+    w_out = ctx.weight_gather(p["w_out"], 1)
+    xz = x_full @ w_in
+    di_loc = xz.shape[-1] // 2
+    x_in, z = xz[..., :di_loc], xz[..., di_loc:]
+
+    prev = state["conv"] if state is not None else jnp.zeros(
+        (b, 2, di_loc), x_in.dtype)
+    xc = jax.nn.silu(_depthwise_conv3(x_in, p["conv_w"].astype(x_in.dtype),
+                                      prev))
+    bcd = (xc @ p["w_bc"].astype(xc.dtype)).astype(jnp.float32)
+    b_t, c_t, dt = bcd[..., :n], bcd[..., n:2 * n], bcd[..., 2 * n:]
+    dt = jax.nn.softplus(dt + p["dt_bias"].astype(jnp.float32))   # (B,S,1)
+    a = -jnp.exp(p["a_log"].astype(jnp.float32))                  # (C,N)
+    xf = xc.astype(jnp.float32)
+
+    decay = jnp.exp(dt[..., None] * a[None, None])                # (B,S,C,N)
+    drive = (dt * xf)[..., None] * b_t[:, :, None, :]             # (B,S,C,N)
+
+    h0 = state["h"] if state is not None else jnp.zeros(
+        (b, di_loc, n), jnp.float32)
+    if s == 1:
+        h = decay[:, 0] * h0 + drive[:, 0]
+        hs = h[:, None]
+        h_fin = h
+    else:
+        hs, h_fin = _assoc_scan_chunked(decay, drive, h0, chunk)
+    y = jnp.einsum("bscn,bsn->bsc", hs, c_t) + xf * p["d_skip"].astype(jnp.float32)
+    y = (y.astype(COMPUTE_DTYPE) * jax.nn.silu(z))
+    out = y @ w_out                                               # tp-partial
+    new_state = {"conv": jnp.concatenate([prev, x_in], axis=1)[:, -2:],
+                 "h": h_fin}
+    return out, new_state

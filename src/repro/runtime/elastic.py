@@ -1,0 +1,61 @@
+"""Elastic scaling: restart a run on a different mesh/topology.
+
+The checkpoint layout is mesh-independent (full global tensors per leaf),
+so elasticity reduces to (1) validating that the new mesh is compatible
+with the model's *padding-relevant* plan dimensions, and (2) re-placing
+tensors under the new shardings (ckpt.restore does the device_put).
+
+Compatible reshapes (no tensor surgery needed):
+  * any change of the (pod, data) split at fixed tp — fsdp shards are
+    storage-only (tested: tests/multidev/check_elastic.py);
+  * tp changes that keep the SAME RunPlan paddings (heads_pad, vocab_pad,
+    kv layout) — e.g. tp 4 -> 8 when both divide the head/vocab padding.
+Incompatible reshapes (padded dims change) require a reshape step, which
+``replan`` reports explicitly instead of corrupting weights.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+from repro.configs.base import ArchConfig, RunPlan, make_plan
+
+
+@dataclasses.dataclass(frozen=True)
+class ReshardReport:
+    ok: bool
+    reason: str
+    old_plan: RunPlan
+    new_plan: RunPlan
+
+
+def replan(cfg: ArchConfig, old_plan: RunPlan, new_tp: int,
+           new_fsdp: int, **kw) -> ReshardReport:
+    """Check whether a checkpoint written under ``old_plan`` can be
+    restored onto a (new_tp, new_fsdp) mesh without tensor surgery."""
+    new_plan = make_plan(cfg, new_tp, new_fsdp, **kw)
+    mismatches = []
+    for field in ("heads_pad", "kv_mode", "kv_pad", "vocab_pad"):
+        a, b = getattr(old_plan, field), getattr(new_plan, field)
+        if a != b:
+            mismatches.append(f"{field}: {a} -> {b}")
+    if mismatches:
+        return ReshardReport(
+            False,
+            "padded parameter shapes change; run a reshape pass first: "
+            + "; ".join(mismatches),
+            old_plan, new_plan)
+    return ReshardReport(True, "compatible (storage resharding only)",
+                         old_plan, new_plan)
+
+
+def elastic_restore(trainer_cls, model_factory, cfg, old_plan, mesh,
+                    *args, **kwargs):
+    """Convenience wrapper used by launch scripts: validate + construct a
+    trainer bound to the new mesh. Raises on incompatible reshapes."""
+    from repro.launch.mesh import mesh_axis_info
+    fsdp_axes, tp_axis, tp, fsdp = mesh_axis_info(mesh)
+    report = replan(cfg, old_plan, tp, fsdp)
+    if not report.ok:
+        raise ValueError(f"elastic restart rejected: {report.reason}")
+    model = model_factory(cfg, report.new_plan, fsdp_axes, tp_axis)
+    return trainer_cls(model, mesh, *args, **kwargs)

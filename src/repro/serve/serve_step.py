@@ -1,0 +1,280 @@
+"""Serving: single-token decode step with distributed KV/state caches.
+
+``decode_*`` / ``long_*`` shape cells lower this step: one new token per
+sequence against a cache of ``seq_len``. TP communication here cannot use
+sequence parallelism (seq==1), so the residual stream is replicated over
+the model axis and block outputs go through the compressed two-shot
+AllReduce (``ctx.tp_g``) — exactly the paper's primary configuration.
+
+Cache layouts (global shapes; model-axis sharding in brackets):
+  attention : k,v (L, B, S_cache, KV, hd)   [KV sharded iff kv_mode==sharded]
+  hybrid    : + conv (L, B, 2, di)[di], h (L, B, di, N)[di]
+  rwkv      : shift_tm/shift_cm (L, B, 1, D), s (L, B, H, hd, hd)[H]
+  encdec    : self k/v + cross k/v (cross precomputed at prefill)
+SWA layers keep a ring buffer of width ``window`` instead of S_cache.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax import shard_map
+from jax.sharding import PartitionSpec as P
+
+from repro.models import attention as attn_mod
+from repro.models import rwkv as rwkv_mod
+from repro.models import ssm as ssm_mod
+from repro.models.layers import (COMPUTE_DTYPE, apply_norm,
+                                 distributed_argmax, lm_head_logits)
+from repro.models.transformer import (Segment, add_positional, block_specs,
+                                      embed_partial, head_table,
+                                      layer_segments, mlp_apply)
+from repro.models import moe as moe_mod
+
+
+# --------------------------------------------------------------------------
+# cache construction
+# --------------------------------------------------------------------------
+
+def _seg_cache_len(cfg, kind: str, max_len: int) -> int:
+    if kind == "swa" and cfg.window is not None:
+        return min(cfg.window, max_len)
+    return max_len
+
+
+def cache_shapes(model, global_batch: int, max_len: int) -> list:
+    """Per-segment cache ShapeDtypeStructs (global shapes)."""
+    cfg, plan = model.cfg, model.plan
+    b, hd = global_batch, cfg.hd
+    kv_total = plan.kv_pad if plan.kv_mode == "sharded" else cfg.n_kv_heads
+    segs = []
+    for seg in layer_segments(cfg):
+        n, entry = seg.count, {}
+        if cfg.family == "rwkv":
+            h_total = plan.heads_pad
+            entry["shift_tm"] = jax.ShapeDtypeStruct(
+                (n, b, 1, cfg.d_model), COMPUTE_DTYPE)
+            entry["shift_cm"] = jax.ShapeDtypeStruct(
+                (n, b, 1, cfg.d_model), COMPUTE_DTYPE)
+            entry["s"] = jax.ShapeDtypeStruct(
+                (n, b, h_total, hd, hd), jnp.float32)
+        else:
+            sc = _seg_cache_len(cfg, seg.kind, max_len)
+            entry["k"] = jax.ShapeDtypeStruct(
+                (n, b, sc, kv_total, hd), COMPUTE_DTYPE)
+            entry["v"] = jax.ShapeDtypeStruct(
+                (n, b, sc, kv_total, hd), COMPUTE_DTYPE)
+            if cfg.family == "hybrid":
+                di = cfg.d_model * cfg.ssm.expand
+                entry["conv"] = jax.ShapeDtypeStruct(
+                    (n, b, 2, di), COMPUTE_DTYPE)
+                entry["h"] = jax.ShapeDtypeStruct(
+                    (n, b, di, cfg.ssm.d_state), jnp.float32)
+            if cfg.family == "encdec":
+                s_enc = max_len  # encoder length == cache length (spec stub)
+                entry["xk"] = jax.ShapeDtypeStruct(
+                    (n, b, s_enc, kv_total, hd), COMPUTE_DTYPE)
+                entry["xv"] = jax.ShapeDtypeStruct(
+                    (n, b, s_enc, kv_total, hd), COMPUTE_DTYPE)
+        segs.append(entry)
+    return segs
+
+
+def cache_pspecs(model) -> list:
+    cfg, plan = model.cfg, model.plan
+    dp = model.fsdp_axes if len(model.fsdp_axes) > 1 else \
+        (model.fsdp_axes[0] if model.fsdp_axes else None)
+    kv_sharded = plan.kv_mode == "sharded"
+    segs = []
+    for seg in layer_segments(cfg):
+        entry = {}
+        if cfg.family == "rwkv":
+            entry["shift_tm"] = P(None, dp)
+            entry["shift_cm"] = P(None, dp)
+            entry["s"] = P(None, dp, model.tp_axis)
+        else:
+            kvp = model.tp_axis if kv_sharded else None
+            entry["k"] = P(None, dp, None, kvp)
+            entry["v"] = P(None, dp, None, kvp)
+            if cfg.family == "hybrid":
+                entry["conv"] = P(None, dp, None, model.tp_axis)
+                entry["h"] = P(None, dp, model.tp_axis)
+            if cfg.family == "encdec":
+                entry["xk"] = P(None, dp, None, kvp)
+                entry["xv"] = P(None, dp, None, kvp)
+        segs.append(entry)
+    return segs
+
+
+def init_cache(model, global_batch: int, max_len: int):
+    return jax.tree.map(lambda s: jnp.zeros(s.shape, s.dtype),
+                        cache_shapes(model, global_batch, max_len))
+
+
+# --------------------------------------------------------------------------
+# decode blocks
+# --------------------------------------------------------------------------
+
+def _decode_block(x, lp, cache_l, cfg, plan, ctx, *, kind, pos):
+    """x (B,1,D) replicated over tp; returns (x, new_cache_l)."""
+    new_cache = {}
+    if cfg.family == "rwkv":
+        h = apply_norm(x, lp["norm1"], cfg.norm, cfg.norm_eps)
+        h = ctx.tp_f(h)
+        out, st = rwkv_mod.time_mix_apply(
+            h, lp, cfg, plan, ctx,
+            state={"shift": cache_l["shift_tm"], "s": cache_l["s"]})
+        new_cache["shift_tm"] = st["shift"].astype(COMPUTE_DTYPE)
+        new_cache["s"] = st["s"]
+        x = x + ctx.tp_g(out)
+        h = apply_norm(x, lp["norm2"], cfg.norm, cfg.norm_eps)
+        h = ctx.tp_f(h)
+        out, st = rwkv_mod.channel_mix_apply(
+            h, lp, cfg, plan, ctx, state={"shift": cache_l["shift_cm"]})
+        new_cache["shift_cm"] = st["shift"].astype(COMPUTE_DTYPE)
+        return x + ctx.tp_g(out), new_cache
+
+    h = apply_norm(x, lp["norm1"], cfg.norm, cfg.norm_eps)
+    h = ctx.tp_f(h)
+    # attention_decode switches ring-buffer vs full-cache semantics on
+    # cfg.window; "full" segments (hymba) therefore see a window-less cfg
+    cfg_dec = cfg if kind == "swa" and cfg.window is not None \
+        else _no_window(cfg)
+    partial, kvc = attn_mod.attention_decode(
+        h, lp["attn"], cfg_dec, plan, ctx,
+        {"k": cache_l["k"], "v": cache_l["v"]}, pos)
+    new_cache["k"], new_cache["v"] = kvc["k"], kvc["v"]
+    if cfg.family == "hybrid":
+        ssm_out, st = ssm_mod.ssm_apply(
+            h, lp["ssm"], cfg, plan, ctx,
+            state={"conv": cache_l["conv"], "h": cache_l["h"]})
+        new_cache["conv"] = st["conv"].astype(COMPUTE_DTYPE)
+        new_cache["h"] = st["h"]
+        gates = jax.nn.sigmoid(lp["branch_gate"].astype(jnp.float32)
+                               ).astype(COMPUTE_DTYPE)
+        partial = partial * gates[0] + ssm_out * gates[1]
+    x = x + ctx.tp_g(partial)
+
+    if cfg.family == "encdec":
+        h = apply_norm(x, lp["norm_x"], cfg.norm, cfg.norm_eps)
+        h = ctx.tp_f(h)
+        partial = _cross_decode(h, lp["xattn"], cache_l, cfg, plan, ctx)
+        new_cache["xk"], new_cache["xv"] = cache_l["xk"], cache_l["xv"]
+        x = x + ctx.tp_g(partial)
+
+    h = apply_norm(x, lp["norm2"], cfg.norm, cfg.norm_eps)
+    h = ctx.tp_f(h)
+    if cfg.family == "moe":
+        partial, _ = moe_mod.moe_apply(h, lp["moe"], cfg, plan, ctx)
+    else:
+        partial = mlp_apply(h, lp["mlp"], cfg.mlp, ctx)
+    out = ctx.tp_g(partial)
+    if cfg.mlp == "gelu":
+        out = out + lp["mlp"]["b2"].astype(out.dtype)
+    return x + out, new_cache
+
+
+def _no_window(cfg):
+    import dataclasses
+    return dataclasses.replace(cfg, window=None)
+
+
+def _cross_decode(h, p, cache_l, cfg, plan, ctx):
+    """Cross-attention against the precomputed encoder kv cache."""
+    import numpy as np
+    b = h.shape[0]
+    hd = cfg.hd
+    q = attn_mod.q_project(h, p, cfg, plan, ctx, None)      # (B,1,Hl,hd)
+    ke = attn_mod._expand_kv(cache_l["xk"], plan, ctx, cfg)
+    ve = attn_mod._expand_kv(cache_l["xv"], plan, ctx, cfg)
+    scale = 1.0 / np.sqrt(hd)
+    scores = jnp.einsum("bqhd,bshd->bhqs", q.astype(jnp.float32) * scale,
+                        ke.astype(jnp.float32))
+    probs = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum("bhqs,bshd->bqhd", probs, ve.astype(jnp.float32))
+    out = out.astype(COMPUTE_DTYPE)
+    out = out * attn_mod.head_mask(plan, ctx, cfg.n_heads)[None, None, :, None]
+    wo = ctx.weight_gather(p["wo"], 1)
+    return out.reshape(b, 1, -1) @ wo
+
+
+# --------------------------------------------------------------------------
+# the serve step
+# --------------------------------------------------------------------------
+
+def decode_forward(params, token, cache, pos, model, ctx, label=None):
+    """token (B,1) -> (next_token (B,1), new_cache[, nll]). Inside
+    shard_map. ``label``: optional (B,1) ground-truth next token — returns
+    its distributed NLL (prefill-vs-decode consistency tests)."""
+    cfg, plan = model.cfg, model.plan
+    emb = embed_partial(token, params["embed"]["table"], ctx)
+    x = ctx.tp_g(emb)
+    if cfg.pos in ("learned", "sinusoid"):
+        x = _decode_positional(x, params, cfg, ctx, pos)
+
+    new_cache = []
+    for seg, sp_, cache_seg in zip(layer_segments(cfg), params["segments"],
+                                   cache):
+        def body(carry, inp, kind=seg.kind):
+            x_, = carry
+            lp, cl = inp
+            x_, nc = _decode_block(x_, lp, cl, cfg, plan, ctx,
+                                   kind=kind, pos=pos)
+            return (x_,), nc
+
+        (x,), nc = jax.lax.scan(body, (x,), (sp_, cache_seg))
+        new_cache.append(nc)
+
+    x = apply_norm(x, params["final_norm"], cfg.norm, cfg.norm_eps)
+    logits = lm_head_logits(x, head_table(params, cfg), ctx)
+    nxt = distributed_argmax(logits, ctx)
+    if label is None:
+        return nxt.astype(jnp.int32), new_cache
+    from repro.core.collectives import psum_exact
+    v_loc = logits.shape[-1]
+    idx = jax.lax.axis_index(ctx.tp_axis)
+    m = jax.lax.pmax(jnp.max(logits, axis=-1), ctx.tp_axis)
+    z = psum_exact(jnp.sum(jnp.exp(logits - m[..., None]), axis=-1),
+                   ctx.tp_axis)
+    shifted = label - idx * v_loc
+    valid = (shifted >= 0) & (shifted < v_loc)
+    picked = jnp.take_along_axis(
+        logits, jnp.clip(shifted, 0, v_loc - 1)[..., None], axis=-1)[..., 0]
+    ll = psum_exact(jnp.where(valid, picked, 0.0), ctx.tp_axis)
+    nll = jnp.log(z) + m - ll
+    return nxt.astype(jnp.int32), new_cache, nll
+
+
+def _decode_positional(x, params, cfg, ctx, pos):
+    from repro.models.layers import sinusoid_pos
+    if cfg.pos == "learned":
+        table = ctx.weight_gather(params["pos_embed"], 0)
+        pe = jax.lax.dynamic_slice_in_dim(table, pos, 1, axis=0)
+    else:
+        # sinusoid at a traced position: compute directly
+        import numpy as np
+        d = cfg.d_model
+        div = jnp.exp(jnp.arange(0, d, 2) / d * -np.log(10000.0))
+        ang = jnp.asarray(pos, jnp.float32) * div
+        pe = jnp.zeros((1, d), jnp.float32)
+        pe = pe.at[0, 0::2].set(jnp.sin(ang)).at[0, 1::2].set(jnp.cos(ang))
+    return x + pe[None].astype(x.dtype)
+
+
+def build_serve_step(model, mesh, ctx):
+    """jit'd serve_step(params, cache, token, pos) -> (next_token, cache)."""
+    pspecs = model.partition_specs()
+    cspecs = cache_pspecs(model)
+    dp = model.fsdp_axes if len(model.fsdp_axes) > 1 else \
+        (model.fsdp_axes[0] if model.fsdp_axes else None)
+
+    def step(params, cache, token, pos):
+        return decode_forward(params, token, cache, pos, model, ctx)
+
+    sharded = shard_map(
+        step, mesh=mesh,
+        in_specs=(pspecs, cspecs, P(dp), P()),
+        out_specs=(P(dp), cspecs),
+        check_vma=False)
+    return jax.jit(sharded, donate_argnums=(1,))

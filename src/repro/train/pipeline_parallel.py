@@ -1,0 +1,181 @@
+"""Pipeline parallelism (paper §5.5: 3D = DP x TP x PP with TahQuant-
+compressed stage boundaries + TACO TP + SDP4bit DP).
+
+GPipe-style schedule inside one shard_map over a ("pipe","data","model")
+mesh: M microbatches flow through P stages over M+P-1 ticks; each tick
+every stage computes its local layer stack and ships the activation to the
+next stage through a ``ppermute_c`` (TahQuant int8 site). Bubble ticks are
+computed-and-masked (the real GPipe cost model). Backward flows through
+the reverse permutes with compressed cotangents.
+
+Layer placement: the layer-stacked params' leading dim is sharded over the
+pipe axis (stage s owns layers [s*L/P, (s+1)*L/P)); embed/head/final-norm
+are replicated over pipe (grads psum'd back). TP/fsdp sharding inside a
+stage is unchanged — TACO sites stay identical.
+
+Scope: decoder-only dense families (the paper evaluates GPT under 3D).
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax import shard_map
+from jax.sharding import PartitionSpec as P
+
+from repro.core import collectives as cc
+from repro.core.parallel import ParallelCtx
+from repro.models.layers import COMPUTE_DTYPE, ParamSpec, apply_norm
+from repro.models.transformer import (Segment, add_positional, block_apply,
+                                      embed_partial, head_table,
+                                      layer_segments, tp_enter, tp_exit)
+from repro.models.layers import vocab_parallel_xent
+from repro.optim import adamw
+
+IS_SPEC = lambda x: isinstance(x, ParamSpec)  # noqa: E731
+
+
+@dataclasses.dataclass(frozen=True)
+class PipeConfig:
+    stages: int
+    microbatches: int
+    pipe_axis: str = "pipe"
+
+
+def pipe_partition_specs(model, pc: PipeConfig):
+    """Storage specs: layer stacks sharded over pipe dim0; the rest
+    replicated over pipe (pipe never appears in their specs)."""
+    base = model.partition_specs()
+
+    def reshard(spec):
+        dims = list(spec) + [None] * (8 - len(spec))
+        return spec
+
+    out = dict(base)
+    segs = []
+    for seg_spec in base["segments"]:
+        segs.append(jax.tree.map(
+            lambda s: P(*((pc.pipe_axis,) + tuple(s)[1:])), seg_spec,
+            is_leaf=lambda s: isinstance(s, P)))
+    out["segments"] = segs
+    return out
+
+
+def _stage_forward(x_shard, seg_params_local, model, ctx, positions):
+    """Run this stage's local layer slice (stacked dim = L/P)."""
+    cfg, plan = model.cfg, model.plan
+    seg = layer_segments(cfg)[0]
+
+    def blk(x, lp):
+        return block_apply(x, lp, None, cfg, plan, ctx,
+                           attn_kind=seg.kind, positions=positions,
+                           causal=True)
+
+    fn = jax.checkpoint(blk, policy=jax.checkpoint_policies.nothing_saveable) \
+        if plan.remat else blk
+
+    def body(carry, lp):
+        x, = carry
+        x, _ = fn(x, lp)
+        return (x,), None
+
+    (x_shard,), _ = jax.lax.scan(body, (x_shard,), seg_params_local[0])
+    return x_shard
+
+
+def build_pipeline_train_step(model, mesh, ctx: ParallelCtx,
+                              oc: adamw.OptConfig, pc: PipeConfig):
+    """Returns jit'd train_step(params, opt_state, batch). Requires
+    model.cfg single-segment decoder family and n_layers % stages == 0."""
+    cfg = model.cfg
+    assert len(layer_segments(cfg)) == 1, "PP demo: single-segment archs"
+    assert cfg.n_layers % pc.stages == 0
+    pspecs = pipe_partition_specs(model, pc)
+    ospecs = adamw.opt_state_pspecs(pspecs)
+    bspecs = model.batch_pspecs()
+    pp_codec_f, pp_codec_b = ctx.policy.pp, ctx.policy.pp
+    pipe, dp = pc.pipe_axis, model.fsdp_axes
+    perm_fwd = tuple((i, i + 1) for i in range(pc.stages - 1))
+
+    def step(params, opt_state, batch):
+        def loss_fn(p):
+            tokens, labels, mask = (batch["tokens"], batch["labels"],
+                                    batch["mask"])
+            b = tokens.shape[0]
+            m = pc.microbatches
+            bm = b // m
+            stage = jax.lax.axis_index(pipe)
+            s_tok = tokens.shape[1]
+            positions = jnp.arange(s_tok)
+            s_loc = s_tok // model.plan.tp if ctx.tp_mode == "sp" else s_tok
+
+            x = jnp.zeros((bm, s_loc, cfg.d_model), COMPUTE_DTYPE)
+            loss_sum = jnp.zeros((), jnp.float32)
+            count = jnp.zeros((), jnp.float32)
+            n_ticks = m + pc.stages - 1
+            for t in range(n_ticks):
+                # --- stage 0 sources microbatch t (if any)
+                mb = jnp.clip(t - stage, 0, m - 1)
+                tok_m = jax.lax.dynamic_slice_in_dim(tokens, mb * bm, bm, 0)
+                emb = embed_partial(tok_m, p["embed"]["table"], ctx)
+                x0 = tp_exit(emb, ctx)
+                x0 = add_positional(x0, p, cfg, ctx, s_tok)
+                x_in = jnp.where((stage == 0) & (t < m), x0, x)
+                # --- all stages compute their slice (bubble ticks masked)
+                x_out = _stage_forward(x_in, p["segments"], model, ctx,
+                                       positions)
+                # --- last stage: loss for its current microbatch
+                h = apply_norm(x_out, p["final_norm"], cfg.norm,
+                               cfg.norm_eps)
+                h_full = tp_enter(h, ctx)
+                lab_m = jax.lax.dynamic_slice_in_dim(labels, mb * bm, bm, 0)
+                msk_m = jax.lax.dynamic_slice_in_dim(mask, mb * bm, bm, 0)
+                ls, cnt = vocab_parallel_xent(
+                    h_full, head_table(p, cfg), lab_m, msk_m, ctx,
+                    model.plan)
+                valid = ((stage == pc.stages - 1) & (t >= pc.stages - 1)
+                         ).astype(jnp.float32)
+                loss_sum = loss_sum + ls * valid
+                count = count + cnt * valid
+                # --- ship activations forward (TahQuant site)
+                x = cc.ppermute_c(x_out, pipe, perm_fwd,
+                                  pp_codec_f, pp_codec_b)
+            loss_sum = cc.psum_exact(loss_sum, (pipe,) + tuple(dp))
+            count = jax.lax.psum(jax.lax.stop_gradient(count),
+                                 (pipe,) + tuple(dp))
+            return loss_sum / jnp.maximum(count, 1.0)
+
+        loss, grads = jax.value_and_grad(loss_fn)(params)
+        grads = _finalize_pipe_grads(grads, model, pc)
+        new_params, new_opt, metrics = adamw.adamw_update(
+            grads, opt_state, oc, model)
+        metrics["loss"] = loss
+        return new_params, new_opt, metrics
+
+    sharded = shard_map(step, mesh=mesh,
+                        in_specs=(pspecs, ospecs, bspecs),
+                        out_specs=(pspecs, ospecs,
+                                   {"loss": P(), "grad_norm": P(),
+                                    "lr": P()}),
+                        check_vma=False)
+    return jax.jit(sharded)
+
+
+def _finalize_pipe_grads(grads, model, pc: PipeConfig):
+    """Replicated-param grads: psum over model/fsdp per the usual rule AND
+    over pipe for everything that is not a layer stack."""
+    specs = model.specs()
+
+    def fix(path, g, s):
+        axes = list(model.replicated_grad_axes(s))
+        if "segments" not in jax.tree_util.keystr(path):
+            axes.append(pc.pipe_axis)
+        return jax.lax.psum(g, tuple(axes)) if axes else g
+
+    flat_g = jax.tree.leaves_with_path(grads)
+    flat_s = jax.tree.leaves(specs, is_leaf=IS_SPEC)
+    fixed = [fix(p, g, s) for (p, g), s in zip(flat_g, flat_s)]
+    treedef = jax.tree.structure(grads)
+    return jax.tree.unflatten(treedef, fixed)

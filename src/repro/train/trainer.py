@@ -1,0 +1,113 @@
+"""Training loop with checkpoint/restart, watchdog, and straggler logging.
+
+The loop is deliberately restart-oriented: ALL state is (params, opt_state,
+step); the data pipeline is pure-functional in step. ``Trainer.run`` can be
+killed at any step and re-invoked — it resumes from the latest complete
+checkpoint and replays identically (tested in tests/test_checkpoint.py).
+"""
+from __future__ import annotations
+
+import dataclasses
+import logging
+import time
+
+import jax
+import numpy as np
+
+from repro.ckpt import checkpoint as ckpt
+from repro.data.pipeline import DataConfig, SyntheticLM
+from repro.optim import adamw
+from repro.runtime.fault_tolerance import (FailureInjector, RetryPolicy,
+                                           StepWatchdog)
+from repro.train.train_step import build_train_step
+
+log = logging.getLogger("repro.trainer")
+
+
+@dataclasses.dataclass
+class TrainerConfig:
+    total_steps: int = 100
+    ckpt_every: int = 50
+    log_every: int = 10
+    ckpt_dir: str = "/tmp/repro_ckpt"
+    keep_last: int = 3
+    seed: int = 0
+
+
+class Trainer:
+    def __init__(self, model, mesh, ctx, oc: adamw.OptConfig,
+                 tc: TrainerConfig, data: SyntheticLM,
+                 injector: FailureInjector | None = None):
+        self.model, self.mesh, self.ctx = model, mesh, ctx
+        self.oc, self.tc, self.data = oc, tc, data
+        self.injector = injector
+        self.step_fn = build_train_step(model, mesh, ctx, oc)
+        self.watchdog = StepWatchdog()
+        self.losses: list = []
+
+    # ---- state ------------------------------------------------------------
+    def init_state(self):
+        from jax.sharding import NamedSharding
+        params = self.model.init(jax.random.PRNGKey(self.tc.seed))
+        pspecs = self.model.partition_specs()
+        params = jax.tree.map(
+            lambda x, s: jax.device_put(x, NamedSharding(self.mesh, s)),
+            params, pspecs)
+        opt_state = adamw.init_opt_state(params)
+        return params, opt_state, 0
+
+    def try_restore(self, params_tmpl, opt_tmpl):
+        step = ckpt.latest_step(self.tc.ckpt_dir)
+        if step is None:
+            return None
+        pspecs = self.model.partition_specs()
+        ospecs = adamw.opt_state_pspecs(pspecs)
+        state, step = ckpt.restore(
+            self.tc.ckpt_dir, {"params": params_tmpl, "opt": opt_tmpl},
+            mesh=self.mesh, pspecs={"params": pspecs, "opt": ospecs})
+        log.info("restored checkpoint at step %d", step)
+        return state["params"], state["opt"], step
+
+    # ---- loop -------------------------------------------------------------
+    def run(self, resume: bool = True):
+        params, opt_state, start = self.init_state()
+        if resume:
+            restored = self.try_restore(params, opt_state)
+            if restored is not None:
+                params, opt_state, start = restored
+
+        retry = RetryPolicy()
+        step = start
+        bspecs = self.model.batch_pspecs()
+        while step < self.tc.total_steps:
+            try:
+                if self.injector:
+                    self.injector.maybe_fail(step)
+                batch = self.data.place(self.data.batch(step), self.mesh,
+                                        bspecs)
+                t0 = time.time()
+                params, opt_state, metrics = self.step_fn(
+                    params, opt_state, batch)
+                loss = float(metrics["loss"])
+                dt = time.time() - t0
+                self.watchdog.observe(dt)
+                self.losses.append(loss)
+                if step % self.tc.log_every == 0:
+                    log.info("step %d loss %.4f gnorm %.3f lr %.2e (%.2fs)",
+                             step, loss, float(metrics["grad_norm"]),
+                             float(metrics["lr"]), dt)
+                step += 1
+                if step % self.tc.ckpt_every == 0 or step == self.tc.total_steps:
+                    ckpt.save(self.tc.ckpt_dir, step,
+                              {"params": params, "opt": opt_state},
+                              keep_last=self.tc.keep_last)
+            except Exception as exc:  # noqa: BLE001 — restart boundary
+                if not retry.should_retry(exc):
+                    raise
+                params, opt_state, start = self.init_state()
+                restored = self.try_restore(params, opt_state)
+                if restored is not None:
+                    params, opt_state, step = restored[0], restored[1], restored[2]
+                else:
+                    step = 0
+        return params, opt_state, self.losses

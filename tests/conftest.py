@@ -1,0 +1,23 @@
+"""Shared test fixtures. NOTE: no XLA_FLAGS device-count forcing here —
+smoke tests must see the real single CPU device (the 512-device setting is
+exclusively for launch/dryrun.py). Multi-device collective tests spawn
+subprocesses with their own env (tests/test_collectives.py)."""
+import numpy as np
+import pytest
+
+
+@pytest.fixture(scope="session")
+def rng():
+    return np.random.default_rng(12345)
+
+
+def tp_like(rng, shape, outlier_frac=0.002, scale=0.02, tail=2.0):
+    """Synthetic TP-intermediate-tensor: dense near-zero body + long tail
+    (paper Fig. 4 distribution)."""
+    x = rng.normal(0.0, scale, size=shape).astype(np.float32)
+    n = x.size
+    k = max(1, int(n * outlier_frac))
+    idx = rng.choice(n, size=k, replace=False)
+    flat = x.reshape(-1)
+    flat[idx] = rng.normal(0.0, tail, size=k).astype(np.float32)
+    return flat.reshape(shape)

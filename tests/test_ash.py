@@ -1,0 +1,78 @@
+"""Unit + property tests for the ASH transform (paper §4.2)."""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import ash
+
+from conftest import tp_like
+
+
+@pytest.mark.parametrize("b", [32, 64, 128, 256, 512])
+def test_hadamard_orthogonal(b):
+    h = ash._hadamard_np(b) / np.sqrt(b)  # exact f64 construction
+    np.testing.assert_allclose(h @ h.T, np.eye(b), atol=1e-10)
+    # symmetric => self-inverse
+    np.testing.assert_allclose(h, h.T)
+
+
+@pytest.mark.parametrize("b", [2, 8, 64, 256])
+def test_fwht_matches_matmul(b, rng):
+    x = rng.normal(size=(5, b)).astype(np.float32)
+    via_fwht = np.asarray(ash.fwht(jnp.asarray(x))) / np.sqrt(b)
+    via_mm = np.asarray(jnp.asarray(x) @ ash.hadamard_matrix(b))
+    np.testing.assert_allclose(via_fwht, via_mm, rtol=1e-5, atol=1e-5)
+
+
+def test_ash_roundtrip_exact(rng):
+    x = tp_like(rng, (64, 256))
+    z, alpha = ash.ash_forward(jnp.asarray(x))
+    back = np.asarray(ash.ash_inverse(z, alpha))
+    np.testing.assert_allclose(back, x, rtol=1e-4, atol=1e-6)
+
+
+def test_ash_energy_normalization(rng):
+    """After rescale+rotation every block has RMS ~= tau (the whole point:
+    weak blocks no longer under-utilize FP8 range)."""
+    x = rng.normal(0, 1e-4, (32, 256)).astype(np.float32)  # tiny energy
+    z, _ = ash.ash_forward(jnp.asarray(x), tau=1.0)
+    rms = np.sqrt(np.mean(np.asarray(z) ** 2, axis=-1))
+    np.testing.assert_allclose(rms, 1.0, rtol=1e-3)
+
+
+def test_standard_hadamard_preserves_energy(rng):
+    """Paper §4.2.1: plain Hadamard is isometric — low-energy blocks stay
+    low-energy (the zero-collapse failure ASH fixes)."""
+    x = jnp.asarray(rng.normal(0, 1e-4, (8, 256)).astype(np.float32))
+    h = ash.hadamard_matrix(256)
+    z = x @ h
+    np.testing.assert_allclose(
+        np.linalg.norm(np.asarray(z), axis=-1),
+        np.linalg.norm(np.asarray(x), axis=-1), rtol=1e-4)
+
+
+def test_block_partition_roundtrip(rng):
+    for shape in [(7,), (3, 5), (2, 3, 11), (256,), (1000,)]:
+        x = jnp.asarray(rng.normal(size=shape).astype(np.float32))
+        blocks, n = ash.block_partition(x, 64)
+        assert blocks.shape[1] == 64 and blocks.shape[0] * 64 >= n
+        back = ash.block_unpartition(blocks, n, shape)
+        np.testing.assert_array_equal(np.asarray(back), np.asarray(x))
+
+
+@settings(max_examples=30, deadline=None)
+@given(
+    m=st.integers(1, 17),
+    logb=st.integers(2, 9),
+    scale=st.floats(1e-6, 1e3),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_property_ash_invertible(m, logb, scale, seed):
+    b = 2 ** logb
+    r = np.random.default_rng(seed)
+    x = (r.normal(size=(m, b)) * scale).astype(np.float32)
+    z, alpha = ash.ash_forward(jnp.asarray(x))
+    back = np.asarray(ash.ash_inverse(z, alpha))
+    np.testing.assert_allclose(back, x, rtol=1e-3, atol=scale * 1e-5)
+    assert np.all(np.asarray(alpha) > 0)

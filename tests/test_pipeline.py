@@ -1,0 +1,35 @@
+"""Pipeline parallelism tests: subprocess multi-device GPipe correctness
+(vs non-PP reference) and the paper §5.5 3D compressed configuration."""
+import os
+import subprocess
+import sys
+from pathlib import Path
+
+import pytest
+
+REPO = Path(__file__).resolve().parents[1]
+
+
+@pytest.mark.slow
+def test_pipeline_subprocess():
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+    env["PYTHONPATH"] = str(REPO / "src")
+    proc = subprocess.run(
+        [sys.executable, str(REPO / "tests" / "multidev" / "check_pipeline.py")],
+        env=env, capture_output=True, text=True, timeout=1800)
+    assert proc.returncode == 0, proc.stdout[-3000:] + proc.stderr[-3000:]
+    assert "ALL PIPELINE CHECKS PASSED" in proc.stdout
+
+
+@pytest.mark.slow
+def test_tp_model_subprocess():
+    """All-arch TP=4 forward/grad equivalence (the big multidev check)."""
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+    env["PYTHONPATH"] = str(REPO / "src")
+    proc = subprocess.run(
+        [sys.executable, str(REPO / "tests" / "multidev" / "check_tp_model.py")],
+        env=env, capture_output=True, text=True, timeout=3000)
+    assert proc.returncode == 0, proc.stdout[-3000:] + proc.stderr[-3000:]
+    assert "ALL TP MODEL CHECKS PASSED" in proc.stdout

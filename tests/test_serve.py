@@ -1,0 +1,138 @@
+"""Serving tests: decode step shape/NaN checks for every arch family with
+a decode path, plus the teacher-forced consistency invariant — stepwise
+decode NLL over a sequence must equal the train-forward loss on the same
+sequence (same params, same tokens; proves the KV/state cache is exact).
+"""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from jax import shard_map
+from jax.sharding import PartitionSpec as P
+
+from repro.configs import get_config, make_plan, smoke_config
+from repro.core.parallel import CommPolicy, ParallelCtx
+from repro.models.model import Model
+from repro.serve import serve_step as ss
+
+MESH = None
+
+
+def mesh1():
+    global MESH
+    if MESH is None:
+        MESH = jax.make_mesh((1, 1, 1), ("pod", "data", "model"))
+    return MESH
+
+
+BASE = ParallelCtx(policy=CommPolicy.baseline(), tp_mode="allreduce")
+BASE_SP = ParallelCtx(policy=CommPolicy.baseline(), tp_mode="sp")
+
+
+def run_decode(model, params, cache, token, pos, label=None):
+    def step(p, c, t, l):
+        return ss.decode_forward(p, t, c, pos, model, BASE,
+                                 label=l if label is not None else None)
+
+    nolab = label is None
+    lab = jnp.zeros_like(token) if nolab else label
+    out_specs = (P(), jax.tree.map(lambda _: P(), cache)) if nolab else \
+        (P(), jax.tree.map(lambda _: P(), cache), P())
+    f = shard_map(step, mesh=mesh1(),
+                  in_specs=(jax.tree.map(lambda _: P(), params),
+                            jax.tree.map(lambda _: P(), cache), P(), P()),
+                  out_specs=out_specs, check_vma=False)
+    return jax.jit(f)(params, cache, token, lab)
+
+
+DECODE_ARCHS = ["qwen2-0.5b", "h2o-danube-1.8b", "grok-1-314b",
+                "rwkv6-1.6b", "hymba-1.5b", "gpt-350m"]
+
+
+@pytest.mark.parametrize("name", DECODE_ARCHS)
+def test_decode_steps_and_consistency(name):
+    cfg = smoke_config(get_config(name))
+    plan = make_plan(cfg, 1, 1, remat=False)
+    model = Model(cfg, plan)
+    params = model.init(jax.random.PRNGKey(0))
+
+    b, s = 2, 24
+    rng = np.random.default_rng(0)
+    toks = jnp.asarray(rng.integers(0, cfg.vocab_size, (b, s + 1)), jnp.int32)
+    cache = ss.init_cache(model, b, max_len=64)
+
+    # stepwise decode with teacher forcing, collecting nll
+    nlls = []
+    for t in range(s):
+        out = run_decode(model, params, cache, toks[:, t:t + 1], t,
+                         label=toks[:, t + 1:t + 2])
+        nxt, cache, nll = out
+        assert nxt.shape == (b, 1) and np.all(np.isfinite(np.asarray(nll)))
+        nlls.append(np.asarray(nll))
+    decode_loss = float(np.mean(np.stack(nlls)))
+
+    # train-forward loss on the same sequence
+    batch = {"tokens": toks[:, :-1], "labels": toks[:, 1:],
+             "mask": jnp.ones((b, s), jnp.float32)}
+
+    def fwd(p, bt):
+        ls, cnt, _ = model.loss_parts(p, bt, BASE_SP)
+        return ls / cnt
+
+    f = shard_map(fwd, mesh=mesh1(),
+                  in_specs=(jax.tree.map(lambda _: P(), params),
+                            jax.tree.map(lambda _: P(), batch)),
+                  out_specs=P(), check_vma=False)
+    train_loss = float(jax.jit(f)(params, batch))
+    # bf16 activations + different reduction orders => modest tolerance
+    assert abs(decode_loss - train_loss) / train_loss < 0.02, \
+        (name, decode_loss, train_loss)
+
+
+def test_swa_ring_buffer_matches_full_cache():
+    """Sliding-window decode with a W-sized ring buffer must equal decode
+    with a full-length cache once both see the same effective window."""
+    cfg = smoke_config(get_config("h2o-danube-1.8b"))  # window=32 smoke
+    plan = make_plan(cfg, 1, 1, remat=False)
+    model = Model(cfg, plan)
+    params = model.init(jax.random.PRNGKey(1))
+    b, steps = 1, 40  # > window (32): ring buffer wraps
+    rng = np.random.default_rng(1)
+    toks = jnp.asarray(rng.integers(0, cfg.vocab_size, (b, steps + 1)),
+                       jnp.int32)
+
+    cfg_full = dataclasses.replace(cfg, window=None)
+    model_full = Model(cfg_full, plan)
+
+    cache_w = ss.init_cache(model, b, max_len=cfg.window)
+    cache_f = ss.init_cache(model_full, b, max_len=64)
+    for t in range(steps):
+        _, cache_w, nll_w = run_decode(model, params, cache_w,
+                                       toks[:, t:t + 1], t,
+                                       label=toks[:, t + 1:t + 2])
+        _, cache_f, nll_f = run_decode(model_full, params, cache_f,
+                                       toks[:, t:t + 1], t,
+                                       label=toks[:, t + 1:t + 2])
+        if t < cfg.window - 1:
+            # identical until the window saturates
+            np.testing.assert_allclose(np.asarray(nll_w), np.asarray(nll_f),
+                                       rtol=2e-2)
+    assert np.all(np.isfinite(np.asarray(nll_w)))
+
+
+def test_whisper_decode_with_cross_cache():
+    cfg = smoke_config(get_config("whisper-small"))
+    plan = make_plan(cfg, 1, 1, remat=False)
+    model = Model(cfg, plan)
+    params = model.init(jax.random.PRNGKey(2))
+    b = 2
+    cache = ss.init_cache(model, b, max_len=32)
+    # fill the cross-attention cache with "encoder output" projections:
+    # here zeros suffice for a shape/NaN smoke of the decode path
+    tok = jnp.ones((b, 1), jnp.int32)
+    out = run_decode(model, params, cache, tok, 0)
+    nxt, cache = out
+    assert nxt.shape == (b, 1)
+    assert np.all(np.asarray(nxt) >= 0)

@@ -1,0 +1,91 @@
+"""End-to-end training tests: loss decreases, TACO-compressed training
+tracks the baseline (the paper's Table 1 claim at CPU scale), checkpoint
+restart resumes identically."""
+import logging
+
+import jax
+import numpy as np
+import pytest
+
+from repro.configs import get_config, make_plan, smoke_config
+from repro.core.parallel import CommPolicy, ParallelCtx
+from repro.core.taco import TacoConfig
+from repro.data.pipeline import DataConfig, SyntheticLM
+from repro.optim.adamw import OptConfig
+from repro.train.trainer import Trainer, TrainerConfig
+from repro.runtime.fault_tolerance import FailureInjector
+
+MESH = None
+
+
+def mesh1():
+    global MESH
+    if MESH is None:
+        MESH = jax.make_mesh((1, 1, 1), ("pod", "data", "model"))
+    return MESH
+
+
+def small_setup(tmp_path, policy, total_steps=30, seed=0, arch="gpt-350m"):
+    from repro.models.model import Model
+    cfg = smoke_config(get_config(arch))
+    plan = make_plan(cfg, 1, 1)
+    model = Model(cfg, plan)
+    ctx = ParallelCtx(policy=policy)
+    oc = OptConfig(lr_max=1e-3, lr_min=1e-4, warmup_steps=5,
+                   total_steps=total_steps)
+    tc = TrainerConfig(total_steps=total_steps, ckpt_every=10,
+                       ckpt_dir=str(tmp_path / "ckpt"), seed=seed)
+    data = SyntheticLM(DataConfig(vocab_size=cfg.vocab_size, seq_len=64,
+                                  global_batch=8), cfg)
+    return model, ctx, oc, tc, data
+
+
+def test_loss_decreases(tmp_path):
+    model, ctx, oc, tc, data = small_setup(
+        tmp_path, CommPolicy.baseline(), total_steps=30)
+    tr = Trainer(model, mesh1(), ctx, oc, tc, data)
+    _, _, losses = tr.run(resume=False)
+    first, last = np.mean(losses[:5]), np.mean(losses[-5:])
+    assert last < first - 0.3, (first, last)
+
+
+def test_taco_training_tracks_baseline(tmp_path):
+    """The paper's core accuracy claim (Table 1) at smoke scale: full TACO
+    compression on every TP site changes the loss trajectory only
+    marginally."""
+    runs = {}
+    for name, policy in [
+        ("base", CommPolicy.baseline()),
+        ("taco", CommPolicy.taco(TacoConfig(impl="jnp"))),
+    ]:
+        model, ctx, oc, tc, data = small_setup(
+            tmp_path / name, policy, total_steps=30)
+        tr = Trainer(model, mesh1(), ctx, oc, tc, data)
+        _, _, losses = tr.run(resume=False)
+        runs[name] = losses
+    final_base = np.mean(runs["base"][-5:])
+    final_taco = np.mean(runs["taco"][-5:])
+    # paper: +0.25% val-loss degradation; allow 2% at this tiny scale
+    assert abs(final_taco - final_base) / final_base < 0.02, \
+        (final_base, final_taco)
+    assert final_taco < np.mean(runs["taco"][:5]) - 0.3  # it actually learns
+
+
+def test_restart_after_injected_failure(tmp_path):
+    """Kill the run mid-flight; the trainer must restore the latest
+    checkpoint and converge to the same final state as an uninterrupted
+    run (bitwise replay thanks to the pure-function-of-step pipeline)."""
+    model, ctx, oc, tc, data = small_setup(
+        tmp_path, CommPolicy.baseline(), total_steps=20)
+    # uninterrupted reference
+    tr_ref = Trainer(model, mesh1(), ctx, oc, tc, data)
+    p_ref, _, _ = tr_ref.run(resume=False)
+
+    import shutil
+    shutil.rmtree(tc.ckpt_dir, ignore_errors=True)
+    tr = Trainer(model, mesh1(), ctx, oc, tc, data,
+                 injector=FailureInjector(fail_at_steps=[13]))
+    p_failed, _, _ = tr.run(resume=False)
+
+    for a, b in zip(jax.tree.leaves(p_ref), jax.tree.leaves(p_failed)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
