@@ -66,8 +66,8 @@ def _policy(kind: str) -> CommPolicy:
 
 
 def run(out_dir="results/bench", quick=False):
-    mesh = jax.make_mesh((1, 1, 1), ("pod", "data", "model"),
-                         axis_types=(jax.sharding.AxisType.Auto,) * 3)
+    from repro.compat import make_mesh
+    mesh = make_mesh((1, 1, 1), ("pod", "data", "model"))
     cfg = smoke_config(get_config("gpt-350m"))
     plan = make_plan(cfg, 1, 1)
     model = Model(cfg, plan)

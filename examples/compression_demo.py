@@ -18,15 +18,14 @@ from repro.core.taco import TacoConfig, compress, decompress
 
 def capture_tp_tensor():
     """Row-parallel partial output of a real (smoke) attention layer."""
-    from jax import shard_map
     from jax.sharding import PartitionSpec as P
+    from repro.compat import make_mesh, shard_map
     from repro.core.parallel import CommPolicy, ParallelCtx
     from repro.models.model import Model
     from repro.models import attention as attn_mod
     from repro.models.transformer import layer_segments
 
-    mesh = jax.make_mesh((1, 1, 1), ("pod", "data", "model"),
-                         axis_types=(jax.sharding.AxisType.Auto,) * 3)
+    mesh = make_mesh((1, 1, 1), ("pod", "data", "model"))
     cfg = smoke_config(get_config("qwen2-0.5b"))
     plan = make_plan(cfg, 1, 1, remat=False)
     model = Model(cfg, plan)

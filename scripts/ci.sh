@@ -1,0 +1,21 @@
+#!/usr/bin/env bash
+# Tier-1 CI gate: the full test suite must collect cleanly and pass.
+#
+#   scripts/ci.sh            # full tier-1 run (includes slow subprocess tests)
+#   scripts/ci.sh --fast     # skip tests marked slow (quick signal)
+#
+# pytest exits 2 on collection errors and 1 on failures; both fail the gate.
+set -euo pipefail
+cd "$(dirname "$0")/.."
+
+export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
+
+ARGS=(-x -q)
+if [[ "${1:-}" == "--fast" ]]; then
+    ARGS+=(-m "not slow")
+    shift
+fi
+
+# pytest aborts before running anything and exits 2 on collection errors,
+# so a single invocation is both the collection gate and the test run
+exec python -m pytest "${ARGS[@]}" "$@"

@@ -25,12 +25,14 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro import compat
+
 MANIFEST = "manifest.json"
 
 
 def _leaf_paths(tree):
-    flat = jax.tree.leaves_with_path(tree)
-    return [(jax.tree_util.keystr(path), leaf) for path, leaf in flat]
+    flat = compat.tree_leaves_with_path(tree)
+    return [(compat.keystr(path), leaf) for path, leaf in flat]
 
 
 def save(ckpt_dir: str, step: int, state: dict, *, keep_last: int = 3):
@@ -95,13 +97,13 @@ def restore(ckpt_dir: str, template, step: int | None = None,
     with open(os.path.join(d, MANIFEST)) as f:
         manifest = json.load(f)
     leaves_meta = manifest["leaves"]
-    flat, treedef = jax.tree.flatten(template)
+    flat, treedef = compat.tree_flatten(template)
     assert len(flat) == len(leaves_meta), \
         f"checkpoint has {len(leaves_meta)} leaves, template {len(flat)}"
     out = []
     if pspecs is not None:
         from jax.sharding import PartitionSpec
-        pflat = jax.tree.leaves(
+        pflat = compat.tree_leaves(
             pspecs,
             is_leaf=lambda s: s is None or isinstance(s, PartitionSpec))
     import ml_dtypes  # noqa: F401 — registers bfloat16/fp8 with numpy
@@ -117,4 +119,4 @@ def restore(ckpt_dir: str, template, step: int | None = None,
         else:
             arr = jnp.asarray(arr)
         out.append(arr)
-    return jax.tree.unflatten(treedef, out), manifest["step"]
+    return compat.tree_unflatten(treedef, out), manifest["step"]

@@ -1,0 +1,183 @@
+"""Cross-version JAX capability / compatibility layer.
+
+The repo targets the jax >= 0.6 public API surface but must run on the
+pinned jax 0.4.x toolchain in this container (see docs/COMPAT.md for the
+supported range). Every version-sensitive JAX symbol is resolved HERE,
+once, at import time; no other module in ``src/`` or ``tests/`` may import
+``jax.shard_map`` / ``jax.sharding.AxisType`` / ``jax.tree.leaves_with_path``
+directly. Consumers do::
+
+    from repro.compat import shard_map, make_mesh, tree_map, ...
+
+Exports
+  shard_map               jax.shard_map -> jax.experimental.shard_map
+                          fallback; translates check_vma <-> check_rep.
+  make_mesh               jax.make_mesh with axis_types when the installed
+                          version supports it, without when it doesn't,
+                          and a manual Mesh() fallback for very old jax.
+  HAS_AXIS_TYPES / axis_type_auto
+                          AxisType capability detection.
+  tree_map / tree_leaves / tree_flatten / tree_unflatten /
+  tree_structure / tree_leaves_with_path / tree_map_with_path / keystr
+                          jax.tree.* when present, jax.tree_util.* shims
+                          otherwise (jax.tree.leaves_with_path only landed
+                          after 0.4.x).
+  HAS_FP8 / FLOAT8_E4M3 / FLOAT8_E5M2 / has_dtype
+                          FP8 wire-format capability detection.
+"""
+from __future__ import annotations
+
+import inspect
+
+import jax
+import jax.numpy as jnp
+from jax import tree_util as _tu
+
+__all__ = [
+    "JAX_VERSION", "shard_map", "make_mesh", "HAS_AXIS_TYPES",
+    "axis_type_auto", "axis_size", "tree_map", "tree_leaves",
+    "tree_flatten", "tree_unflatten", "tree_structure",
+    "tree_leaves_with_path", "tree_map_with_path", "keystr", "HAS_FP8",
+    "FLOAT8_E4M3", "FLOAT8_E5M2", "has_dtype",
+]
+
+
+def _parse_version(v: str) -> tuple:
+    parts = []
+    for p in v.split(".")[:3]:
+        digits = "".join(ch for ch in p if ch.isdigit())
+        parts.append(int(digits) if digits else 0)
+    return tuple(parts)
+
+
+JAX_VERSION: tuple = _parse_version(jax.__version__)
+
+
+# --------------------------------------------------------------------------
+# shard_map
+# --------------------------------------------------------------------------
+
+if hasattr(jax, "shard_map"):                      # jax >= 0.6
+    _native_shard_map = jax.shard_map
+else:                                              # jax 0.4.x
+    from jax.experimental.shard_map import shard_map as _native_shard_map
+
+_SM_PARAMS = frozenset(inspect.signature(_native_shard_map).parameters)
+
+
+def shard_map(f=None, *, mesh, in_specs, out_specs, check_vma=None, **kwargs):
+    """Version-portable ``shard_map``.
+
+    Accepts the modern keyword ``check_vma``; on versions whose native
+    shard_map only knows ``check_rep`` (same meaning, older name) the flag
+    is renamed before the call. Usable bare or as a decorator factory
+    (``shard_map(mesh=..., ...)(f)``), like the native one.
+    """
+    def bind(fn):
+        kw = dict(kwargs)
+        if check_vma is not None:
+            if "check_vma" in _SM_PARAMS:
+                kw["check_vma"] = check_vma
+            elif "check_rep" in _SM_PARAMS:
+                kw["check_rep"] = check_vma
+        return _native_shard_map(fn, mesh=mesh, in_specs=in_specs,
+                                 out_specs=out_specs, **kw)
+
+    return bind if f is None else bind(f)
+
+
+# --------------------------------------------------------------------------
+# mesh construction
+# --------------------------------------------------------------------------
+
+HAS_AXIS_TYPES = hasattr(jax.sharding, "AxisType")
+_MAKE_MESH_PARAMS = (
+    frozenset(inspect.signature(jax.make_mesh).parameters)
+    if hasattr(jax, "make_mesh") else frozenset())
+
+
+def axis_type_auto():
+    """``AxisType.Auto`` on versions that have it, else None (meshes are
+    implicitly Auto there — it was the only behaviour)."""
+    return jax.sharding.AxisType.Auto if HAS_AXIS_TYPES else None
+
+
+def make_mesh(axis_shapes, axis_names, *, devices=None, axis_types=None):
+    """``jax.make_mesh`` that always produces Auto-typed axes.
+
+    On jax versions with ``AxisType`` the mesh is constructed explicitly
+    Auto (silences the v0.9 axis_types default-change warning); on versions
+    without it the kwarg is dropped — 0.4.x meshes carry no axis types.
+    """
+    axis_shapes = tuple(int(s) for s in axis_shapes)
+    axis_names = tuple(axis_names)
+    kw = {}
+    if devices is not None:
+        kw["devices"] = devices
+    if HAS_AXIS_TYPES and "axis_types" in _MAKE_MESH_PARAMS:
+        if axis_types is None:
+            axis_types = (axis_type_auto(),) * len(axis_names)
+        kw["axis_types"] = axis_types
+    if hasattr(jax, "make_mesh"):
+        return jax.make_mesh(axis_shapes, axis_names, **kw)
+    # pre-make_mesh fallback: reshape the flat device list by hand
+    import numpy as np
+    n = 1
+    for s in axis_shapes:
+        n *= s
+    devs = np.asarray(devices if devices is not None
+                      else jax.devices()[:n]).reshape(axis_shapes)
+    return jax.sharding.Mesh(devs, axis_names)
+
+
+# --------------------------------------------------------------------------
+# named-axis queries inside shard_map
+# --------------------------------------------------------------------------
+
+if hasattr(jax.lax, "axis_size"):                  # jax >= 0.6
+
+    def axis_size(axis_name) -> int:
+        """Static size of a named mesh axis (inside shard_map)."""
+        return jax.lax.axis_size(axis_name)
+
+else:
+
+    def axis_size(axis_name) -> int:
+        """Static size of a named mesh axis (inside shard_map).
+
+        Pre-``lax.axis_size`` idiom: ``psum`` of the constant 1 over the
+        axis constant-folds to the axis size as a Python int."""
+        return jax.lax.psum(1, axis_name)
+
+
+# --------------------------------------------------------------------------
+# pytree shims (jax.tree.* grew over several 0.4.x releases)
+# --------------------------------------------------------------------------
+
+def _tree_fn(name: str, tu_name: str):
+    t = getattr(jax, "tree", None)
+    fn = getattr(t, name, None) if t is not None else None
+    return fn if fn is not None else getattr(_tu, tu_name)
+
+
+tree_map = _tree_fn("map", "tree_map")
+tree_leaves = _tree_fn("leaves", "tree_leaves")
+tree_flatten = _tree_fn("flatten", "tree_flatten")
+tree_unflatten = _tree_fn("unflatten", "tree_unflatten")
+tree_structure = _tree_fn("structure", "tree_structure")
+tree_leaves_with_path = _tree_fn("leaves_with_path", "tree_leaves_with_path")
+tree_map_with_path = _tree_fn("map_with_path", "tree_map_with_path")
+keystr = _tu.keystr
+
+
+# --------------------------------------------------------------------------
+# dtype / feature detection
+# --------------------------------------------------------------------------
+
+def has_dtype(name: str) -> bool:
+    return getattr(jnp, name, None) is not None
+
+
+FLOAT8_E4M3 = getattr(jnp, "float8_e4m3fn", None)
+FLOAT8_E5M2 = getattr(jnp, "float8_e5m2", None)
+HAS_FP8 = FLOAT8_E4M3 is not None and FLOAT8_E5M2 is not None

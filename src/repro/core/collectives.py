@@ -13,6 +13,14 @@ parameter gradients) is compressed too — quantization is applied to the
 cotangent straight-through, exactly as in the paper (no differentiation
 through the quantizer).
 
+All six public collectives are instances of ONE generic wrapper,
+``_compressed_collective(impl, bwd)``: ``impl`` computes the forward
+communication with the forward codec, ``bwd`` maps the cotangent through
+the conjugate collective with the codec pair swapped. The shared
+pad → encode → transport-each-wire-component → decode/decode_sum → crop
+plumbing lives in ``_transport``; a new collective (e.g. a chunked-overlap
+variant) is one ``impl`` + one ``bwd`` line.
+
 Megatron conjugate pairs provided for both TP modes:
   SP mode        : ``all_gather_c``(seq) fwd / ``psum_scatter_c``(seq) bwd
   AllReduce mode : ``allreduce_g`` (fwd AR, bwd id) / ``copy_f`` (fwd id, bwd AR)
@@ -30,6 +38,7 @@ import functools
 import jax
 import jax.numpy as jnp
 
+from repro.compat import axis_size
 from repro.core.codecs import IdentityCodec
 
 Identity = IdentityCodec()
@@ -48,21 +57,59 @@ def _pad_to(x, mult):
     return x, n
 
 
+def _transport(x2d, codec, move, *, reduce=False, dtype):
+    """Shared codec plumbing for every compressed collective: pad the
+    trailing dim of ``x2d`` to the codec granule, encode, apply ``move``
+    (one lax collective) to each wire component, decode — fused-summing
+    the stacked peer axis when ``reduce`` — and crop the padding."""
+    padded, n = _pad_to(x2d, codec.granule)
+    enc = tuple(move(a) for a in codec.encode(padded))
+    if reduce:
+        return codec.decode_sum(enc, padded.shape[-1], dtype)[:n]
+    return codec.decode(enc, padded.shape[-1], dtype)[..., :n]
+
+
+def _compressed_collective(name, impl, bwd, n_static, doc=None):
+    """Build one compressed collective with a straight-through custom_vjp.
+
+    ``impl(x, *static)`` runs the forward communication (static ends with
+    the ``(fwd_codec, bwd_codec)`` pair); ``bwd(ct, *static)`` routes the
+    cotangent through the conjugate collective with the codecs swapped.
+    All ``n_static`` trailing args are nondiff (axis names, dims/perms,
+    codecs) so they stay Python values under tracing.
+    """
+    @functools.partial(jax.custom_vjp,
+                       nondiff_argnums=tuple(range(1, n_static + 1)))
+    def op(x, *static):
+        return impl(x, *static)
+
+    def _fwd(x, *static):
+        return impl(x, *static), None
+
+    def _bwd(*args):
+        static, ct = args[:n_static], args[-1]
+        return (bwd(ct, *static),)
+
+    op.defvjp(_fwd, _bwd)
+    op.__name__ = op.__qualname__ = name
+    if doc:
+        op.__doc__ = doc
+    return op
+
+
 # --------------------------------------------------------------------------
-# all_gather
+# forward impls (shared by the custom_vjp wrappers below)
 # --------------------------------------------------------------------------
 
 def _ag_one(x, ax, dim, codec):
     if isinstance(codec, IdentityCodec):
         return jax.lax.all_gather(x, ax, axis=dim, tiled=True)
-    p = jax.lax.axis_size(ax)
-    flat, n = _pad_to(x.reshape(1, -1), codec.granule)
-    enc = codec.encode(flat)
-    enc = tuple(
-        jax.lax.all_gather(a, ax, axis=0, tiled=False)[:, 0] for a in enc
-    )  # each -> (P, ...)
-    dec = codec.decode(enc, flat.shape[-1], x.dtype)          # (P, n_pad)
-    dec = dec[:, :n].reshape(p, *x.shape)
+    p = axis_size(ax)
+    dec = _transport(
+        x.reshape(1, -1), codec,
+        lambda a: jax.lax.all_gather(a, ax, axis=0, tiled=False)[:, 0],
+        dtype=x.dtype)                                        # (P, n)
+    dec = dec.reshape(p, *x.shape)
     out = jnp.moveaxis(dec, 0, dim)                           # (..., P, d, ...)
     shape = list(x.shape)
     shape[dim] *= p
@@ -75,45 +122,22 @@ def _ag_impl(x, axis_name, dim, codec):
     return x
 
 
-@functools.partial(jax.custom_vjp, nondiff_argnums=(1, 2, 3, 4))
-def all_gather_c(x, axis_name, dim, fwd_codec, bwd_codec):
-    """Compressed all-gather concatenating along ``dim`` (tiled layout)."""
-    return _ag_impl(x, axis_name, dim, fwd_codec)
-
-
-def _ag_fwd(x, axis_name, dim, fwd_codec, bwd_codec):
-    return _ag_impl(x, axis_name, dim, fwd_codec), None
-
-
-def _ag_bwd(axis_name, dim, fwd_codec, bwd_codec, _, ct):
-    return (psum_scatter_c(ct, axis_name, dim, bwd_codec, fwd_codec),)
-
-
-all_gather_c.defvjp(_ag_fwd, _ag_bwd)
-
-
-# --------------------------------------------------------------------------
-# psum_scatter (reduce-scatter)
-# --------------------------------------------------------------------------
-
 def _rs_one(x, ax, dim, codec):
     if isinstance(codec, IdentityCodec):
         return jax.lax.psum_scatter(x, ax, scatter_dimension=dim, tiled=True)
-    p = jax.lax.axis_size(ax)
+    p = axis_size(ax)
     moved = jnp.moveaxis(x, dim, 0)
     d = moved.shape[0]
     assert d % p == 0, f"scatter dim {d} not divisible by axis size {p}"
     chunks = moved.reshape(p, -1)                              # chunk i -> peer i
-    chunks, nc = _pad_to(chunks, codec.granule)
-    enc = codec.encode(chunks)
-    # Paper's two-shot phase 1: ONE compressed AlltoAll ...
-    enc = tuple(
-        jax.lax.all_to_all(a, ax, split_axis=0, concat_axis=0, tiled=False)
-        for a in enc
-    )
-    # ... followed by ONE fused local reduction (rotated-domain, single
-    # inverse rotation — DESIGN.md §7.2).
-    summed = codec.decode_sum(enc, chunks.shape[-1], x.dtype)[:nc]
+    # Paper's two-shot phase 1: ONE compressed AlltoAll, followed by ONE
+    # fused local reduction (rotated-domain, single inverse rotation —
+    # DESIGN.md §7.2).
+    summed = _transport(
+        chunks, codec,
+        lambda a: jax.lax.all_to_all(a, ax, split_axis=0, concat_axis=0,
+                                     tiled=False),
+        reduce=True, dtype=x.dtype)
     out = summed.reshape(d // p, *moved.shape[1:])
     return jnp.moveaxis(out, 0, dim) if dim != 0 else out
 
@@ -124,34 +148,13 @@ def _rs_impl(x, axis_name, dim, codec):
     return x
 
 
-@functools.partial(jax.custom_vjp, nondiff_argnums=(1, 2, 3, 4))
-def psum_scatter_c(x, axis_name, dim, fwd_codec, bwd_codec):
-    """Compressed reduce-scatter along ``dim`` (tiled layout)."""
-    return _rs_impl(x, axis_name, dim, fwd_codec)
-
-
-def _rs_fwd(x, axis_name, dim, fwd_codec, bwd_codec):
-    return _rs_impl(x, axis_name, dim, fwd_codec), None
-
-
-def _rs_bwd(axis_name, dim, fwd_codec, bwd_codec, _, ct):
-    return (all_gather_c(ct, axis_name, dim, bwd_codec, fwd_codec),)
-
-
-psum_scatter_c.defvjp(_rs_fwd, _rs_bwd)
-
-
-# --------------------------------------------------------------------------
-# all_reduce (two-shot) and the Megatron f/g conjugate pair
-# --------------------------------------------------------------------------
-
 def _ar_impl(x, axis_name, codec):
     if isinstance(codec, IdentityCodec):
         return jax.lax.psum(x, axis_name)
     axes = _axes_tuple(axis_name)
     ptot = 1
     for ax in axes:
-        ptot *= jax.lax.axis_size(ax)
+        ptot *= axis_size(ax)
     flat, n = _pad_to(x.reshape(1, -1), ptot * codec.granule)
     flat = flat[0]
     rs = _rs_impl(flat, axis_name, 0, codec)
@@ -159,73 +162,103 @@ def _ar_impl(x, axis_name, codec):
     return ag[:n].reshape(x.shape)
 
 
-@functools.partial(jax.custom_vjp, nondiff_argnums=(1, 2, 3))
-def allreduce_g(x, axis_name, fwd_codec, bwd_codec):
-    """Megatron "g": forward compressed two-shot AllReduce, backward
-    identity. Use at row-parallel outputs (non-SP TP mode / decode)."""
-    return _ar_impl(x, axis_name, fwd_codec)
-
-
-def _g_fwd(x, axis_name, fwd_codec, bwd_codec):
-    return _ar_impl(x, axis_name, fwd_codec), None
-
-
-def _g_bwd(axis_name, fwd_codec, bwd_codec, _, ct):
-    return (ct,)
-
-
-allreduce_g.defvjp(_g_fwd, _g_bwd)
-
-
-@functools.partial(jax.custom_vjp, nondiff_argnums=(1, 2, 3))
-def copy_f(x, axis_name, fwd_codec, bwd_codec):
-    """Megatron "f": forward identity, backward compressed AllReduce.
-    Use at column-parallel inputs (non-SP TP mode)."""
-    return x
-
-
-def _f_fwd(x, axis_name, fwd_codec, bwd_codec):
-    return x, None
-
-
-def _f_bwd(axis_name, fwd_codec, bwd_codec, _, ct):
-    return (_ar_impl(ct, axis_name, bwd_codec),)
-
-
-copy_f.defvjp(_f_fwd, _f_bwd)
-
-
-# --------------------------------------------------------------------------
-# ppermute (pipeline stage boundary; TahQuant compression site)
-# --------------------------------------------------------------------------
-
 def _pp_impl(x, axis_name, perm, codec):
     if isinstance(codec, IdentityCodec):
         return jax.lax.ppermute(x, axis_name, perm)
-    flat, n = _pad_to(x.reshape(1, -1), codec.granule)
-    enc = codec.encode(flat)
-    enc = tuple(jax.lax.ppermute(a, axis_name, perm) for a in enc)
-    dec = codec.decode(enc, flat.shape[-1], x.dtype)
-    return dec[0, :n].reshape(x.shape)
+    dec = _transport(x.reshape(1, -1), codec,
+                     lambda a: jax.lax.ppermute(a, axis_name, perm),
+                     dtype=x.dtype)
+    return dec[0].reshape(x.shape)
 
 
-@functools.partial(jax.custom_vjp, nondiff_argnums=(1, 2, 3, 4))
-def ppermute_c(x, axis_name, perm, fwd_codec, bwd_codec):
-    """Compressed point-to-point send (pipeline boundaries). ``perm`` is a
-    tuple of (src, dst) pairs, as lax.ppermute."""
-    return _pp_impl(x, axis_name, perm, fwd_codec)
+def _a2a_impl(x, axis_name, split_dim, concat_dim, codec):
+    if isinstance(codec, IdentityCodec):
+        return jax.lax.all_to_all(
+            x, axis_name, split_axis=split_dim, concat_axis=concat_dim, tiled=True)
+    if concat_dim != split_dim:
+        raise NotImplementedError(
+            "compressed all_to_all currently requires split_dim == concat_dim")
+    p = axis_size(axis_name)
+    moved = jnp.moveaxis(x, split_dim, 0)
+    d = moved.shape[0]
+    assert d % p == 0, f"split dim {d} not divisible by axis size {p}"
+    chunks = moved.reshape(p, -1)
+    dec = _transport(
+        chunks, codec,
+        lambda a: jax.lax.all_to_all(a, axis_name, split_axis=0,
+                                     concat_axis=0, tiled=False),
+        dtype=x.dtype)
+    # peer-major concat along the split dim == lax.all_to_all tiled layout
+    dec = dec.reshape(d, *moved.shape[1:])
+    return jnp.moveaxis(dec, 0, split_dim)
 
 
-def _pp_fwd(x, axis_name, perm, fwd_codec, bwd_codec):
-    return _pp_impl(x, axis_name, perm, fwd_codec), None
+# --------------------------------------------------------------------------
+# the public collectives: conjugate (impl, bwd) pairs of the one wrapper
+# --------------------------------------------------------------------------
+
+all_gather_c = _compressed_collective(
+    "all_gather_c",
+    impl=lambda x, axis_name, dim, fc, bc: _ag_impl(x, axis_name, dim, fc),
+    bwd=lambda ct, axis_name, dim, fc, bc:
+        psum_scatter_c(ct, axis_name, dim, bc, fc),
+    n_static=4,
+    doc="""Compressed all-gather concatenating along ``dim`` (tiled layout).
+
+    ``all_gather_c(x, axis_name, dim, fwd_codec, bwd_codec)``; backward is
+    the compressed reduce-scatter with the codec pair swapped.""")
 
 
-def _pp_bwd(axis_name, perm, fwd_codec, bwd_codec, _, ct):
-    inv = tuple((d, s) for s, d in perm)
-    return (ppermute_c(ct, axis_name, inv, bwd_codec, fwd_codec),)
+psum_scatter_c = _compressed_collective(
+    "psum_scatter_c",
+    impl=lambda x, axis_name, dim, fc, bc: _rs_impl(x, axis_name, dim, fc),
+    bwd=lambda ct, axis_name, dim, fc, bc:
+        all_gather_c(ct, axis_name, dim, bc, fc),
+    n_static=4,
+    doc="""Compressed reduce-scatter along ``dim`` (tiled layout).
+
+    ``psum_scatter_c(x, axis_name, dim, fwd_codec, bwd_codec)``; backward
+    is the compressed all-gather with the codec pair swapped.""")
 
 
-ppermute_c.defvjp(_pp_fwd, _pp_bwd)
+allreduce_g = _compressed_collective(
+    "allreduce_g",
+    impl=lambda x, axis_name, fc, bc: _ar_impl(x, axis_name, fc),
+    bwd=lambda ct, axis_name, fc, bc: ct,
+    n_static=3,
+    doc="""Megatron "g": forward compressed two-shot AllReduce, backward
+    identity. Use at row-parallel outputs (non-SP TP mode / decode).""")
+
+
+copy_f = _compressed_collective(
+    "copy_f",
+    impl=lambda x, axis_name, fc, bc: x,
+    bwd=lambda ct, axis_name, fc, bc: _ar_impl(ct, axis_name, bc),
+    n_static=3,
+    doc="""Megatron "f": forward identity, backward compressed AllReduce.
+    Use at column-parallel inputs (non-SP TP mode).""")
+
+
+ppermute_c = _compressed_collective(
+    "ppermute_c",
+    impl=lambda x, axis_name, perm, fc, bc: _pp_impl(x, axis_name, perm, fc),
+    bwd=lambda ct, axis_name, perm, fc, bc:
+        ppermute_c(ct, axis_name, tuple((d, s) for s, d in perm), bc, fc),
+    n_static=4,
+    doc="""Compressed point-to-point send (pipeline boundaries; TahQuant
+    compression site). ``perm`` is a tuple of (src, dst) pairs, as
+    lax.ppermute; backward routes through the inverted permutation.""")
+
+
+all_to_all_c = _compressed_collective(
+    "all_to_all_c",
+    impl=lambda x, axis_name, split_dim, concat_dim, fc, bc:
+        _a2a_impl(x, axis_name, split_dim, concat_dim, fc),
+    bwd=lambda ct, axis_name, split_dim, concat_dim, fc, bc:
+        all_to_all_c(ct, axis_name, concat_dim, split_dim, bc, fc),
+    n_static=5,
+    doc="""Compressed all-to-all (MoE expert-parallel dispatch; the paper's
+    compressed AlltoAll). Backward swaps split/concat dims and codecs.""")
 
 
 def psum_exact(x, axis_name):
@@ -235,51 +268,6 @@ def psum_exact(x, axis_name):
     softmax statistics). Avoids the psum->psum transpose inflation that
     shard_map applies under check_vma=False."""
     return allreduce_g(x, axis_name, Identity, Identity)
-
-
-# --------------------------------------------------------------------------
-# all_to_all (MoE expert-parallel dispatch; paper's compressed AlltoAll)
-# --------------------------------------------------------------------------
-
-def _a2a_impl(x, axis_name, split_dim, concat_dim, codec):
-    if isinstance(codec, IdentityCodec):
-        return jax.lax.all_to_all(
-            x, axis_name, split_axis=split_dim, concat_axis=concat_dim, tiled=True)
-    if concat_dim != split_dim:
-        raise NotImplementedError(
-            "compressed all_to_all currently requires split_dim == concat_dim")
-    p = jax.lax.axis_size(axis_name)
-    moved = jnp.moveaxis(x, split_dim, 0)
-    d = moved.shape[0]
-    assert d % p == 0, f"split dim {d} not divisible by axis size {p}"
-    chunks = moved.reshape(p, -1)
-    chunks, nc = _pad_to(chunks, codec.granule)
-    enc = codec.encode(chunks)
-    enc = tuple(
-        jax.lax.all_to_all(a, axis_name, split_axis=0, concat_axis=0, tiled=False)
-        for a in enc
-    )
-    dec = codec.decode(enc, chunks.shape[-1], x.dtype)[:, :nc]
-    # peer-major concat along the split dim == lax.all_to_all tiled layout
-    dec = dec.reshape(d, *moved.shape[1:])
-    return jnp.moveaxis(dec, 0, split_dim)
-
-
-@functools.partial(jax.custom_vjp, nondiff_argnums=(1, 2, 3, 4, 5))
-def all_to_all_c(x, axis_name, split_dim, concat_dim, fwd_codec, bwd_codec):
-    return _a2a_impl(x, axis_name, split_dim, concat_dim, fwd_codec)
-
-
-def _a2a_fwd(x, axis_name, split_dim, concat_dim, fwd_codec, bwd_codec):
-    return _a2a_impl(x, axis_name, split_dim, concat_dim, fwd_codec), None
-
-
-def _a2a_bwd(axis_name, split_dim, concat_dim, fwd_codec, bwd_codec, _, ct):
-    return (all_to_all_c(ct, axis_name, concat_dim, split_dim,
-                         bwd_codec, fwd_codec),)
-
-
-all_to_all_c.defvjp(_a2a_fwd, _a2a_bwd)
 
 
 # --------------------------------------------------------------------------

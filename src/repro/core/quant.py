@@ -20,7 +20,10 @@ from typing import Literal
 import jax
 import jax.numpy as jnp
 
-__all__ = ["FORMATS", "FormatSpec", "quantize_ds", "dequantize_ds"]
+from repro import compat
+
+__all__ = ["FORMATS", "FormatSpec", "get_format", "quantize_ds",
+           "dequantize_ds"]
 
 FormatName = Literal["e4m3", "e5m2", "int8"]
 
@@ -38,11 +41,28 @@ class FormatSpec:
         return jnp.uint8 if self.is_float else jnp.int8
 
 
+# FP8 entries only exist when the installed jax/ml_dtypes expose the
+# dtypes (compat feature detection) — the paper's §6 graceful-degradation
+# path for non-FP8 stacks is the int8 format, which is always present.
 FORMATS: dict[str, FormatSpec] = {
-    "e4m3": FormatSpec("e4m3", jnp.float8_e4m3fn, 448.0, True),
-    "e5m2": FormatSpec("e5m2", jnp.float8_e5m2, 57344.0, True),
     "int8": FormatSpec("int8", jnp.int8, 127.0, False),
 }
+if compat.HAS_FP8:
+    FORMATS["e4m3"] = FormatSpec("e4m3", compat.FLOAT8_E4M3, 448.0, True)
+    FORMATS["e5m2"] = FormatSpec("e5m2", compat.FLOAT8_E5M2, 57344.0, True)
+
+
+def get_format(name: str) -> FormatSpec:
+    """FORMATS lookup with an actionable error on non-FP8 stacks."""
+    try:
+        return FORMATS[name]
+    except KeyError:
+        if name in ("e4m3", "e5m2") and not compat.HAS_FP8:
+            raise RuntimeError(
+                f"FP8 format {name!r} requested but this jax/ml_dtypes "
+                "stack exposes no float8 dtypes; use fmt='int8' (the paper "
+                "§6 graceful-degradation path)") from None
+        raise
 
 
 def _group(z: jax.Array, group_size: int) -> jax.Array:

@@ -46,7 +46,7 @@ class TacoConfig:
 
     @property
     def format_spec(self) -> quant_mod.FormatSpec:
-        return quant_mod.FORMATS[self.fmt]
+        return quant_mod.get_format(self.fmt)
 
     def resolved_impl(self) -> str:
         if self.impl != "auto":

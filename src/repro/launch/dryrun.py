@@ -39,6 +39,7 @@ import jax.numpy as jnp
 import numpy as np
 from jax.sharding import PartitionSpec as P
 
+from repro import compat
 from repro.configs import (ASSIGNED, SHAPES, applicable, get_config,
                            make_plan)
 from repro.core.parallel import CommPolicy, ParallelCtx
@@ -78,7 +79,7 @@ def input_specs(model, suite):
 
 
 def build_serve(model, mesh, ctx, shard_batch: bool):
-    from jax import shard_map
+    from repro.compat import shard_map
     from repro.serve import serve_step as ss
 
     pspecs = model.partition_specs()
@@ -87,7 +88,7 @@ def build_serve(model, mesh, ctx, shard_batch: bool):
         (model.fsdp_axes[0] if model.fsdp_axes else None)
     if not shard_batch:  # e.g. long_500k: global_batch=1 stays replicated
         dp = None
-        cspecs = jax.tree.map(
+        cspecs = compat.tree_map(
             lambda s: P(*((s[0],) + (None,) + tuple(s[2:]))), cspecs,
             is_leaf=lambda s: isinstance(s, P))
 

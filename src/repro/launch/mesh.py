@@ -3,25 +3,20 @@
 A FUNCTION, not a module constant — importing this module never touches
 jax device state (device count is locked on first jax init, and only
 launch/dryrun.py may force the 512-device placeholder world).
+
+All construction goes through ``repro.compat.make_mesh`` so the
+``axis_types`` kwarg is used only on jax versions that have ``AxisType``.
 """
 from __future__ import annotations
 
-import jax
-from jax.sharding import AxisType
+from repro import compat
+from repro.compat import make_mesh  # noqa: F401 — re-export, one constructor
 
 
 def make_production_mesh(*, multi_pod: bool = False):
     shape = (2, 16, 16) if multi_pod else (16, 16)
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")
-    return jax.make_mesh(shape, axes,
-                         axis_types=(AxisType.Auto,) * len(axes))
-
-
-def make_mesh(shape, axes):
-    """Small-mesh helper for tests/examples (silences the v0.9 axis_types
-    default-change warning)."""
-    return jax.make_mesh(tuple(shape), tuple(axes),
-                         axis_types=(AxisType.Auto,) * len(axes))
+    return compat.make_mesh(shape, axes)
 
 
 def mesh_axis_info(mesh):

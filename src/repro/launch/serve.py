@@ -14,6 +14,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro import compat
 from repro.ckpt import checkpoint as ck
 from repro.configs import get_config, make_plan, smoke_config
 from repro.core.parallel import CommPolicy, ParallelCtx
@@ -64,7 +65,7 @@ def main():
             "params" in params else params
         print(f"restored checkpoint step {step}")
     pspecs = model.partition_specs()
-    params = jax.tree.map(
+    params = compat.tree_map(
         lambda x, s: jax.device_put(x, NamedSharding(mesh, s)),
         params, pspecs)
 

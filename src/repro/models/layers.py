@@ -16,6 +16,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro import compat
 COMPUTE_DTYPE = jnp.bfloat16
 
 
@@ -55,7 +56,7 @@ class ParamBuilder:
                 None if s.fsdp_dim is None else s.fsdp_dim + 1,
                 None if s.tp_dim is None else s.tp_dim + 1,
                 s.init, s.scale)
-        return jax.tree.map(f, specs,
+        return compat.tree_map(f, specs,
                             is_leaf=lambda x: isinstance(x, ParamSpec))
 
 
@@ -69,11 +70,11 @@ def init_param(key, spec: ParamSpec, dtype=COMPUTE_DTYPE):
 
 
 def init_params(specs, rng, dtype=COMPUTE_DTYPE):
-    leaves, treedef = jax.tree.flatten(
+    leaves, treedef = compat.tree_flatten(
         specs, is_leaf=lambda x: isinstance(x, ParamSpec))
     keys = jax.random.split(rng, len(leaves))
     vals = [init_param(k, s, dtype) for k, s in zip(keys, leaves)]
-    return jax.tree.unflatten(treedef, vals)
+    return compat.tree_unflatten(treedef, vals)
 
 
 def partition_spec(spec: ParamSpec, fsdp_axes: tuple, tp_axis: str):

@@ -18,6 +18,7 @@ import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 
 from repro.configs.base import ArchConfig, RunPlan
+from repro import compat
 from repro.models import transformer
 from repro.models.layers import (COMPUTE_DTYPE, ParamSpec, init_params,
                                  partition_spec)
@@ -40,12 +41,12 @@ class Model:
         return init_params(self.specs(), rng, dtype)
 
     def abstract_params(self, dtype=COMPUTE_DTYPE):
-        return jax.tree.map(
+        return compat.tree_map(
             lambda s: jax.ShapeDtypeStruct(s.shape, dtype),
             self.specs(), is_leaf=IS_SPEC)
 
     def partition_specs(self):
-        return jax.tree.map(
+        return compat.tree_map(
             lambda s: partition_spec(s, self.fsdp_axes, self.tp_axis),
             self.specs(), is_leaf=IS_SPEC)
 

@@ -19,6 +19,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.models import attention as attn_mod
+from repro import compat
 from repro.models import moe as moe_mod
 from repro.models import rwkv as rwkv_mod
 from repro.models import ssm as ssm_mod
@@ -205,7 +206,7 @@ def run_segments(x_shard, seg_params, segments, cfg, plan, ctx, *,
             # collectives — unrolling makes the compiled artifact reflect
             # the true per-step cost.
             for i in range(seg.count):
-                lp_i = jax.tree.map(lambda a: a[i], sp_)
+                lp_i = compat.tree_map(lambda a: a[i], sp_)
                 x_shard, a = fn(x_shard, lp_i, enc_arg)
                 aux_total = aux_total + a
     return x_shard, aux_total

@@ -18,6 +18,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.models.layers import ParamSpec
+from repro import compat
 
 IS_SPEC = lambda x: isinstance(x, ParamSpec)  # noqa: E731
 
@@ -46,15 +47,15 @@ def schedule(step, oc: OptConfig):
 
 
 def init_opt_state(params):
-    master = jax.tree.map(lambda p: p.astype(jnp.float32), params)
-    zeros = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+    master = compat.tree_map(lambda p: p.astype(jnp.float32), params)
+    zeros = compat.tree_map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
     return {"master": master, "mu": zeros,
-            "nu": jax.tree.map(jnp.copy, zeros),
+            "nu": compat.tree_map(jnp.copy, zeros),
             "step": jnp.zeros((), jnp.int32)}
 
 
 def abstract_opt_state(abstract_params):
-    f32 = jax.tree.map(
+    f32 = compat.tree_map(
         lambda p: jax.ShapeDtypeStruct(p.shape, jnp.float32), abstract_params)
     return {"master": f32, "mu": f32, "nu": f32,
             "step": jax.ShapeDtypeStruct((), jnp.int32)}
@@ -75,15 +76,15 @@ def finalize_grads(grads, model):
         axes = model.replicated_grad_axes(s)
         return jax.lax.psum(g, axes) if axes else g
 
-    return jax.tree.map(fix, grads, specs, is_leaf=IS_SPEC)
+    return compat.tree_map(fix, grads, specs, is_leaf=IS_SPEC)
 
 
 def global_grad_norm(grads, model):
     """Spec-aware global L2 norm: sharded dims psum'd, replicated not."""
     specs = model.specs()
     sq = jnp.zeros((), jnp.float32)
-    flat_g = jax.tree.leaves(grads)
-    flat_s = jax.tree.leaves(specs, is_leaf=IS_SPEC)
+    flat_g = compat.tree_leaves(grads)
+    flat_s = compat.tree_leaves(specs, is_leaf=IS_SPEC)
     local = jnp.zeros((), jnp.float32)
     shard_axes_terms = {}
     for g, s in zip(flat_g, flat_s):
@@ -124,15 +125,15 @@ def adamw_update(grads, opt_state, oc: OptConfig, model):
         m = m - lr * (update + oc.weight_decay * m)
         return m, mu, nu
 
-    out = jax.tree.map(upd, grads, opt_state["master"], opt_state["mu"],
+    out = compat.tree_map(upd, grads, opt_state["master"], opt_state["mu"],
                        opt_state["nu"])
     # out mirrors the tree with (m, mu, nu) tuples at leaves
-    leaves, treedef = jax.tree.flatten(
+    leaves, treedef = compat.tree_flatten(
         out, is_leaf=lambda x: isinstance(x, tuple) and len(x) == 3
         and all(hasattr(t, "dtype") for t in x))
-    master = jax.tree.unflatten(treedef, [l[0] for l in leaves])
-    mu = jax.tree.unflatten(treedef, [l[1] for l in leaves])
-    nu = jax.tree.unflatten(treedef, [l[2] for l in leaves])
-    new_params = jax.tree.map(lambda m: m.astype(jnp.bfloat16), master)
+    master = compat.tree_unflatten(treedef, [l[0] for l in leaves])
+    mu = compat.tree_unflatten(treedef, [l[1] for l in leaves])
+    nu = compat.tree_unflatten(treedef, [l[2] for l in leaves])
+    new_params = compat.tree_map(lambda m: m.astype(jnp.bfloat16), master)
     new_state = {"master": master, "mu": mu, "nu": nu, "step": step}
     return new_params, new_state, {"grad_norm": gnorm, "lr": lr}

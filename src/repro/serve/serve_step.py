@@ -19,9 +19,10 @@ import functools
 
 import jax
 import jax.numpy as jnp
-from jax import shard_map
 from jax.sharding import PartitionSpec as P
 
+from repro import compat
+from repro.compat import shard_map
 from repro.models import attention as attn_mod
 from repro.models import rwkv as rwkv_mod
 from repro.models import ssm as ssm_mod
@@ -108,8 +109,8 @@ def cache_pspecs(model) -> list:
 
 
 def init_cache(model, global_batch: int, max_len: int):
-    return jax.tree.map(lambda s: jnp.zeros(s.shape, s.dtype),
-                        cache_shapes(model, global_batch, max_len))
+    return compat.tree_map(lambda s: jnp.zeros(s.shape, s.dtype),
+                           cache_shapes(model, global_batch, max_len))
 
 
 # --------------------------------------------------------------------------

@@ -22,9 +22,10 @@ import functools
 
 import jax
 import jax.numpy as jnp
-from jax import shard_map
 from jax.sharding import PartitionSpec as P
 
+from repro import compat
+from repro.compat import shard_map
 from repro.core import collectives as cc
 from repro.core.parallel import ParallelCtx
 from repro.models.layers import COMPUTE_DTYPE, ParamSpec, apply_norm
@@ -56,7 +57,7 @@ def pipe_partition_specs(model, pc: PipeConfig):
     out = dict(base)
     segs = []
     for seg_spec in base["segments"]:
-        segs.append(jax.tree.map(
+        segs.append(compat.tree_map(
             lambda s: P(*((pc.pipe_axis,) + tuple(s)[1:])), seg_spec,
             is_leaf=lambda s: isinstance(s, P)))
     out["segments"] = segs
@@ -170,12 +171,12 @@ def _finalize_pipe_grads(grads, model, pc: PipeConfig):
 
     def fix(path, g, s):
         axes = list(model.replicated_grad_axes(s))
-        if "segments" not in jax.tree_util.keystr(path):
+        if "segments" not in compat.keystr(path):
             axes.append(pc.pipe_axis)
         return jax.lax.psum(g, tuple(axes)) if axes else g
 
-    flat_g = jax.tree.leaves_with_path(grads)
-    flat_s = jax.tree.leaves(specs, is_leaf=IS_SPEC)
+    flat_g = compat.tree_leaves_with_path(grads)
+    flat_s = compat.tree_leaves(specs, is_leaf=IS_SPEC)
     fixed = [fix(p, g, s) for (p, g), s in zip(flat_g, flat_s)]
-    treedef = jax.tree.structure(grads)
-    return jax.tree.unflatten(treedef, fixed)
+    treedef = compat.tree_structure(grads)
+    return compat.tree_unflatten(treedef, fixed)

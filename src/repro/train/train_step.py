@@ -12,9 +12,9 @@ import functools
 
 import jax
 import jax.numpy as jnp
-from jax import shard_map
 from jax.sharding import PartitionSpec as P
 
+from repro.compat import shard_map
 from repro.core.parallel import ParallelCtx
 from repro.optim import adamw
 

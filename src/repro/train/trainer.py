@@ -14,6 +14,7 @@ import time
 import jax
 import numpy as np
 
+from repro import compat
 from repro.ckpt import checkpoint as ckpt
 from repro.data.pipeline import DataConfig, SyntheticLM
 from repro.optim import adamw
@@ -50,7 +51,7 @@ class Trainer:
         from jax.sharding import NamedSharding
         params = self.model.init(jax.random.PRNGKey(self.tc.seed))
         pspecs = self.model.partition_specs()
-        params = jax.tree.map(
+        params = compat.tree_map(
             lambda x, s: jax.device_put(x, NamedSharding(self.mesh, s)),
             params, pspecs)
         opt_state = adamw.init_opt_state(params)

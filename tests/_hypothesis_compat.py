@@ -1,0 +1,144 @@
+"""Minimal offline stand-in for the ``hypothesis`` property-testing API.
+
+The container has no network access and no vendored hypothesis wheel, but
+the property tests are a load-bearing part of the suite — so when the real
+package is unavailable they run against this shim: each ``@given`` test is
+executed ``max_examples`` times with inputs drawn by a deterministically
+seeded ``numpy`` RNG (seed derived from the test name, so failures
+reproduce run-to-run).
+
+Only the surface this repo uses is implemented:
+
+  given(**strategies)                      keyword-argument form
+  settings(max_examples=N, deadline=None)  decorator, above @given
+  strategies.integers(lo, hi)              inclusive bounds, like hypothesis
+  strategies.floats(lo, hi)                log-uniform across wide positive
+                                           ranges, uniform otherwise
+  strategies.sampled_from(seq)
+  strategies.booleans()
+
+No shrinking, no example database, no ``assume``. Boundary values (lo, hi)
+are force-included as the first examples, which is where most of
+hypothesis's practical bug-finding power on numeric code comes from.
+
+Import pattern used by the test modules::
+
+    try:
+        from hypothesis import given, settings, strategies as st
+    except ImportError:                      # offline container
+        from _hypothesis_compat import given, settings, strategies as st
+"""
+from __future__ import annotations
+
+import functools
+import hashlib
+import inspect
+import math
+
+import numpy as np
+
+DEFAULT_MAX_EXAMPLES = 20
+
+__all__ = ["given", "settings", "strategies", "st", "HealthCheck"]
+
+
+class _Strategy:
+    """A draw rule: ``boundary(i)`` yields forced edge cases for the first
+    examples, ``draw(rng)`` samples the rest."""
+
+    def __init__(self, draw, boundaries=()):
+        self._draw = draw
+        self._boundaries = tuple(boundaries)
+
+    def example_at(self, i, rng):
+        if i < len(self._boundaries):
+            return self._boundaries[i]
+        return self._draw(rng)
+
+
+class _Strategies:
+    @staticmethod
+    def integers(min_value, max_value):
+        return _Strategy(
+            lambda rng: int(rng.integers(min_value, max_value + 1)),
+            boundaries=(min_value, max_value))
+
+    @staticmethod
+    def floats(min_value, max_value):
+        lo, hi = float(min_value), float(max_value)
+
+        def draw(rng):
+            # hypothesis-style bias: wide positive ranges are sampled
+            # log-uniformly so tiny magnitudes actually occur
+            if lo > 0 and hi / lo > 1e3:
+                return float(math.exp(rng.uniform(math.log(lo),
+                                                  math.log(hi))))
+            return float(rng.uniform(lo, hi))
+
+        return _Strategy(draw, boundaries=(lo, hi))
+
+    @staticmethod
+    def sampled_from(elements):
+        elements = list(elements)
+        return _Strategy(
+            lambda rng: elements[int(rng.integers(len(elements)))],
+            boundaries=tuple(elements[:2]))
+
+    @staticmethod
+    def booleans():
+        return _Strategy(lambda rng: bool(rng.integers(2)),
+                         boundaries=(False, True))
+
+
+strategies = st = _Strategies()
+
+
+class HealthCheck:
+    """API-compatibility stub (attributes exist; nothing consults them)."""
+
+    all = staticmethod(lambda: [])
+    too_slow = data_too_large = filter_too_much = None
+
+
+def settings(max_examples=DEFAULT_MAX_EXAMPLES, deadline=None, **_ignored):
+    """Record max_examples on the decorated (given-wrapped) function."""
+
+    def deco(fn):
+        fn._shim_max_examples = max_examples
+        return fn
+
+    return deco
+
+
+def given(**strategy_kwargs):
+    """Run the test once per example with kwargs drawn from strategies."""
+
+    def deco(fn):
+        names = tuple(strategy_kwargs)
+
+        @functools.wraps(fn)
+        def wrapper(*args, **fixture_kwargs):
+            n = getattr(wrapper, "_shim_max_examples", DEFAULT_MAX_EXAMPLES)
+            seed = int.from_bytes(
+                hashlib.sha256(fn.__qualname__.encode()).digest()[:8], "big")
+            rng = np.random.default_rng(seed)
+            for i in range(n):
+                drawn = {k: strategy_kwargs[k].example_at(i, rng)
+                         for k in names}
+                try:
+                    fn(*args, **fixture_kwargs, **drawn)
+                except Exception as e:
+                    raise AssertionError(
+                        f"{fn.__qualname__} falsified on example {i}: "
+                        f"{drawn!r}") from e
+
+        # pytest must not mistake the strategy kwargs for fixtures: expose
+        # a signature stripped of them (and of the original's params).
+        orig = inspect.signature(fn)
+        params = [p for p in orig.parameters.values() if p.name not in names]
+        wrapper.__signature__ = inspect.Signature(params)
+        del wrapper.__wrapped__
+        wrapper.hypothesis_shim = True
+        return wrapper
+
+    return deco

@@ -14,6 +14,7 @@ import numpy as np
 from jax.sharding import NamedSharding
 from jax.sharding import PartitionSpec as P
 
+from repro import compat
 from repro.configs import get_config, make_plan, smoke_config
 from repro.core.parallel import CommPolicy, ParallelCtx
 from repro.core.taco import TacoConfig
@@ -39,8 +40,7 @@ def check(name, got, want, rel):
 
 def run_pp(mesh_shape, policy, steps=4, micro=4):
     pipe, data, tp = mesh_shape
-    mesh = jax.make_mesh(mesh_shape, ("pipe", "data", "model"),
-                         axis_types=(jax.sharding.AxisType.Auto,) * 3)
+    mesh = compat.make_mesh(mesh_shape, ("pipe", "data", "model"))
     cfg = smoke_config(get_config("gpt-350m"))  # 2 layers; pipe must divide
     import dataclasses
     cfg = dataclasses.replace(cfg, n_layers=pipe * 2)
@@ -73,8 +73,7 @@ def run_pp(mesh_shape, policy, steps=4, micro=4):
 
 
 def run_ref(cfg, steps=4):
-    mesh = jax.make_mesh((1, 1, 1), ("pipe", "data", "model"),
-                         axis_types=(jax.sharding.AxisType.Auto,) * 3)
+    mesh = compat.make_mesh((1, 1, 1), ("pipe", "data", "model"))
     plan = make_plan(cfg, 1, 1, remat=False)
     model = Model(cfg, plan, fsdp_axes=("data",), tp_axis="model")
     ctx = ParallelCtx(tp_axis="model", fsdp_axes=("data",),

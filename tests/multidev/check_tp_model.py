@@ -11,8 +11,10 @@ os.environ.setdefault("XLA_FLAGS", "--xla_force_host_platform_device_count=8")
 import jax
 import jax.numpy as jnp
 import numpy as np
-from jax import shard_map
+from repro.compat import shard_map
 from jax.sharding import NamedSharding
+
+from repro import compat
 from jax.sharding import PartitionSpec as P
 
 from repro.configs import get_config, make_plan, smoke_config
@@ -94,7 +96,7 @@ def run_loss(mesh_shape, name, policy, seed=0, with_grad=False):
             sq = jnp.zeros((), jnp.float32)
             specs = model.specs()
             from repro.models.layers import ParamSpec
-            flat_g = jax.tree.leaves_with_path(g)
+            flat_g = compat.tree_leaves_with_path(g)
             flat_s = jax.tree.leaves(
                 specs, is_leaf=lambda x: isinstance(x, ParamSpec))
             for (path, gv), sv in zip(flat_g, flat_s):
@@ -156,7 +158,7 @@ def run_loss_padshard(name):
     batch = {k: jax.device_put(v, NamedSharding(mesh, bspecs[k]))
              for k, v in batch.items()}
     from repro.core.collectives import psum_exact
-    from jax import shard_map as _sm
+    from repro.compat import shard_map as _sm
     from jax.sharding import PartitionSpec as _P
     ctx = ParallelCtx(policy=BASE)
 
