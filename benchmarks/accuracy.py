@@ -28,9 +28,8 @@ import numpy as np
 
 from benchmarks.common import emit
 from repro.configs import get_config, make_plan, smoke_config
-from repro.core.codecs import TacoCodec, TahQuantCodec
-from repro.core.parallel import CommPolicy, ParallelCtx
-from repro.core.taco import TacoConfig
+from repro.core.parallel import ParallelCtx
+from repro.core.registry import from_spec
 from repro.data.pipeline import DataConfig, SyntheticLM
 from repro.models.model import Model
 from repro.optim.adamw import OptConfig
@@ -38,31 +37,22 @@ from repro.train.trainer import Trainer, TrainerConfig
 
 STEPS = 220
 
+# the paper's ablation grid as declarative comm-plan specs
+SPECS = {
+    "baseline": "baseline",
+    "taco": "tp=taco:jnp",
+    "tahquant_tp": "tp=tahquant",
+    "nvfp8": "tp=taco:jnp:notransform:tensorscale",
+    "ds_only": "tp=taco:jnp:notransform",
+    "ash_only": "tp=taco:jnp:tensorscale",
+    "hadamard_ds": "tp=taco:jnp:hadamard",
+    "ash_int8": "tp=taco:jnp:int8",
+    "ash_e5m2": "tp=taco:jnp:e5m2",
+}
 
-def _policy(kind: str) -> CommPolicy:
-    t = lambda **kw: CommPolicy(  # noqa: E731
-        tp_fwd=TacoCodec(TacoConfig(impl="jnp", **kw)),
-        tp_bwd=TacoCodec(TacoConfig(impl="jnp", **kw)))
-    if kind == "baseline":
-        return CommPolicy.baseline()
-    if kind == "taco":
-        return t()
-    if kind == "tahquant_tp":
-        c = TahQuantCodec()
-        return CommPolicy(tp_fwd=c, tp_bwd=c)
-    if kind == "nvfp8":
-        return t(transform="none", scale_granularity="tensor")
-    if kind == "ds_only":
-        return t(transform="none")
-    if kind == "ash_only":
-        return t(transform="ash", scale_granularity="tensor")
-    if kind == "hadamard_ds":
-        return t(transform="hadamard")
-    if kind == "ash_int8":
-        return t(fmt="int8")
-    if kind == "ash_e5m2":
-        return t(fmt="e5m2")
-    raise ValueError(kind)
+
+def _policy(kind: str):
+    return from_spec(SPECS[kind])
 
 
 def run(out_dir="results/bench", quick=False):
@@ -76,11 +66,10 @@ def run(out_dir="results/bench", quick=False):
                                   global_batch=8), cfg)
     oc = OptConfig(lr_max=1e-3, lr_min=1e-4, warmup_steps=10,
                    total_steps=steps)
-    kinds = ["baseline", "taco", "tahquant_tp", "nvfp8", "ds_only",
-             "ash_only", "hadamard_ds", "ash_int8", "ash_e5m2"]
+    kinds = list(SPECS)
     finals, curves = {}, {}
     for kind in kinds:
-        ctx = ParallelCtx(policy=_policy(kind))
+        ctx = ParallelCtx(plan=_policy(kind))
         tc = TrainerConfig(total_steps=steps, ckpt_every=10 ** 9,
                            log_every=10 ** 9,
                            ckpt_dir=f"/tmp/bench_acc_{kind}")

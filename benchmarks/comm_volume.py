@@ -12,8 +12,7 @@ from __future__ import annotations
 import numpy as np
 
 from benchmarks.common import emit
-from repro.core.codecs import IdentityCodec, TacoCodec, TahQuantCodec
-from repro.core.taco import TacoConfig
+from repro.core.registry import codec_from_spec
 from repro.configs import get_config
 
 PAPER_SPEEDUP = {  # paper Fig. 15, GPT-6.7B speedup over Ring baseline
@@ -38,11 +37,10 @@ def tp_bytes_per_step(cfg, tp: int, seq: int, batch_local: int, codec):
 
 def run(out_dir="results/bench", quick=False):
     codecs = {
-        "baseline_bf16": IdentityCodec(),
-        "taco_fp8": TacoCodec(TacoConfig(impl="jnp")),
-        "taco_fp8_folded": TacoCodec(TacoConfig(impl="jnp",
-                                                metadata="folded")),
-        "tahquant_int8": TahQuantCodec(),
+        "baseline_bf16": codec_from_spec("none"),
+        "taco_fp8": codec_from_spec("taco:jnp"),
+        "taco_fp8_folded": codec_from_spec("taco:jnp:folded"),
+        "tahquant_int8": codec_from_spec("tahquant"),
     }
     for arch in ["gpt-2.7b", "gpt-6.7b"]:
         cfg = get_config(arch)

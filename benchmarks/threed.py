@@ -16,9 +16,7 @@ from __future__ import annotations
 from benchmarks.common import emit
 from benchmarks.comm_volume import tp_bytes_per_step
 from repro.configs import get_config
-from repro.core.codecs import (IdentityCodec, Sdp4BitCodec, TacoCodec,
-                               TahQuantCodec)
-from repro.core.taco import TacoConfig
+from repro.core.registry import codec_from_spec
 
 PEAK = 197e12
 ICI = 50e9
@@ -49,10 +47,10 @@ def step_time(cfg, tp_codec, pp_codec, dp_codec):
 
 
 def run(out_dir="results/bench", quick=False):
-    ident = IdentityCodec()
-    taco = TacoCodec(TacoConfig(impl="jnp"))
-    tah = TahQuantCodec()
-    sdp = Sdp4BitCodec()
+    ident = codec_from_spec("none")
+    taco = codec_from_spec("taco:jnp")
+    tah = codec_from_spec("tahquant")
+    sdp = codec_from_spec("sdp4bit")
     for arch in ["gpt-2.7b", "gpt-6.7b", "gpt-13b"]:
         cfg = get_config(arch)
         n = cfg.param_count

@@ -20,7 +20,8 @@ def capture_tp_tensor():
     """Row-parallel partial output of a real (smoke) attention layer."""
     from jax.sharding import PartitionSpec as P
     from repro.compat import make_mesh, shard_map
-    from repro.core.parallel import CommPolicy, ParallelCtx
+    from repro.core.parallel import ParallelCtx
+    from repro.core.registry import from_spec
     from repro.models.model import Model
     from repro.models import attention as attn_mod
     from repro.models.transformer import layer_segments
@@ -30,7 +31,7 @@ def capture_tp_tensor():
     plan = make_plan(cfg, 1, 1, remat=False)
     model = Model(cfg, plan)
     params = model.init(jax.random.PRNGKey(3))
-    ctx = ParallelCtx(policy=CommPolicy.baseline())
+    ctx = ParallelCtx(plan=from_spec("baseline"))
     rng = np.random.default_rng(0)
     x = jnp.asarray(rng.normal(0, 1, (2, 128, cfg.d_model)), jnp.bfloat16)
 

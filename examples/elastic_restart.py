@@ -13,7 +13,8 @@ import jax
 import numpy as np
 
 from repro.configs import get_config, make_plan, smoke_config
-from repro.core.parallel import CommPolicy, ParallelCtx
+from repro.core.parallel import ParallelCtx
+from repro.core.registry import from_spec
 from repro.data.pipeline import DataConfig, SyntheticLM
 from repro.launch.mesh import make_mesh
 from repro.models.model import Model
@@ -31,7 +32,7 @@ def main():
     cfg = smoke_config(get_config("qwen2-0.5b"))
     plan = make_plan(cfg, 1, 1)
     model = Model(cfg, plan)
-    ctx = ParallelCtx(policy=CommPolicy.baseline())
+    ctx = ParallelCtx(plan=from_spec("baseline"))
     oc = OptConfig(lr_max=1e-3, warmup_steps=3, total_steps=16)
     data = SyntheticLM(DataConfig(vocab_size=cfg.vocab_size, seq_len=64,
                                   global_batch=8), cfg)

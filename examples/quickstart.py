@@ -5,8 +5,8 @@
 import jax
 
 from repro.configs import get_config, make_plan, smoke_config
-from repro.core.parallel import CommPolicy, ParallelCtx
-from repro.core.taco import TacoConfig
+from repro.core.parallel import ParallelCtx
+from repro.core.registry import from_spec
 from repro.data.pipeline import DataConfig, SyntheticLM
 from repro.launch.mesh import make_mesh
 from repro.models.model import Model
@@ -20,8 +20,9 @@ def main():
     plan = make_plan(cfg, tp=1, fsdp=1)
     model = Model(cfg, plan)
 
-    # full TACO policy: FP8 E4M3, ASH block 256, dual-scale metadata
-    ctx = ParallelCtx(policy=CommPolicy.taco(TacoConfig(impl="jnp")))
+    # full TACO plan: FP8 E4M3, ASH block 256, dual-scale metadata — one
+    # declarative spec string instead of hand-wired codec objects
+    ctx = ParallelCtx(plan=from_spec("tp=taco:jnp"))
 
     data = SyntheticLM(DataConfig(vocab_size=cfg.vocab_size, seq_len=64,
                                   global_batch=8), cfg)

@@ -14,8 +14,8 @@ from repro.compat import shard_map
 from jax.sharding import PartitionSpec as P
 
 from repro.configs import get_config, make_plan, smoke_config
-from repro.core.parallel import CommPolicy, ParallelCtx
-from repro.core.taco import TacoConfig
+from repro.core.parallel import ParallelCtx
+from repro.core.registry import from_spec
 from repro.launch.mesh import make_mesh
 from repro.models.model import Model
 from repro.serve import serve_step as ss
@@ -27,7 +27,10 @@ def main():
     ap.add_argument("--batch", type=int, default=4)
     ap.add_argument("--prompt-len", type=int, default=16)
     ap.add_argument("--gen", type=int, default=32)
-    ap.add_argument("--no-compress", action="store_true")
+    ap.add_argument("--comm-spec", dest="comm_spec", default="tp=taco:jnp",
+                    help="compression plan spec (docs/COMPRESSION.md)")
+    ap.add_argument("--no-compress", action="store_true",
+                    help="shorthand for --comm-spec baseline")
     args = ap.parse_args()
 
     mesh = make_mesh((1, 1, 1), ("pod", "data", "model"))
@@ -35,9 +38,8 @@ def main():
     plan = make_plan(cfg, tp=1, fsdp=1, remat=False)
     model = Model(cfg, plan)
     params = model.init(jax.random.PRNGKey(0))
-    policy = CommPolicy.baseline() if args.no_compress else \
-        CommPolicy.taco(TacoConfig(impl="jnp"))
-    ctx = ParallelCtx(policy=policy, tp_mode="allreduce")
+    comm_plan = from_spec("baseline" if args.no_compress else args.comm_spec)
+    ctx = ParallelCtx(plan=comm_plan, tp_mode="allreduce")
 
     max_len = args.prompt_len + args.gen
     cache = ss.init_cache(model, args.batch, max_len=max(64, max_len))

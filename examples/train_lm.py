@@ -15,8 +15,8 @@ import logging
 
 from repro.configs import get_config, make_plan, smoke_config
 from repro.configs.base import ArchConfig
-from repro.core.parallel import CommPolicy, ParallelCtx
-from repro.core.taco import TacoConfig
+from repro.core.parallel import ParallelCtx
+from repro.core.registry import from_spec, to_spec
 from repro.data.pipeline import DataConfig, SyntheticLM
 from repro.launch.mesh import make_mesh
 from repro.models.model import Model
@@ -37,7 +37,12 @@ def main():
     ap.add_argument("--seq", type=int, default=512)
     ap.add_argument("--batch", type=int, default=8)
     ap.add_argument("--ckpt", default="/tmp/train_lm_ckpt")
-    ap.add_argument("--no-compress", action="store_true")
+    ap.add_argument("--comm-spec", dest="comm_spec",
+                    default="tp=taco:jnp,grad_rs=sdp4bit",
+                    help="compression plan spec (e.g. 'baseline', "
+                         "'tp=taco:folded,warmup=20'; docs/COMPRESSION.md)")
+    ap.add_argument("--no-compress", action="store_true",
+                    help="shorthand for --comm-spec baseline")
     args = ap.parse_args()
 
     logging.basicConfig(level=logging.INFO,
@@ -50,9 +55,9 @@ def main():
     print(f"params ~{cfg.param_count/1e6:.1f}M  seq={seq} "
           f"batch={args.batch} steps={args.steps}")
 
-    policy = CommPolicy.baseline() if args.no_compress else \
-        CommPolicy.taco(TacoConfig(impl="jnp"), compress_dp=True)
-    ctx = ParallelCtx(policy=policy)
+    comm_plan = from_spec("baseline" if args.no_compress else args.comm_spec)
+    print(f"comm spec: {to_spec(comm_plan)}")
+    ctx = ParallelCtx(plan=comm_plan)
     data = SyntheticLM(DataConfig(vocab_size=cfg.vocab_size, seq_len=seq,
                                   global_batch=args.batch), cfg)
     oc = OptConfig(lr_max=3e-4, lr_min=3e-5, warmup_steps=20,

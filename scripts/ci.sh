@@ -16,6 +16,15 @@ if [[ "${1:-}" == "--fast" ]]; then
     shift
 fi
 
+# Fail-fast gate: the compat shims and the codec-registry/spec-grammar
+# contract run first (~seconds; the jit/HLO-lowering registry test is
+# excluded here) — grammar or shim breakage surfaces before the expensive
+# model/train tests spin up. The gate files run again in the main
+# invocation below: that duplication is deliberate, so the final pytest
+# summary line still counts the complete suite.
+python -m pytest -x -q tests/test_compat.py tests/test_registry.py \
+    -k "not hlo"
+
 # pytest aborts before running anything and exits 2 on collection errors,
 # so a single invocation is both the collection gate and the test run
 exec python -m pytest "${ARGS[@]}" "$@"

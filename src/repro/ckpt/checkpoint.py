@@ -30,13 +30,23 @@ from repro import compat
 MANIFEST = "manifest.json"
 
 
+class CommSpecMismatch(ValueError):
+    """Checkpoint was written under a different compression plan than the
+    one the restoring run is configured with."""
+
+
 def _leaf_paths(tree):
     flat = compat.tree_leaves_with_path(tree)
     return [(compat.keystr(path), leaf) for path, leaf in flat]
 
 
-def save(ckpt_dir: str, step: int, state: dict, *, keep_last: int = 3):
-    """state: pytree of arrays (params/opt_state/metadata)."""
+def save(ckpt_dir: str, step: int, state: dict, *, keep_last: int = 3,
+         comm_spec: str | None = None):
+    """state: pytree of arrays (params/opt_state/metadata).
+
+    ``comm_spec``: the run's normalized compression-plan spec (see
+    repro.core.registry.to_spec); persisted in the manifest so a restore
+    can validate the restoring run uses a compatible plan."""
     os.makedirs(ckpt_dir, exist_ok=True)
     final = os.path.join(ckpt_dir, f"step_{step:08d}")
     tmp = final + ".tmp"
@@ -54,6 +64,8 @@ def save(ckpt_dir: str, step: int, state: dict, *, keep_last: int = 3):
         names.append({"key": name, "file": fn,
                       "dtype": str(arr.dtype), "shape": list(arr.shape)})
     manifest = {"step": step, "time": time.time(), "leaves": names}
+    if comm_spec is not None:
+        manifest["comm_spec"] = comm_spec
     mpath = os.path.join(tmp, MANIFEST)
     with open(mpath, "w") as f:
         json.dump(manifest, f)
@@ -84,11 +96,32 @@ def latest_step(ckpt_dir: str) -> int | None:
     return max(steps) if steps else None
 
 
+def read_comm_spec(ckpt_dir: str, step: int | None = None) -> str | None:
+    """The compression-plan spec a checkpoint was saved under (None for
+    pre-spec checkpoints or when no checkpoint exists)."""
+    if step is None:
+        step = latest_step(ckpt_dir)
+        if step is None:
+            return None
+    d = os.path.join(ckpt_dir, f"step_{step:08d}")
+    try:
+        with open(os.path.join(d, MANIFEST)) as f:
+            return json.load(f).get("comm_spec")
+    except FileNotFoundError:
+        return None
+
+
 def restore(ckpt_dir: str, template, step: int | None = None,
-            mesh=None, pspecs=None):
+            mesh=None, pspecs=None, expect_comm_spec: str | None = None):
     """Restore into the structure of ``template`` (pytree of arrays or
     ShapeDtypeStructs). If (mesh, pspecs) given, leaves are placed with the
-    NEW sharding — elastic restart onto a different topology."""
+    NEW sharding — elastic restart onto a different topology.
+
+    ``expect_comm_spec``: when given AND the manifest recorded a spec,
+    the two normalized specs must match — raises CommSpecMismatch
+    otherwise (resuming under a silently different compression plan breaks
+    bitwise replay and loss-trajectory comparability).  Checkpoints from
+    before spec persistence restore without validation."""
     if step is None:
         step = latest_step(ckpt_dir)
         if step is None:
@@ -96,6 +129,13 @@ def restore(ckpt_dir: str, template, step: int | None = None,
     d = os.path.join(ckpt_dir, f"step_{step:08d}")
     with open(os.path.join(d, MANIFEST)) as f:
         manifest = json.load(f)
+    saved_spec = manifest.get("comm_spec")
+    if expect_comm_spec is not None and saved_spec is not None \
+            and saved_spec != expect_comm_spec:
+        raise CommSpecMismatch(
+            f"checkpoint {d} was saved with comm spec {saved_spec!r} but "
+            f"this run is configured with {expect_comm_spec!r}; pass the "
+            "matching --comm-spec (or start a fresh run / resume=False)")
     leaves_meta = manifest["leaves"]
     flat, treedef = compat.tree_flatten(template)
     assert len(flat) == len(leaves_meta), \

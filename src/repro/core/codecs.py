@@ -43,7 +43,14 @@ class IdentityCodec:
         return enc[0].astype(dtype)
 
     def decode_sum(self, enc, n, dtype):
-        return jnp.sum(enc[0], axis=0).astype(dtype)
+        # Accumulate the peer axis in f32 (not the bf16 wire dtype): the
+        # uncompressed reduce-scatter baseline must not lose low-order
+        # gradient mass to bf16 sequential summation.
+        x = enc[0]
+        if jnp.issubdtype(x.dtype, jnp.floating) and \
+                jnp.finfo(x.dtype).bits < 32:
+            x = x.astype(jnp.float32)
+        return jnp.sum(x, axis=0).astype(dtype)
 
     def bytes_per_element(self, in_dtype=jnp.bfloat16) -> float:
         return np.dtype(in_dtype).itemsize

@@ -1,4 +1,4 @@
-"""Parallelism context: axis names + per-path codec policy.
+"""Parallelism context: axis names + declarative per-path codec plan.
 
 Models never call lax collectives directly; they go through a
 ``ParallelCtx`` so that every communication site in the framework is a
@@ -8,50 +8,120 @@ named, compressible path (paper Fig. 7 integration points):
   grad_rs         : DP/fsdp gradient reduce-scatter  -> SDP4bit-style int4
   weight_ag       : fsdp weight all-gather           -> optional int8
   pp              : pipeline stage boundaries        -> TahQuant-style int8
+
+The policy itself is a :class:`CommPlan` — a frozen, hashable mapping of
+paths to codecs plus two scheduling dimensions (paper §5.5 + SDP4bit /
+TahQuant, see PAPERS.md):
+
+  * per-layer overrides: ``skip_first``/``skip_last`` keep the first/last
+    N transformer layers TP-uncompressed.  ``layer_spans`` resolves them
+    to a STATIC tuple of contiguous (count, plan) spans at trace time, so
+    every jit cache key is a plain hashable plan and lax.scan segments
+    stay homogeneous;
+  * a step-based warmup: ``at_step`` returns the identity plan for the
+    first ``warmup_steps`` optimizer steps, then the configured plan.
+    The trainer resolves this OUTSIDE jit (two compiled step functions at
+    most — plans are stable dict keys).
+
+Plans are built from compact spec strings via ``repro.core.registry``
+(``from_spec``/``to_spec``); nothing outside ``core/`` constructs codec
+dataclasses directly.
 """
 from __future__ import annotations
 
 import dataclasses
 
+from repro import compat
 from repro.core import collectives as cc
-from repro.core.codecs import (IdentityCodec, Sdp4BitCodec, TacoCodec,
-                               TahQuantCodec)
-from repro.core.taco import TacoConfig
+from repro.core.codecs import IdentityCodec
 
 Identity = IdentityCodec()
 
+# The named communication paths of the 3D-parallel stack (= CommPlan codec
+# fields; the registry's spec grammar accepts exactly these plus "tp").
+PATHS = ("tp_fwd", "tp_bwd", "grad_rs", "weight_ag", "pp")
+
 
 @dataclasses.dataclass(frozen=True)
-class CommPolicy:
+class CommPlan:
+    """Frozen per-path compression plan (hashable; closed over by jit)."""
+
     tp_fwd: object = Identity
     tp_bwd: object = Identity
     grad_rs: object = Identity
     weight_ag: object = Identity
     pp: object = Identity
+    skip_first: int = 0      # first N layers: TP identity
+    skip_last: int = 0       # last N layers: TP identity
+    warmup_steps: int = 0    # identity plan for the first K steps
 
-    @staticmethod
-    def baseline() -> "CommPolicy":
-        """Uncompressed bf16 everywhere (paper's Baseline w/o Comp)."""
-        return CommPolicy()
+    # ---- schedule resolution (all static / Python-level) ------------------
+    @property
+    def tp_identity(self) -> bool:
+        return self.tp_fwd == Identity and self.tp_bwd == Identity
 
-    @staticmethod
-    def taco(taco_cfg: TacoConfig | None = None,
-             compress_dp: bool = False,
-             compress_pp: bool = False) -> "CommPolicy":
-        """TP compressed with TACO; optionally the full 3D policy of §5.5
-        (TACO + SDP4bit-style DP + TahQuant-style PP)."""
-        t = TacoCodec(taco_cfg or TacoConfig())
-        return CommPolicy(
-            tp_fwd=t,
-            tp_bwd=t,
-            grad_rs=Sdp4BitCodec() if compress_dp else Identity,
-            pp=TahQuantCodec() if compress_pp else Identity,
-        )
+    def steady(self) -> "CommPlan":
+        """The plan with the step schedule stripped (what runs after
+        warmup; a stable jit/dict key)."""
+        if self.warmup_steps == 0:
+            return self
+        return dataclasses.replace(self, warmup_steps=0)
+
+    def at_step(self, step: int) -> "CommPlan":
+        """Resolve the warmup schedule at an optimizer step: the identity
+        plan before ``warmup_steps``, the steady plan afterwards."""
+        if step < self.warmup_steps:
+            return CommPlan()
+        return self.steady()
+
+    def layer_spans(self, start: int, count: int,
+                    total: int) -> tuple[tuple[int, "CommPlan"], ...]:
+        """Per-layer overrides resolved to contiguous spans.
+
+        For a run of ``count`` layers beginning at absolute layer index
+        ``start`` in a stack of ``total`` layers, returns a static tuple of
+        ``(span_count, plan)`` covering the run in order, where layers in
+        [0, skip_first) or [total - skip_last, total) get the TP-identity
+        variant of this plan.  With no overrides this is ``((count,
+        self),)`` — the exact object, so jit keys are unchanged.
+        """
+        if count <= 0:
+            return ()
+        lo = min(self.skip_first, total)
+        hi = max(total - self.skip_last, lo)
+        if (self.skip_first == 0 and self.skip_last == 0) or \
+                self.tp_identity:
+            return ((count, self),)
+        skipped = dataclasses.replace(self, tp_fwd=Identity,
+                                      tp_bwd=Identity)
+        spans: list[tuple[int, CommPlan]] = []
+        for a, b, plan in ((start, min(start + count, lo), skipped),
+                           (max(start, lo), min(start + count, hi), self),
+                           (max(start, hi), start + count, skipped)):
+            n = b - a
+            if n > 0:
+                if spans and spans[-1][1] == plan:
+                    spans[-1] = (spans[-1][0] + n, plan)
+                else:
+                    spans.append((n, plan))
+        return tuple(spans)
+
+    def layer_plans(self, total: int) -> tuple["CommPlan", ...]:
+        """The fully-expanded static per-layer plan tuple (one entry per
+        layer; mostly for tests/telemetry — trace-time code uses spans)."""
+        return tuple(plan for n, plan in self.layer_spans(0, total, total)
+                     for _ in range(n))
+
+    # ---- telemetry --------------------------------------------------------
+    def wire_bytes_per_element(self) -> dict:
+        """Per-path wire bytes per bf16 element (2.0 = uncompressed)."""
+        return {path: float(getattr(self, path).bytes_per_element())
+                for path in PATHS}
 
 
 @dataclasses.dataclass(frozen=True)
 class ParallelCtx:
-    """Axis naming + codec policy, passed through the model stack.
+    """Axis naming + codec plan, passed through the model stack.
 
     All methods must be called inside ``shard_map`` over a mesh containing
     the named axes. Axes of size 1 are fine (single-device tests).
@@ -60,28 +130,41 @@ class ParallelCtx:
     tp_axis: str = "model"
     fsdp_axes: tuple = ("pod", "data")
     pp_axis: str | None = None
-    policy: CommPolicy = CommPolicy()
+    plan: CommPlan = CommPlan()
     tp_mode: str = "sp"  # "sp" (AllGather/ReduceScatter) | "allreduce" (f/g)
+
+    # ---- per-layer views --------------------------------------------------
+    def layer_views(self, start: int, count: int,
+                    total: int) -> tuple[tuple[int, "ParallelCtx"], ...]:
+        """Static per-layer ``ParallelCtx`` spans for a run of ``count``
+        layers at absolute offset ``start`` in a stack of ``total``: a
+        tuple of ``(span_count, ctx)``.  With no per-layer overrides this
+        is ``((count, self),)`` with ``self`` unchanged (identical jit
+        keys)."""
+        return tuple(
+            (n, self if plan is self.plan
+             else dataclasses.replace(self, plan=plan))
+            for n, plan in self.plan.layer_spans(start, count, total))
 
     # ---- TP: sequence-parallel conjugate pair (Megatron-SP; the paper's
     # two-shot decomposition is the native communication pattern here).
     def sp_gather(self, x, dim: int):
         return cc.all_gather_c(x, self.tp_axis, dim,
-                               self.policy.tp_fwd, self.policy.tp_bwd)
+                               self.plan.tp_fwd, self.plan.tp_bwd)
 
     def sp_scatter(self, x, dim: int):
         return cc.psum_scatter_c(x, self.tp_axis, dim,
-                                 self.policy.tp_fwd, self.policy.tp_bwd)
+                                 self.plan.tp_fwd, self.plan.tp_bwd)
 
     # ---- TP: AllReduce conjugate pair (classic Megatron mode; also the
     # decode path where seq==1 cannot be scattered).
     def tp_g(self, x):
         return cc.allreduce_g(x, self.tp_axis,
-                              self.policy.tp_fwd, self.policy.tp_bwd)
+                              self.plan.tp_fwd, self.plan.tp_bwd)
 
     def tp_f(self, x):
         return cc.copy_f(x, self.tp_axis,
-                         self.policy.tp_fwd, self.policy.tp_bwd)
+                         self.plan.tp_fwd, self.plan.tp_bwd)
 
     # ---- fsdp: weight gather (fwd) whose autodiff transpose is the DP
     # gradient reduce-scatter (bwd) — ZeRO falls out of the chain rule.
@@ -89,12 +172,35 @@ class ParallelCtx:
         if not self.fsdp_axes:
             return w
         return cc.all_gather_c(w, self.fsdp_axes, dim,
-                               self.policy.weight_ag, self.policy.grad_rs)
+                               self.plan.weight_ag, self.plan.grad_rs)
 
     # ---- MoE expert-parallel dispatch (paper's compressed AlltoAll).
     def ep_all_to_all(self, x, split_dim: int, concat_dim: int):
         return cc.all_to_all_c(x, self.tp_axis, split_dim, concat_dim,
-                               self.policy.tp_fwd, self.policy.tp_bwd)
+                               self.plan.tp_fwd, self.plan.tp_bwd)
 
     # ---- PP boundary send (ppermute with codec) lives in
     # train/pipeline_parallel.py; exposed there to keep this file lean.
+
+
+def iter_layer_spans(ctx: ParallelCtx, start: int, count: int, total: int,
+                     *trees):
+    """Iterate a layer run's static CommPlan spans together with the
+    matching slices of layer-stacked pytrees.
+
+    Yields ``(span_count, span_ctx, *sliced_trees)`` for each contiguous
+    span from ``ctx.layer_views``; each tree in ``trees`` is stacked
+    (layer-major dim 0) and sliced to the span's layers.  The single
+    full-run span passes the trees through untouched — the common
+    no-override case adds zero tracing work.  Shared by the train forward
+    (models/transformer.py) and the serve decode path.
+    """
+    off = 0
+    for span_n, span_ctx in ctx.layer_views(start, count, total):
+        if span_n == count:
+            yield (span_n, span_ctx) + trees
+        else:
+            sl = lambda a, o=off, n=span_n: a[o:o + n]  # noqa: E731
+            yield (span_n, span_ctx) + tuple(
+                compat.tree_map(sl, t) for t in trees)
+        off += span_n

@@ -1,0 +1,386 @@
+"""Codec registry + the declarative compression-plan spec grammar.
+
+Every compression policy in the framework is expressible as a compact
+string spec that parses to a frozen, hashable :class:`~repro.core.parallel.
+CommPlan` and round-trips back to a normalized string (``from_spec`` /
+``to_spec``).  This is the single registration point for codecs: models,
+train, serve, launch, checkpoint, and benchmarks never construct codec
+dataclasses directly (enforced by the grep-discipline test in
+tests/test_compat.py).
+
+Grammar::
+
+    spec   := alias | item ("," item)*
+    item   := path "=" codec | knob "=" int
+    path   := "tp" | "tp_fwd" | "tp_bwd" | "grad_rs" | "weight_ag" | "pp"
+    knob   := "skip_first" | "skip_last" | "warmup"
+    codec  := name (":" arg)*
+
+``tp=X`` assigns both TP directions at once.  Knobs: ``skip_first``/
+``skip_last`` keep the first/last N transformer layers TP-uncompressed
+(resolved to a static per-layer span tuple at trace time so jit caches
+stay keyed correctly); ``warmup`` runs the identity plan for the first K
+optimizer steps (resolved per-step by the trainer, outside jit).
+
+Codec args (all optional; normalized output only emits non-defaults):
+
+    taco      e4m3|e5m2|int8, b<N> (block), g<N> (quant group),
+              dual|folded, ash|hadamard|notransform, blockscale|tensorscale,
+              auto|jnp|pallas|pallas_interpret, cd<dtype> (compute dtype),
+              tau<float>, eps<float>, disabled
+    sdp4bit   b<N> (block), norot
+    tahquant  g<N> (group)
+    int8      g<N> (group)
+    none      no args ("identity" is a whole-spec alias, not a codec name)
+
+Examples::
+
+    tp=taco:e4m3:b256:folded,grad_rs=sdp4bit,pp=tahquant,weight_ag=none
+    tp=taco,skip_first=2,skip_last=2,warmup=100
+    baseline | taco | taco3d | taco_folded          (whole-spec aliases)
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Protocol, runtime_checkable
+
+from repro.core.codecs import (IdentityCodec, Int8Codec, Sdp4BitCodec,
+                               TacoCodec, TahQuantCodec)
+from repro.core.parallel import PATHS, CommPlan
+from repro.core.taco import TacoConfig
+
+__all__ = [
+    "Codec", "CommSpecError", "register_codec", "get_codec", "list_codecs",
+    "codec_from_spec", "codec_to_spec", "from_spec", "to_spec",
+    "register_alias", "list_aliases",
+]
+
+
+class CommSpecError(ValueError):
+    """Malformed or unknown compression spec."""
+
+
+@runtime_checkable
+class Codec(Protocol):
+    """The wire-codec protocol every registered codec implements.
+
+    ``encode`` maps a 2-D ``(slots, n)`` array (``n`` a static multiple of
+    ``granule``) to a tuple of wire arrays; ``decode`` inverts; and
+    ``decode_sum`` reduces a stacked peer axis during ReduceScatter.
+    """
+
+    @property
+    def granule(self) -> int: ...
+
+    def encode(self, x): ...
+
+    def decode(self, enc, n, dtype): ...
+
+    def decode_sum(self, enc, n, dtype): ...
+
+    def bytes_per_element(self, in_dtype=None) -> float: ...
+
+
+# --------------------------------------------------------------------------
+# registry core
+# --------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class CodecEntry:
+    name: str
+    cls: type
+    parse: Callable        # (args: tuple[str, ...]) -> codec instance
+    unparse: Callable      # (codec) -> tuple[str, ...] of normalized args
+
+
+_CODECS: dict[str, CodecEntry] = {}
+_CODEC_NAME_BY_CLS: dict[type, str] = {}
+_ALIASES: dict[str, str] = {}
+
+
+def register_codec(name: str, cls: type, parse: Callable,
+                   unparse: Callable) -> None:
+    """Register a wire codec under ``name``.
+
+    ``parse(args)`` builds an instance from colon-separated spec args;
+    ``unparse(codec)`` emits the normalized (non-default, fixed-order)
+    args so that ``parse(unparse(c)) == c`` for every instance of ``cls``.
+    """
+    if name in _CODECS:
+        raise ValueError(f"codec {name!r} already registered")
+    _CODECS[name] = CodecEntry(name, cls, parse, unparse)
+    _CODEC_NAME_BY_CLS.setdefault(cls, name)
+
+
+def get_codec(name: str) -> CodecEntry:
+    try:
+        return _CODECS[name]
+    except KeyError:
+        raise CommSpecError(
+            f"unknown codec {name!r}; registered: {sorted(_CODECS)}") from None
+
+
+def list_codecs() -> list[str]:
+    return sorted(_CODECS)
+
+
+def register_alias(name: str, spec: str) -> None:
+    """Register a whole-spec alias (e.g. ``taco3d``)."""
+    _ALIASES[name] = spec
+
+
+def list_aliases() -> dict[str, str]:
+    return dict(_ALIASES)
+
+
+def codec_from_spec(spec: str):
+    """``"taco:e4m3:b256"`` -> codec instance."""
+    parts = spec.strip().split(":")
+    name, args = parts[0], tuple(parts[1:])
+    entry = get_codec(name)
+    try:
+        return entry.parse(args)
+    except CommSpecError:
+        raise
+    except Exception as e:  # noqa: BLE001 — surface as a spec error
+        raise CommSpecError(f"bad args for codec {name!r}: {spec!r} ({e})") \
+            from e
+
+
+def codec_to_spec(codec) -> str:
+    """Codec instance -> normalized spec string (inverse of
+    :func:`codec_from_spec`)."""
+    name = _CODEC_NAME_BY_CLS.get(type(codec))
+    if name is None:
+        raise CommSpecError(f"codec class {type(codec).__name__} is not "
+                            "registered")
+    args = _CODECS[name].unparse(codec)
+    return ":".join((name,) + tuple(args))
+
+
+# --------------------------------------------------------------------------
+# built-in codec parsers/unparsers
+# --------------------------------------------------------------------------
+
+def _no_args(args, name):
+    if args:
+        raise CommSpecError(f"codec {name!r} takes no args, got {args}")
+
+
+def _parse_identity(args):
+    _no_args(args, "none")
+    return IdentityCodec()
+
+
+_TACO_FMT = ("e4m3", "e5m2", "int8")
+_TACO_TRANSFORM = {"ash": "ash", "hadamard": "hadamard",
+                   "notransform": "none"}
+_TACO_SCALE = {"blockscale": "block", "tensorscale": "tensor"}
+_TACO_IMPL = ("auto", "jnp", "pallas", "pallas_interpret")
+_TACO_META = ("dual", "folded")
+
+
+def _pos_int(tok, prefix):
+    """Strictly positive <prefix><N> arg (b0/g0 would crash at trace
+    time with an opaque ZeroDivisionError — reject at parse time)."""
+    n = int(tok[len(prefix):])
+    if n <= 0:
+        raise CommSpecError(f"arg {tok!r}: size must be >= 1")
+    return n
+
+
+def _parse_taco(args):
+    kw = {}
+
+    def put(key, val, tok):
+        if key in kw:
+            raise CommSpecError(f"duplicate taco arg {tok!r}")
+        kw[key] = val
+
+    for tok in args:
+        if tok in _TACO_FMT:
+            put("fmt", tok, tok)
+        elif tok in _TACO_META:
+            put("metadata", tok, tok)
+        elif tok in _TACO_TRANSFORM:
+            put("transform", _TACO_TRANSFORM[tok], tok)
+        elif tok in _TACO_SCALE:
+            put("scale_granularity", _TACO_SCALE[tok], tok)
+        elif tok in _TACO_IMPL:
+            put("impl", tok, tok)
+        elif tok.startswith("b") and tok[1:].isdigit():
+            put("block_size", _pos_int(tok, "b"), tok)
+        elif tok.startswith("g") and tok[1:].isdigit():
+            put("quant_group_size", _pos_int(tok, "g"), tok)
+        elif tok.startswith("cd"):
+            put("compute_dtype", tok[2:], tok)
+        elif tok.startswith("tau"):
+            put("tau", float(tok[3:]), tok)
+        elif tok.startswith("eps"):
+            put("eps", float(tok[3:]), tok)
+        elif tok == "disabled":
+            put("enabled", False, tok)
+        else:
+            raise CommSpecError(f"unknown taco arg {tok!r}")
+    # invalid combinations (e.g. tensorscale + g<N>) raise ValueError in
+    # TacoConfig.__post_init__; codec_from_spec wraps that as CommSpecError
+    return TacoCodec(TacoConfig(**kw))
+
+
+def _unparse_taco(codec):
+    cfg, ref = codec.cfg, TacoConfig()
+    out = []
+    if not cfg.enabled:
+        out.append("disabled")
+    if cfg.fmt != ref.fmt:
+        out.append(cfg.fmt)
+    if cfg.block_size != ref.block_size:
+        out.append(f"b{cfg.block_size}")
+    if cfg.quant_group_size != ref.quant_group_size:
+        out.append(f"g{cfg.quant_group_size}")
+    if cfg.metadata != ref.metadata:
+        out.append(cfg.metadata)
+    if cfg.transform != ref.transform:
+        out.append({v: k for k, v in _TACO_TRANSFORM.items()}[cfg.transform])
+    if cfg.scale_granularity != ref.scale_granularity:
+        out.append({v: k for k, v in _TACO_SCALE.items()}
+                   [cfg.scale_granularity])
+    if cfg.impl != ref.impl:
+        out.append(cfg.impl)
+    if cfg.compute_dtype != ref.compute_dtype:
+        out.append(f"cd{cfg.compute_dtype}")
+    if cfg.tau != ref.tau:
+        out.append(f"tau{cfg.tau!r}")
+    if cfg.eps != ref.eps:
+        out.append(f"eps{cfg.eps!r}")
+    return tuple(out)
+
+
+def _parse_sdp4bit(args):
+    kw = {}
+    for tok in args:
+        if tok.startswith("b") and tok[1:].isdigit():
+            kw["block"] = _pos_int(tok, "b")
+        elif tok == "norot":
+            kw["rotate"] = False
+        else:
+            raise CommSpecError(f"unknown sdp4bit arg {tok!r}")
+    return Sdp4BitCodec(**kw)
+
+
+def _unparse_sdp4bit(codec):
+    out = []
+    if codec.block != Sdp4BitCodec().block:
+        out.append(f"b{codec.block}")
+    if not codec.rotate:
+        out.append("norot")
+    return tuple(out)
+
+
+def _make_group_codec(cls, name):
+    def parse(args):
+        kw = {}
+        for tok in args:
+            if tok.startswith("g") and tok[1:].isdigit():
+                kw["group"] = _pos_int(tok, "g")
+            else:
+                raise CommSpecError(f"unknown {name} arg {tok!r}")
+        return cls(**kw)
+
+    def unparse(codec):
+        return (f"g{codec.group}",) if codec.group != cls().group else ()
+
+    return parse, unparse
+
+
+register_codec("none", IdentityCodec, _parse_identity,
+               lambda c: ())
+register_codec("taco", TacoCodec, _parse_taco, _unparse_taco)
+register_codec("sdp4bit", Sdp4BitCodec, _parse_sdp4bit, _unparse_sdp4bit)
+register_codec("tahquant", TahQuantCodec,
+               *_make_group_codec(TahQuantCodec, "tahquant"))
+register_codec("int8", Int8Codec, *_make_group_codec(Int8Codec, "int8"))
+
+register_alias("identity", "baseline")
+register_alias("baseline", "")                  # identity everywhere
+register_alias("taco", "tp=taco")
+register_alias("taco_folded", "tp=taco:folded")
+register_alias("taco3d", "tp=taco,grad_rs=sdp4bit,pp=tahquant")
+
+
+# --------------------------------------------------------------------------
+# plan-level from_spec / to_spec
+# --------------------------------------------------------------------------
+
+_KNOBS = {"skip_first": "skip_first", "skip_last": "skip_last",
+          "warmup": "warmup_steps"}
+
+
+def from_spec(spec: str) -> CommPlan:
+    """Parse a spec string (or registered alias) into a frozen
+    :class:`CommPlan`."""
+    if not isinstance(spec, str):
+        raise CommSpecError(f"spec must be a string, got {type(spec)}")
+    s = spec.strip()
+    seen_alias = set()
+    while s in _ALIASES:                       # aliases may chain one level
+        if s in seen_alias:
+            raise CommSpecError(f"alias cycle at {s!r}")
+        seen_alias.add(s)
+        s = _ALIASES[s]
+    kwargs: dict = {}
+    for item in filter(None, (p.strip() for p in s.split(","))):
+        if "=" not in item:
+            raise CommSpecError(
+                f"bad spec item {item!r} (expected path=codec or knob=int)")
+        key, _, val = item.partition("=")
+        key, val = key.strip(), val.strip()
+        if key == "tp":
+            codec = codec_from_spec(val)
+            for k in ("tp_fwd", "tp_bwd"):
+                if k in kwargs:
+                    raise CommSpecError(f"'tp=' conflicts with '{k}='")
+                kwargs[k] = codec
+        elif key in PATHS:
+            if key in kwargs:
+                raise CommSpecError(f"duplicate path {key!r}")
+            kwargs[key] = codec_from_spec(val)
+        elif key in _KNOBS:
+            field = _KNOBS[key]
+            if field in kwargs:
+                raise CommSpecError(f"duplicate knob {key!r}")
+            try:
+                n = int(val)
+            except ValueError:
+                raise CommSpecError(
+                    f"knob {key!r} needs an integer, got {val!r}") from None
+            if n < 0:
+                raise CommSpecError(f"knob {key!r} must be >= 0, got {n}")
+            kwargs[field] = n
+        else:
+            raise CommSpecError(
+                f"unknown spec key {key!r}; paths: {sorted(PATHS)}, "
+                f"knobs: {sorted(_KNOBS)}")
+    return CommPlan(**kwargs)
+
+
+def to_spec(plan: CommPlan) -> str:
+    """Normalized spec string for ``plan``; ``from_spec(to_spec(p)) == p``
+    and ``to_spec(from_spec(s))`` is idempotent."""
+    parts = []
+    identity = IdentityCodec()
+    if plan.tp_fwd == plan.tp_bwd:
+        if plan.tp_fwd != identity:
+            parts.append(f"tp={codec_to_spec(plan.tp_fwd)}")
+    else:
+        parts.append(f"tp_fwd={codec_to_spec(plan.tp_fwd)}")
+        parts.append(f"tp_bwd={codec_to_spec(plan.tp_bwd)}")
+    for path in ("grad_rs", "weight_ag", "pp"):
+        codec = getattr(plan, path)
+        if codec != identity:
+            parts.append(f"{path}={codec_to_spec(codec)}")
+    for knob, field in _KNOBS.items():
+        v = getattr(plan, field)
+        if v:
+            parts.append(f"{knob}={v}")
+    return ",".join(parts) if parts else "baseline"

@@ -42,7 +42,25 @@ class TacoConfig:
     quant_group_size: int | None = None   # finer-than-block s granularity
     metadata: Literal["dual", "folded"] = "dual"
     impl: Literal["auto", "jnp", "pallas", "pallas_interpret"] = "auto"
-    compute_dtype: object = jnp.float32
+    # Canonical dtype NAME (not a dtype object): every field of the config
+    # — and therefore every CommPlan element that embeds one — is a plain
+    # hashable/serializable value, so jit cache keys and spec round-trips
+    # can never diverge on dtype-object identity.
+    compute_dtype: str = "float32"
+
+    def __post_init__(self):
+        import numpy as np
+        name = np.dtype(self.compute_dtype).name
+        if name != self.compute_dtype:
+            object.__setattr__(self, "compute_dtype", name)
+        if self.scale_granularity == "tensor" and \
+                self.quant_group_size is not None:
+            # a per-tensor scale has no per-group layout; rejecting here
+            # (not just in the spec parser) keeps every constructible
+            # config spec-round-trippable
+            raise ValueError(
+                "scale_granularity='tensor' and quant_group_size are "
+                "mutually exclusive")
 
     @property
     def format_spec(self) -> quant_mod.FormatSpec:

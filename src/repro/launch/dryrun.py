@@ -42,24 +42,25 @@ from jax.sharding import PartitionSpec as P
 from repro import compat
 from repro.configs import (ASSIGNED, SHAPES, applicable, get_config,
                            make_plan)
-from repro.core.parallel import CommPolicy, ParallelCtx
-from repro.core.taco import TacoConfig
+from repro.core import registry
+from repro.core.parallel import ParallelCtx
 from repro.launch import roofline as rl
 from repro.launch.mesh import make_production_mesh, mesh_axis_info
 from repro.models.model import Model
 from repro.optim import adamw
 
+# name-only aliases here pin impl=jnp (the host-CPU placeholder devices)
+# but otherwise mean exactly what the registry aliases mean; any full
+# registry spec string is also accepted verbatim by --policy
+_LOCAL_ALIASES = {
+    "taco": "tp=taco:jnp",
+    "taco3d": "tp=taco:jnp,grad_rs=sdp4bit,pp=tahquant",
+    "taco_folded": "tp=taco:jnp:folded",
+}
 
-def build_policy(name: str) -> CommPolicy:
-    if name == "baseline":
-        return CommPolicy.baseline()
-    if name == "taco":
-        return CommPolicy.taco(TacoConfig(impl="jnp"))
-    if name == "taco3d":
-        return CommPolicy.taco(TacoConfig(impl="jnp"), compress_dp=True)
-    if name == "taco_folded":
-        return CommPolicy.taco(TacoConfig(impl="jnp", metadata="folded"))
-    raise ValueError(name)
+
+def build_policy(name: str):
+    return registry.from_spec(_LOCAL_ALIASES.get(name, name))
 
 
 def input_specs(model, suite):
@@ -136,10 +137,10 @@ def lower_cell(cfg, shape: str, mesh_kind: str, policy_name: str,
     policy = build_policy(policy_name)
     if vopts["wag_int8"]:
         import dataclasses as _dc
-        from repro.core.codecs import Int8Codec
-        policy = _dc.replace(policy, weight_ag=Int8Codec())
+        policy = _dc.replace(policy,
+                             weight_ag=registry.codec_from_spec("int8"))
     mode = tp_mode or ("sp" if suite.kind == "train" else "allreduce")
-    ctx = ParallelCtx(tp_axis=tp_axis, fsdp_axes=fsdp_axes, policy=policy,
+    ctx = ParallelCtx(tp_axis=tp_axis, fsdp_axes=fsdp_axes, plan=policy,
                       tp_mode=mode)
 
     if suite.kind == "train":
@@ -324,7 +325,8 @@ def run_cell(arch, shape, mesh_kind, policy_name, out_dir=None, *,
     if out_dir:
         os.makedirs(out_dir, exist_ok=True)
         vtag = "" if not variant else "__" + variant.replace(",", "+").replace("=", "-")
-        fn = f"{arch}__{shape}__{mesh_kind}__{policy_name}__{mode}{vtag}.json"
+        ptag = policy_name.replace(",", "+").replace("=", "-").replace(":", ".")
+        fn = f"{arch}__{shape}__{mesh_kind}__{ptag}__{mode}{vtag}.json"
         with open(os.path.join(out_dir, fn), "w") as f:
             json.dump(rec, f, indent=1, default=str)
     return rec
@@ -336,7 +338,10 @@ def main():
     ap.add_argument("--shape", default=None)
     ap.add_argument("--mesh", default="single",
                     choices=["single", "multi", "both"])
-    ap.add_argument("--policy", default="taco")
+    ap.add_argument("--policy", default="taco",
+                    help="comm-plan alias (baseline/taco/taco3d/"
+                         "taco_folded) or a full registry spec string, "
+                         "e.g. 'tp=taco:jnp,skip_first=2,skip_last=2'")
     ap.add_argument("--tp-mode", default=None)
     ap.add_argument("--mode", default="check",
                     choices=["check", "roofline"])

@@ -3,7 +3,7 @@ decode step on the requested mesh, and run a batched greedy-decode service
 loop over synthetic request batches.
 
     PYTHONPATH=src python -m repro.launch.serve --arch qwen2-0.5b --smoke \
-        --batch 4 --gen 32 --policy taco
+        --batch 4 --gen 32 --comm-spec taco
 """
 from __future__ import annotations
 
@@ -17,16 +17,11 @@ import numpy as np
 from repro import compat
 from repro.ckpt import checkpoint as ck
 from repro.configs import get_config, make_plan, smoke_config
-from repro.core.parallel import CommPolicy, ParallelCtx
-from repro.core.taco import TacoConfig
+from repro.core.parallel import ParallelCtx
+from repro.core.registry import from_spec, to_spec
 from repro.launch.mesh import make_mesh, mesh_axis_info
 from repro.models.model import Model
 from repro.serve import serve_step as ss
-
-
-def build_policy(name: str) -> CommPolicy:
-    return {"baseline": CommPolicy.baseline(),
-            "taco": CommPolicy.taco(TacoConfig())}[name]
 
 
 def main():
@@ -34,7 +29,11 @@ def main():
     ap.add_argument("--arch", default="qwen2-0.5b")
     ap.add_argument("--smoke", action="store_true", default=True)
     ap.add_argument("--mesh", default="1,1,1")
-    ap.add_argument("--policy", default="taco")
+    ap.add_argument("--comm-spec", default=None, dest="comm_spec",
+                    help="compression plan spec or alias "
+                         "(see docs/COMPRESSION.md)")
+    ap.add_argument("--policy", default="taco",
+                    help="deprecated alias for --comm-spec")
     ap.add_argument("--batch", type=int, default=4)
     ap.add_argument("--prompt-len", type=int, default=8)
     ap.add_argument("--gen", type=int, default=24)
@@ -53,12 +52,20 @@ def main():
         cfg = smoke_config(cfg)
     plan = make_plan(cfg, tp, fsdp, remat=False, kv_strategy=args.kv)
     model = Model(cfg, plan, fsdp_axes=fsdp_axes, tp_axis=tp_axis)
+    comm_plan = from_spec(args.comm_spec if args.comm_spec is not None
+                          else args.policy)
+    print(f"serving with comm spec: {to_spec(comm_plan)}")
     ctx = ParallelCtx(tp_axis=tp_axis, fsdp_axes=fsdp_axes,
-                      policy=build_policy(args.policy), tp_mode="allreduce")
+                      plan=comm_plan, tp_mode="allreduce")
 
     from jax.sharding import NamedSharding
     params = model.init(jax.random.PRNGKey(0))
     if args.ckpt:
+        trained_spec = ck.read_comm_spec(args.ckpt)
+        if trained_spec is not None:
+            # serving may legitimately use a different decode plan than the
+            # one trained with — surface it rather than hard-failing
+            print(f"checkpoint was trained with comm spec: {trained_spec}")
         params, step = ck.restore(args.ckpt, params, mesh=mesh,
                                   pspecs=model.partition_specs())
         params = params["params"] if isinstance(params, dict) and \

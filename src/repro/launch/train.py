@@ -5,7 +5,7 @@ host of the pod slice (jax.distributed handles cross-host init); in this
 container it drives the same code path on small meshes.
 
     PYTHONPATH=src python -m repro.launch.train --arch qwen2-0.5b \
-        --smoke --steps 50 --policy taco
+        --smoke --steps 50 --comm-spec "tp=taco,warmup=10"
 """
 from __future__ import annotations
 
@@ -13,22 +13,13 @@ import argparse
 import logging
 
 from repro.configs import get_config, make_plan, smoke_config
-from repro.core.parallel import CommPolicy, ParallelCtx
-from repro.core.taco import TacoConfig
+from repro.core.parallel import ParallelCtx
+from repro.core.registry import from_spec, to_spec
 from repro.data.pipeline import DataConfig, SyntheticLM
 from repro.launch.mesh import make_mesh, mesh_axis_info
 from repro.models.model import Model
 from repro.optim.adamw import OptConfig
 from repro.train.trainer import Trainer, TrainerConfig
-
-
-def build_policy(name: str) -> CommPolicy:
-    return {
-        "baseline": CommPolicy.baseline(),
-        "taco": CommPolicy.taco(TacoConfig()),
-        "taco3d": CommPolicy.taco(TacoConfig(), compress_dp=True,
-                                  compress_pp=True),
-    }[name]
 
 
 def main():
@@ -41,7 +32,12 @@ def main():
     ap.add_argument("--batch", type=int, default=8)
     ap.add_argument("--mesh", default="1,1,1",
                     help="pod,data,model sizes (needs matching device count)")
-    ap.add_argument("--policy", default="taco")
+    ap.add_argument("--comm-spec", default=None, dest="comm_spec",
+                    help="compression plan spec or alias, e.g. "
+                         "'tp=taco:folded,grad_rs=sdp4bit,skip_first=2' "
+                         "(see docs/COMPRESSION.md)")
+    ap.add_argument("--policy", default="taco",
+                    help="deprecated alias for --comm-spec")
     ap.add_argument("--lr", type=float, default=3e-4)
     ap.add_argument("--ckpt", default="/tmp/repro_train_ckpt")
     ap.add_argument("--resume", action="store_true", default=True)
@@ -58,8 +54,9 @@ def main():
         cfg = smoke_config(cfg)
     plan = make_plan(cfg, tp, fsdp)
     model = Model(cfg, plan, fsdp_axes=fsdp_axes, tp_axis=tp_axis)
-    ctx = ParallelCtx(tp_axis=tp_axis, fsdp_axes=fsdp_axes,
-                      policy=build_policy(args.policy))
+    comm_plan = from_spec(args.comm_spec if args.comm_spec is not None
+                          else args.policy)
+    ctx = ParallelCtx(tp_axis=tp_axis, fsdp_axes=fsdp_axes, plan=comm_plan)
 
     seq = args.seq or (64 if args.smoke else 4096)
     data = SyntheticLM(DataConfig(vocab_size=cfg.vocab_size, seq_len=seq,
@@ -73,7 +70,7 @@ def main():
     trainer = Trainer(model, mesh, ctx, oc, tc, data)
     _, _, losses = trainer.run(resume=args.resume)
     print(f"{cfg.name}: loss {losses[0]:.4f} -> {losses[-1]:.4f} "
-          f"({len(losses)} steps, policy={args.policy})")
+          f"({len(losses)} steps, comm_spec={to_spec(comm_plan)})")
 
 
 if __name__ == "__main__":

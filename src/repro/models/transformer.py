@@ -174,41 +174,53 @@ def block_apply(x_shard, lp, enc_kv, cfg, plan, ctx, *, attn_kind: str,
 
 def run_segments(x_shard, seg_params, segments, cfg, plan, ctx, *,
                  positions, enc_kv=None, causal=True):
-    """Scan each segment's stacked layers. Returns (x_shard, aux_sum)."""
+    """Scan each segment's stacked layers. Returns (x_shard, aux_sum).
+
+    Per-layer CommPlan overrides (``skip_first``/``skip_last``) are
+    resolved here at trace time: ``ctx.layer_views`` splits each segment
+    into static contiguous spans of layers sharing one plan, each span
+    scanned with its own ParallelCtx view.  With no overrides the split is
+    the whole segment with ``ctx`` itself — byte-identical jit keys."""
+    from repro.core.parallel import iter_layer_spans
     aux_total = ZERO()
     enc_arg = enc_kv if enc_kv is not None else ZERO()  # scan-friendly dummy
+    n_total = max(s.start + s.count for s in segments)
 
     for seg, sp_ in zip(segments, seg_params):
-        def blk(x, lp, ek, kind=seg.kind):
-            return block_apply(x, lp, ek if enc_kv is not None else None,
-                               cfg, plan, ctx, attn_kind=kind,
-                               positions=positions, causal=causal)
+        for span_n, span_ctx, sp_span in iter_layer_spans(
+                ctx, seg.start, seg.count, n_total, sp_):
 
-        if plan.remat and plan.remat_policy != "none":
-            pol = (jax.checkpoint_policies.nothing_saveable
-                   if plan.remat_policy == "full" else
-                   jax.checkpoint_policies.dots_with_no_batch_dims_saveable)
-            fn = jax.checkpoint(blk, policy=pol)
-        else:
-            fn = blk
+            def blk(x, lp, ek, kind=seg.kind, c=span_ctx):
+                return block_apply(x, lp, ek if enc_kv is not None else None,
+                                   cfg, plan, c, attn_kind=kind,
+                                   positions=positions, causal=causal)
 
-        if plan.scan_layers:
-            def body(carry, lp):
-                x, aux = carry
-                x, a = fn(x, lp, enc_arg)
-                return (x, aux + a), None
+            if plan.remat and plan.remat_policy != "none":
+                pol = (jax.checkpoint_policies.nothing_saveable
+                       if plan.remat_policy == "full" else
+                       jax.checkpoint_policies
+                       .dots_with_no_batch_dims_saveable)
+                fn = jax.checkpoint(blk, policy=pol)
+            else:
+                fn = blk
 
-            (x_shard, aux_total), _ = jax.lax.scan(
-                body, (x_shard, aux_total), sp_)
-        else:
-            # unrolled (dry-run roofline mode): XLA's cost analysis counts
-            # a scan body ONCE, hiding (L-1)/L of the flops/bytes/
-            # collectives — unrolling makes the compiled artifact reflect
-            # the true per-step cost.
-            for i in range(seg.count):
-                lp_i = compat.tree_map(lambda a: a[i], sp_)
-                x_shard, a = fn(x_shard, lp_i, enc_arg)
-                aux_total = aux_total + a
+            if plan.scan_layers:
+                def body(carry, lp, fn=fn):
+                    x, aux = carry
+                    x, a = fn(x, lp, enc_arg)
+                    return (x, aux + a), None
+
+                (x_shard, aux_total), _ = jax.lax.scan(
+                    body, (x_shard, aux_total), sp_span)
+            else:
+                # unrolled (dry-run roofline mode): XLA's cost analysis
+                # counts a scan body ONCE, hiding (L-1)/L of the flops/
+                # bytes/collectives — unrolling makes the compiled artifact
+                # reflect the true per-step cost.
+                for i in range(span_n):
+                    lp_i = compat.tree_map(lambda a: a[i], sp_span)
+                    x_shard, a = fn(x_shard, lp_i, enc_arg)
+                    aux_total = aux_total + a
     return x_shard, aux_total
 
 

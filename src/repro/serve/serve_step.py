@@ -214,18 +214,30 @@ def decode_forward(params, token, cache, pos, model, ctx, label=None):
     if cfg.pos in ("learned", "sinusoid"):
         x = _decode_positional(x, params, cfg, ctx, pos)
 
+    from repro.core.parallel import iter_layer_spans
     new_cache = []
-    for seg, sp_, cache_seg in zip(layer_segments(cfg), params["segments"],
-                                   cache):
-        def body(carry, inp, kind=seg.kind):
-            x_, = carry
-            lp, cl = inp
-            x_, nc = _decode_block(x_, lp, cl, cfg, plan, ctx,
-                                   kind=kind, pos=pos)
-            return (x_,), nc
+    segments = layer_segments(cfg)
+    n_total = max(s.start + s.count for s in segments)
+    for seg, sp_, cache_seg in zip(segments, params["segments"], cache):
+        # Per-layer CommPlan overrides: scan each static span with its own
+        # ParallelCtx view (same resolution as the train-path run_segments)
+        nc_parts = []
+        for span_n, span_ctx, sp_span, cache_span in iter_layer_spans(
+                ctx, seg.start, seg.count, n_total, sp_, cache_seg):
 
-        (x,), nc = jax.lax.scan(body, (x,), (sp_, cache_seg))
-        new_cache.append(nc)
+            def body(carry, inp, kind=seg.kind, c=span_ctx):
+                x_, = carry
+                lp, cl = inp
+                x_, nc = _decode_block(x_, lp, cl, cfg, plan, c,
+                                       kind=kind, pos=pos)
+                return (x_,), nc
+
+            (x,), nc = jax.lax.scan(body, (x,), (sp_span, cache_span))
+            nc_parts.append(nc)
+        new_cache.append(nc_parts[0] if len(nc_parts) == 1 else
+                         compat.tree_map(
+                             lambda *xs: jnp.concatenate(xs, axis=0),
+                             *nc_parts))
 
     x = apply_norm(x, params["final_norm"], cfg.norm, cfg.norm_eps)
     logits = lm_head_logits(x, head_table(params, cfg), ctx)

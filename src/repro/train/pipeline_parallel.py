@@ -93,10 +93,20 @@ def build_pipeline_train_step(model, mesh, ctx: ParallelCtx,
     cfg = model.cfg
     assert len(layer_segments(cfg)) == 1, "PP demo: single-segment archs"
     assert cfg.n_layers % pc.stages == 0
+    if ctx.plan.skip_first or ctx.plan.skip_last or ctx.plan.warmup_steps:
+        # One SPMD program runs every stage, and the stage index (hence
+        # the absolute layer index) is a traced value — static per-layer
+        # span resolution cannot apply here, and this builder has no
+        # trainer resolving the step schedule. Fail loudly rather than
+        # silently compressing layers the plan promised to skip.
+        raise NotImplementedError(
+            "pipeline-parallel step does not support per-layer overrides "
+            "(skip_first/skip_last) or warmup scheduling; strip them from "
+            f"the CommPlan (got {ctx.plan})")
     pspecs = pipe_partition_specs(model, pc)
     ospecs = adamw.opt_state_pspecs(pspecs)
     bspecs = model.batch_pspecs()
-    pp_codec_f, pp_codec_b = ctx.policy.pp, ctx.policy.pp
+    pp_codec_f, pp_codec_b = ctx.plan.pp, ctx.plan.pp
     pipe, dp = pc.pipe_axis, model.fsdp_axes
     perm_fwd = tuple((i, i + 1) for i in range(pc.stages - 1))
 

@@ -1,7 +1,7 @@
 """The distributed train step: one shard_map over the full mesh.
 
 Everything cross-device is an explicit collective (compressed per the
-CommPolicy): TP activations (TACO), fsdp weight gathers (optional int8),
+CommPlan): TP activations (TACO), fsdp weight gathers (optional int8),
 DP gradient reduce-scatter (the weight-gather transpose; SDP4bit-style
 int4), and the scalar loss psum. GSPMD never inserts hidden collectives —
 which is precisely what lets the roofline account for every byte.

@@ -4,6 +4,14 @@ The loop is deliberately restart-oriented: ALL state is (params, opt_state,
 step); the data pipeline is pure-functional in step. ``Trainer.run`` can be
 killed at any step and re-invoked — it resumes from the latest complete
 checkpoint and replays identically (tested in tests/test_checkpoint.py).
+
+Compression policy: the trainer owns the CommPlan *schedule*.  Each step it
+resolves ``ctx.plan.at_step(step)`` OUTSIDE jit (identity plan during the
+warmup window, the steady plan after) and dispatches to a per-plan compiled
+step function — plans are frozen/hashable, so the cache holds at most two
+entries and jit never sees a varying policy object.  The normalized spec is
+persisted in every checkpoint manifest and validated on restore; per-path
+wire-byte telemetry is merged into the metrics dict every step.
 """
 from __future__ import annotations
 
@@ -16,6 +24,7 @@ import numpy as np
 
 from repro import compat
 from repro.ckpt import checkpoint as ckpt
+from repro.core.registry import to_spec
 from repro.data.pipeline import DataConfig, SyntheticLM
 from repro.optim import adamw
 from repro.runtime.fault_tolerance import (FailureInjector, RetryPolicy,
@@ -42,9 +51,23 @@ class Trainer:
         self.model, self.mesh, self.ctx = model, mesh, ctx
         self.oc, self.tc, self.data = oc, tc, data
         self.injector = injector
-        self.step_fn = build_train_step(model, mesh, ctx, oc)
+        self.comm_spec = to_spec(ctx.plan)
+        self._step_fns: dict = {}     # resolved CommPlan -> compiled step
         self.watchdog = StepWatchdog()
         self.losses: list = []
+        log.info("comm plan: %s", self.comm_spec)
+
+    # ---- schedule ----------------------------------------------------------
+    def step_fn_for(self, step: int):
+        """The compiled step function for the plan active at ``step``
+        (warmup scheduling resolved here, outside jit)."""
+        plan = self.ctx.plan.at_step(step)
+        fn = self._step_fns.get(plan)
+        if fn is None:
+            rctx = dataclasses.replace(self.ctx, plan=plan)
+            fn = build_train_step(self.model, self.mesh, rctx, self.oc)
+            self._step_fns[plan] = fn
+        return fn, plan
 
     # ---- state ------------------------------------------------------------
     def init_state(self):
@@ -65,7 +88,8 @@ class Trainer:
         ospecs = adamw.opt_state_pspecs(pspecs)
         state, step = ckpt.restore(
             self.tc.ckpt_dir, {"params": params_tmpl, "opt": opt_tmpl},
-            mesh=self.mesh, pspecs={"params": pspecs, "opt": ospecs})
+            mesh=self.mesh, pspecs={"params": pspecs, "opt": ospecs},
+            expect_comm_spec=self.comm_spec)
         log.info("restored checkpoint at step %d", step)
         return state["params"], state["opt"], step
 
@@ -86,22 +110,33 @@ class Trainer:
                     self.injector.maybe_fail(step)
                 batch = self.data.place(self.data.batch(step), self.mesh,
                                         bspecs)
+                step_fn, plan = self.step_fn_for(step)
                 t0 = time.time()
-                params, opt_state, metrics = self.step_fn(
+                params, opt_state, metrics = step_fn(
                     params, opt_state, batch)
                 loss = float(metrics["loss"])
                 dt = time.time() - t0
                 self.watchdog.observe(dt)
                 self.losses.append(loss)
+                # per-path wire-byte telemetry for the plan that actually
+                # ran this step (static — no extra device work)
+                metrics["comm/spec"] = self.comm_spec
+                metrics["comm/warmup_active"] = \
+                    1.0 if plan != self.ctx.plan.steady() else 0.0
+                for path, bpe in plan.wire_bytes_per_element().items():
+                    metrics[f"comm/{path}_bytes_per_elem"] = bpe
                 if step % self.tc.log_every == 0:
-                    log.info("step %d loss %.4f gnorm %.3f lr %.2e (%.2fs)",
+                    log.info("step %d loss %.4f gnorm %.3f lr %.2e (%.2fs) "
+                             "tp_wire %.3fB/elem",
                              step, loss, float(metrics["grad_norm"]),
-                             float(metrics["lr"]), dt)
+                             float(metrics["lr"]), dt,
+                             metrics["comm/tp_fwd_bytes_per_elem"])
                 step += 1
                 if step % self.tc.ckpt_every == 0 or step == self.tc.total_steps:
                     ckpt.save(self.tc.ckpt_dir, step,
                               {"params": params, "opt": opt_state},
-                              keep_last=self.tc.keep_last)
+                              keep_last=self.tc.keep_last,
+                              comm_spec=self.comm_spec)
             except Exception as exc:  # noqa: BLE001 — restart boundary
                 if not retry.should_retry(exc):
                     raise

@@ -14,7 +14,8 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.configs import get_config, make_plan, smoke_config
-from repro.core.parallel import CommPolicy, ParallelCtx
+from repro.core.parallel import ParallelCtx
+from repro.core.registry import from_spec
 from repro.data.pipeline import DataConfig, SyntheticLM
 from repro.models.model import Model
 from repro.optim.adamw import OptConfig, init_opt_state
@@ -32,7 +33,7 @@ mesh_b = jax.make_mesh((2, 2, 2), ("pod", "data", "model"))
 
 plan = make_plan(cfg, 2, 4)
 model = Model(cfg, plan)
-ctx = ParallelCtx(policy=CommPolicy.baseline())
+ctx = ParallelCtx(plan=from_spec("baseline"))
 data = SyntheticLM(DataConfig(vocab_size=cfg.vocab_size, seq_len=64,
                               global_batch=8), cfg)
 

@@ -16,8 +16,8 @@ from jax.sharding import PartitionSpec as P
 
 from repro import compat
 from repro.configs import get_config, make_plan, smoke_config
-from repro.core.parallel import CommPolicy, ParallelCtx
-from repro.core.taco import TacoConfig
+from repro.core.parallel import ParallelCtx
+from repro.core.registry import from_spec
 from repro.data.pipeline import DataConfig, SyntheticLM
 from repro.models.model import Model
 from repro.optim import adamw
@@ -38,7 +38,7 @@ def check(name, got, want, rel):
         FAILURES.append(name)
 
 
-def run_pp(mesh_shape, policy, steps=4, micro=4):
+def run_pp(mesh_shape, comm_plan, steps=4, micro=4):
     pipe, data, tp = mesh_shape
     mesh = compat.make_mesh(mesh_shape, ("pipe", "data", "model"))
     cfg = smoke_config(get_config("gpt-350m"))  # 2 layers; pipe must divide
@@ -46,7 +46,7 @@ def run_pp(mesh_shape, policy, steps=4, micro=4):
     cfg = dataclasses.replace(cfg, n_layers=pipe * 2)
     plan = make_plan(cfg, tp, data, remat=False)
     model = Model(cfg, plan, fsdp_axes=("data",), tp_axis="model")
-    ctx = ParallelCtx(tp_axis="model", fsdp_axes=("data",), policy=policy)
+    ctx = ParallelCtx(tp_axis="model", fsdp_axes=("data",), plan=comm_plan)
     pc = PipeConfig(stages=pipe, microbatches=micro)
     step = build_pipeline_train_step(model, mesh, ctx,
                                      adamw.OptConfig(lr_max=1e-3,
@@ -77,7 +77,7 @@ def run_ref(cfg, steps=4):
     plan = make_plan(cfg, 1, 1, remat=False)
     model = Model(cfg, plan, fsdp_axes=("data",), tp_axis="model")
     ctx = ParallelCtx(tp_axis="model", fsdp_axes=("data",),
-                      policy=CommPolicy.baseline())
+                      plan=from_spec("baseline"))
     step = build_train_step(model, mesh, ctx,
                             adamw.OptConfig(lr_max=1e-3, warmup_steps=2,
                                             total_steps=steps), donate=False)
@@ -94,15 +94,14 @@ def run_ref(cfg, steps=4):
 
 
 # --- PP=4 uncompressed vs single-device reference
-pp_losses, cfg = run_pp((4, 2, 1), CommPolicy.baseline())
+pp_losses, cfg = run_pp((4, 2, 1), from_spec("baseline"))
 ref_losses = run_ref(cfg)
 for t, (a, b) in enumerate(zip(pp_losses, ref_losses)):
     check(f"gpipe4/step{t}", a, b, rel=2e-2)
 
 # --- paper §5.5: 3D (pipe=2, data=2, model=2), fully compressed
 pp3d, cfg2 = run_pp((2, 2, 2),
-                    CommPolicy.taco(TacoConfig(impl="jnp"),
-                                    compress_dp=True, compress_pp=True))
+                    from_spec("tp=taco:jnp,grad_rs=sdp4bit,pp=tahquant"))
 ref2 = run_ref(cfg2)
 for t, (a, b) in enumerate(zip(pp3d, ref2)):
     check(f"3d_compressed/step{t}", a, b, rel=5e-2)

@@ -18,8 +18,8 @@ from repro import compat
 from jax.sharding import PartitionSpec as P
 
 from repro.configs import get_config, make_plan, smoke_config
-from repro.core.parallel import CommPolicy, ParallelCtx
-from repro.core.taco import TacoConfig
+from repro.core.parallel import ParallelCtx
+from repro.core.registry import from_spec
 from repro.models.model import Model
 
 FAILURES = []
@@ -56,14 +56,14 @@ def make_batch(cfg, b, s, seed=0):
     return batch
 
 
-def run_loss(mesh_shape, name, policy, seed=0, with_grad=False):
+def run_loss(mesh_shape, name, comm_plan, seed=0, with_grad=False):
     mesh = jax.make_mesh(mesh_shape, ("pod", "data", "model"))
     tp = mesh_shape[2]
     fsdp = mesh_shape[0] * mesh_shape[1]
     cfg = smoke_config(get_config(name))
     plan = make_plan(cfg, tp, fsdp, remat=False)
     model = Model(cfg, plan)
-    ctx = ParallelCtx(policy=policy)
+    ctx = ParallelCtx(plan=comm_plan)
     # init on a reference 1-dev basis then shard: init with same key gives
     # same GLOBAL params only if shapes are identical across tp — true for
     # everything except padded dims; so init global on host then device_put.
@@ -120,8 +120,8 @@ def run_loss(mesh_shape, name, policy, seed=0, with_grad=False):
     return loss, gnorm
 
 
-BASE = CommPolicy.baseline()
-TACO = CommPolicy.taco(TacoConfig(impl="jnp"))
+BASE = from_spec("baseline")
+TACO = from_spec("tp=taco:jnp")
 
 ARCHS = ["qwen2-0.5b", "qwen1.5-32b", "h2o-danube-1.8b", "grok-1-314b",
          "rwkv6-1.6b", "whisper-small", "hymba-1.5b", "internvl2-1b"]
@@ -160,7 +160,7 @@ def run_loss_padshard(name):
     from repro.core.collectives import psum_exact
     from repro.compat import shard_map as _sm
     from jax.sharding import PartitionSpec as _P
-    ctx = ParallelCtx(policy=BASE)
+    ctx = ParallelCtx(plan=BASE)
 
     def fwd(p, bt):
         ls, cnt, _ = model.loss_parts(p, bt, ctx)

@@ -64,6 +64,34 @@ def test_restore_latest_by_default(tmp_path):
     np.testing.assert_array_equal(np.asarray(back["a"]), np.asarray(s2["a"]))
 
 
+def test_comm_spec_persist_and_validate(tmp_path):
+    """A checkpoint records the normalized compression spec; restoring
+    under the same spec succeeds, under a different one fails clearly,
+    and spec-less (pre-spec) checkpoints restore without validation."""
+    state = tree()
+    spec = "tp=taco:folded,grad_rs=sdp4bit"
+    ck.save(str(tmp_path), 5, state, comm_spec=spec)
+    assert ck.read_comm_spec(str(tmp_path)) == spec
+
+    back, step = ck.restore(str(tmp_path), state, expect_comm_spec=spec)
+    assert step == 5
+    with pytest.raises(ck.CommSpecMismatch) as ei:
+        ck.restore(str(tmp_path), state, expect_comm_spec="baseline")
+    assert spec in str(ei.value) and "baseline" in str(ei.value)
+    # no expectation -> no validation (inspection/serving workflows)
+    ck.restore(str(tmp_path), state)
+
+
+def test_comm_spec_absent_in_old_checkpoints(tmp_path):
+    state = tree()
+    ck.save(str(tmp_path), 2, state)               # spec-less save
+    assert ck.read_comm_spec(str(tmp_path)) is None
+    back, step = ck.restore(str(tmp_path), state,
+                            expect_comm_spec="tp=taco")   # must not raise
+    assert step == 2
+    assert ck.read_comm_spec(str(tmp_path / "missing")) is None
+
+
 @pytest.mark.slow
 def test_elastic_reshard_subprocess(tmp_path):
     """Save params on a (1,2,4) mesh, restore onto (1,4,2): the tensors are

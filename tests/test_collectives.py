@@ -19,7 +19,8 @@ from jax.sharding import PartitionSpec as P
 
 from repro.core import collectives as cc
 from repro.core.codecs import IdentityCodec, Sdp4BitCodec, TacoCodec
-from repro.core.parallel import CommPolicy, ParallelCtx
+from repro.core.parallel import ParallelCtx
+from repro.core.registry import from_spec
 from repro.core.taco import TacoConfig
 
 ID = IdentityCodec()
@@ -62,8 +63,8 @@ def test_single_device_identity_exact(rng):
 
 def test_parallel_ctx_methods(rng):
     x = jnp.asarray(rng.normal(0, 0.02, (4, 256)).astype(np.float32))
-    ctx = ParallelCtx(fsdp_axes=("data",), policy=CommPolicy.taco(
-        TacoConfig(impl="jnp"), compress_dp=True))
+    ctx = ParallelCtx(fsdp_axes=("data",),
+                      plan=from_spec("tp=taco:jnp,grad_rs=sdp4bit"))
 
     def fn(v):
         a = ctx.sp_gather(v, 0)

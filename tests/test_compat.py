@@ -163,3 +163,26 @@ def test_grep_discipline_no_direct_version_sensitive_imports():
             if pat.search(f.read_text()):
                 offenders.append(str(f.relative_to(root)))
     assert not offenders, offenders
+
+
+def test_grep_discipline_codecs_only_constructed_in_core():
+    """Compression policy is declarative: every layer above ``core/``
+    (models, train, serve, launch, ckpt, examples, benchmarks) selects
+    codecs through the registry spec grammar — never by instantiating
+    codec classes directly.  Tests may construct codecs (they test them).
+    """
+    import pathlib
+    import re
+    root = pathlib.Path(__file__).resolve().parents[1]
+    pat = re.compile(r"\b(?:IdentityCodec|TacoCodec|Sdp4BitCodec"
+                     r"|TahQuantCodec|Int8Codec)\s*\(")
+    offenders = []
+    for d in ("src/repro", "examples", "benchmarks"):
+        for f in (root / d).rglob("*.py"):
+            if f.parent.name == "core":
+                continue  # the codecs + their registry live here
+            if pat.search(f.read_text()):
+                offenders.append(str(f.relative_to(root)))
+    assert not offenders, \
+        f"construct codecs via repro.core.registry specs, not directly: " \
+        f"{offenders}"

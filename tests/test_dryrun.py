@@ -61,13 +61,17 @@ def test_roofline_terms_math():
 
 @pytest.mark.slow
 def test_one_multipod_cell_compiles():
-    """End-to-end: qwen2-0.5b train_4k on the 512-chip multi-pod mesh."""
+    """End-to-end: qwen2-0.5b train_4k on the 512-chip multi-pod mesh,
+    under a full registry spec with per-layer overrides (first/last two
+    layers TP-uncompressed) — the spec grammar must thread through the
+    production launcher and compile."""
     env = dict(os.environ)
     env["PYTHONPATH"] = str(REPO / "src")
     env.pop("XLA_FLAGS", None)  # dryrun sets its own 512-device flag
     proc = subprocess.run(
         [sys.executable, "-m", "repro.launch.dryrun", "--arch", "qwen2-0.5b",
-         "--shape", "train_4k", "--mesh", "multi", "--mode", "check"],
+         "--shape", "train_4k", "--mesh", "multi", "--mode", "check",
+         "--policy", "tp=taco:jnp,skip_first=2,skip_last=2"],
         env=env, capture_output=True, text=True, timeout=1200,
         cwd=str(REPO))
     assert proc.returncode == 0, proc.stdout[-2000:] + proc.stderr[-2000:]

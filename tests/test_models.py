@@ -9,8 +9,8 @@ from repro.compat import shard_map
 from jax.sharding import PartitionSpec as P
 
 from repro.configs import ASSIGNED, get_config, make_plan, smoke_config
-from repro.core.parallel import CommPolicy, ParallelCtx
-from repro.core.taco import TacoConfig
+from repro.core.parallel import ParallelCtx
+from repro.core.registry import from_spec
 from repro.models.model import Model
 
 MESH = None
@@ -72,8 +72,8 @@ def grad_of(model, params, batch, ctx):
     return jax.jit(f)(params, batch)
 
 
-BASE = ParallelCtx(policy=CommPolicy.baseline())
-TACO = ParallelCtx(policy=CommPolicy.taco(TacoConfig(impl="jnp")))
+BASE = ParallelCtx(plan=from_spec("baseline"))
+TACO = ParallelCtx(plan=from_spec("tp=taco:jnp"))
 
 
 @pytest.mark.parametrize("name", ASSIGNED + ["gpt-350m"])

@@ -1,0 +1,273 @@
+"""Codec registry + CommPlan spec grammar tests.
+
+Covers the api contract: every registered codec round-trips through the
+spec grammar (``parse(unparse(c)) == c``) and through encode→decode within
+its format tolerance; plan specs are normalized and idempotent
+(``to_spec(from_spec(s))`` stable, ``from_spec(to_spec(p)) == p``);
+malformed specs are rejected with CommSpecError; per-layer overrides
+resolve to static spans; the warmup schedule resolves outside jit; and an
+identity plan leaves the lowered baseline HLO free of codec ops.
+"""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import registry
+from repro.core.parallel import CommPlan, ParallelCtx
+from repro.core.registry import (CommSpecError, codec_from_spec,
+                                 codec_to_spec, from_spec, to_spec)
+
+# one representative non-default variant per registered codec
+CODEC_SPECS = [
+    "none",
+    "taco",
+    "taco:jnp",
+    "taco:e5m2:b128:folded",
+    "taco:int8:g64",
+    "taco:notransform:tensorscale",
+    "taco:hadamard:tau1.5",
+    "taco:cdbfloat16",
+    "taco:disabled",
+    "sdp4bit",
+    "sdp4bit:b64:norot",
+    "tahquant",
+    "tahquant:g32",
+    "int8",
+    "int8:g64",
+]
+
+# decode tolerance (rel L2) per codec family on small-magnitude noise
+TOL = {"none": 0.0, "taco": 0.08, "sdp4bit": 0.30, "tahquant": 0.05,
+       "int8": 0.05}
+
+
+@pytest.fixture
+def rng():
+    return np.random.default_rng(0)
+
+
+# --------------------------------------------------------------------------
+# codec-level round trips
+# --------------------------------------------------------------------------
+
+def test_every_codec_is_registered_and_protocol_complete():
+    assert set(registry.list_codecs()) >= {"none", "taco", "sdp4bit",
+                                           "tahquant", "int8"}
+    for name in registry.list_codecs():
+        codec = codec_from_spec(name)
+        assert isinstance(codec, registry.Codec), name
+        assert codec.granule >= 1
+        assert codec.bytes_per_element() > 0
+
+
+@pytest.mark.parametrize("spec", CODEC_SPECS)
+def test_codec_spec_round_trip(spec):
+    codec = codec_from_spec(spec)
+    norm = codec_to_spec(codec)
+    again = codec_from_spec(norm)
+    assert again == codec, (spec, norm)
+    assert codec_to_spec(again) == norm          # idempotent
+    assert hash(again) == hash(codec)            # usable as a jit/dict key
+
+
+@pytest.mark.parametrize("spec", CODEC_SPECS)
+def test_codec_encode_decode_within_tolerance(spec, rng):
+    codec = codec_from_spec(spec)
+    n = 4 * codec.granule
+    x = jnp.asarray(rng.normal(0, 0.02, (2, n)).astype(np.float32))
+    enc = codec.encode(x)
+    back = codec.decode(enc, n, jnp.float32)
+    rel = float(jnp.linalg.norm(back - x) / jnp.linalg.norm(x))
+    assert rel <= TOL[spec.split(":")[0]], (spec, rel)
+
+
+def test_identity_decode_sum_accumulates_in_f32():
+    """The uncompressed reduce-scatter baseline must not sum peers in
+    bf16: 256 + 8x1 loses every +1 at bf16 precision but not in f32."""
+    codec = codec_from_spec("none")
+    vals = np.array([[256.0]] + [[1.0]] * 8, np.float32)   # (peers, n=1)
+    x = jnp.asarray(vals, jnp.bfloat16)
+    out = codec.decode_sum((x,), 1, jnp.bfloat16)
+    expected = np.asarray(
+        jnp.asarray(np.float32(264.0), jnp.bfloat16))      # one final round
+    np.testing.assert_array_equal(np.asarray(out, np.float32),
+                                  expected.astype(np.float32))
+
+
+def test_unknown_codec_and_bad_args_rejected():
+    for bad in ["nope", "taco:zz", "taco:b12x", "sdp4bit:g32",
+                "tahquant:b64", "none:arg", "taco:e4m3:e5m2",
+                "taco:g64:tensorscale", "taco:b0", "taco:g0",
+                "sdp4bit:b0", "tahquant:g0", "int8:g0",
+                "taco:cdnot_a_dtype"]:
+        with pytest.raises(CommSpecError):
+            codec_from_spec(bad)
+
+
+# --------------------------------------------------------------------------
+# plan-level grammar
+# --------------------------------------------------------------------------
+
+PLAN_SPECS = [
+    "baseline",
+    "taco",
+    "taco3d",
+    "taco_folded",
+    "tp=taco:e4m3:b256:folded,grad_rs=sdp4bit,pp=tahquant,weight_ag=none",
+    "tp_fwd=taco,tp_bwd=taco:e5m2",
+    "tp=taco,skip_first=2,skip_last=2,warmup=100",
+    "weight_ag=int8:g64,grad_rs=sdp4bit:norot",
+]
+
+
+@pytest.mark.parametrize("spec", PLAN_SPECS)
+def test_plan_spec_round_trip(spec):
+    plan = from_spec(spec)
+    norm = to_spec(plan)
+    assert from_spec(norm) == plan, (spec, norm)
+    assert to_spec(from_spec(norm)) == norm      # idempotent
+    assert hash(plan) == hash(from_spec(norm))
+
+
+def test_issue_example_normalizes_defaults_away():
+    s = "tp=taco:e4m3:b256:folded,grad_rs=sdp4bit,pp=tahquant,weight_ag=none"
+    assert to_spec(from_spec(s)) == "tp=taco:folded,grad_rs=sdp4bit,pp=tahquant"
+
+
+def test_malformed_plan_specs_rejected():
+    for bad in ["tp=zzz", "bogus", "tp:taco", "xx=taco", "skip_first=x",
+                "tp=taco,tp_fwd=none", "tp=taco,tp=none", "warmup=-3",
+                "skip_first=1.5", "=taco", "tp="]:
+        with pytest.raises(CommSpecError):
+            from_spec(bad)
+
+
+def test_spec_must_be_string():
+    with pytest.raises(CommSpecError):
+        from_spec(None)
+
+
+# --------------------------------------------------------------------------
+# per-layer overrides + warmup schedule
+# --------------------------------------------------------------------------
+
+def test_layer_spans_static_resolution():
+    plan = from_spec("tp=taco,skip_first=2,skip_last=1")
+    spans = plan.layer_spans(0, 8, 8)
+    assert [n for n, _ in spans] == [2, 5, 1]
+    assert spans[0][1].tp_identity and spans[2][1].tp_identity
+    assert not spans[1][1].tp_identity
+    # expansion covers every layer in order
+    per_layer = plan.layer_plans(8)
+    assert len(per_layer) == 8
+    assert [p.tp_identity for p in per_layer] == \
+        [True, True, False, False, False, False, False, True]
+    # offsets partition correctly for a segment in the middle of the stack
+    mid = plan.layer_spans(1, 3, 8)              # layers 1, 2, 3
+    assert [n for n, _ in mid] == [1, 2]
+    assert mid[0][1].tp_identity and not mid[1][1].tp_identity
+
+
+def test_layer_spans_identity_fastpath_preserves_object():
+    """No overrides -> the span carries the plan object itself, so jit
+    cache keys are untouched."""
+    plan = from_spec("taco")
+    ((n, p),) = plan.layer_spans(0, 4, 4)
+    assert n == 4 and p is plan
+    ctx = ParallelCtx(plan=plan)
+    ((n, c),) = ctx.layer_views(0, 4, 4)
+    assert c is ctx
+
+
+def test_layer_spans_overlapping_skips_merge():
+    plan = from_spec("tp=taco,skip_first=3,skip_last=3")
+    spans = plan.layer_spans(0, 4, 4)            # skips cover everything
+    assert sum(n for n, _ in spans) == 4
+    assert all(p.tp_identity for _, p in spans)
+
+
+def test_compute_dtype_round_trips_and_canonicalizes():
+    """compute_dtype is part of the normalized spec (two plans differing
+    only in decode-accumulation dtype must not collapse to one string),
+    and dtype-likes canonicalize to the name string."""
+    c = codec_from_spec("taco:cdbfloat16")
+    assert c.cfg.compute_dtype == "bfloat16"
+    assert codec_to_spec(c) == "taco:cdbfloat16"
+    assert codec_from_spec(codec_to_spec(c)) == c
+    assert codec_to_spec(codec_from_spec("taco")) == "taco"
+    from repro.core.taco import TacoConfig
+    assert TacoConfig(compute_dtype=jnp.float32).compute_dtype == "float32"
+    assert TacoConfig(compute_dtype=np.float32).compute_dtype == "float32"
+
+
+def test_invalid_config_combo_rejected_at_construction():
+    """tensorscale + per-group quant scales is invalid however you build
+    it — every constructible config must round-trip through the grammar,
+    so the config constructor itself rejects it (not just the parser)."""
+    from repro.core.taco import TacoConfig
+    with pytest.raises(ValueError):
+        TacoConfig(scale_granularity="tensor", quant_group_size=64)
+
+
+def test_pipeline_step_rejects_unsupported_knobs():
+    """The SPMD pipeline step cannot honor per-layer/warmup knobs — it
+    must refuse them loudly, never silently compress skipped layers."""
+    from repro.configs import get_config, make_plan, smoke_config
+    from repro.models.model import Model
+    from repro.optim import adamw
+    from repro.train.pipeline_parallel import (PipeConfig,
+                                               build_pipeline_train_step)
+
+    cfg = smoke_config(get_config("gpt-350m"))
+    plan = make_plan(cfg, 1, 1, remat=False)
+    model = Model(cfg, plan, fsdp_axes=("data",))
+    mesh = jax.make_mesh((1, 1, 1), ("pipe", "data", "model"))
+    pc = PipeConfig(stages=1, microbatches=2)
+    for spec in ["tp=taco,skip_first=1", "tp=taco,warmup=5"]:
+        ctx = ParallelCtx(tp_axis="model", fsdp_axes=("data",),
+                          plan=from_spec(spec))
+        with pytest.raises(NotImplementedError):
+            build_pipeline_train_step(model, mesh, ctx,
+                                      adamw.OptConfig(), pc)
+
+
+def test_warmup_schedule_resolution():
+    plan = from_spec("tp=taco,grad_rs=sdp4bit,warmup=10")
+    assert plan.at_step(0) == CommPlan()         # identity during warmup
+    assert plan.at_step(9) == CommPlan()
+    steady = plan.at_step(10)
+    assert steady == dataclasses.replace(plan, warmup_steps=0)
+    assert plan.at_step(11) is plan.at_step(12) or \
+        plan.at_step(11) == plan.at_step(12)     # stable dict key
+    assert from_spec("taco").at_step(0) == from_spec("taco")  # no warmup
+
+
+# --------------------------------------------------------------------------
+# identity plan -> no codec ops in the lowered HLO
+# --------------------------------------------------------------------------
+
+def _lowered_eval_text(spec):
+    from repro.configs import get_config, make_plan, smoke_config
+    from repro.models.model import Model
+    from repro.train.train_step import build_eval_step
+
+    cfg = smoke_config(get_config("gpt-350m"))
+    plan = make_plan(cfg, 1, 1, remat=False)
+    model = Model(cfg, plan)
+    mesh = jax.make_mesh((1, 1, 1), ("pod", "data", "model"))
+    ctx = ParallelCtx(plan=from_spec(spec))
+    step = build_eval_step(model, mesh, ctx)
+    batch = {k: jnp.zeros(s.shape, s.dtype)
+             for k, s in model.batch_shape(32, 2).items()}
+    params = model.init(jax.random.PRNGKey(0))
+    return step.lower(params, batch).as_text()
+
+
+def test_identity_plan_hlo_free_of_codec_ops():
+    base = _lowered_eval_text("baseline").lower()
+    assert "f8e4" not in base and "f8e5" not in base
+    taco = _lowered_eval_text("tp=taco:jnp").lower()
+    assert "f8e4" in taco                        # fp8 wire payload present

@@ -13,7 +13,8 @@ from repro.compat import shard_map
 from jax.sharding import PartitionSpec as P
 
 from repro.configs import get_config, make_plan, smoke_config
-from repro.core.parallel import CommPolicy, ParallelCtx
+from repro.core.parallel import ParallelCtx
+from repro.core.registry import from_spec
 from repro.models.model import Model
 from repro.serve import serve_step as ss
 
@@ -27,8 +28,8 @@ def mesh1():
     return MESH
 
 
-BASE = ParallelCtx(policy=CommPolicy.baseline(), tp_mode="allreduce")
-BASE_SP = ParallelCtx(policy=CommPolicy.baseline(), tp_mode="sp")
+BASE = ParallelCtx(plan=from_spec("baseline"), tp_mode="allreduce")
+BASE_SP = ParallelCtx(plan=from_spec("baseline"), tp_mode="sp")
 
 
 def run_decode(model, params, cache, token, pos, label=None):

@@ -8,8 +8,8 @@ import numpy as np
 import pytest
 
 from repro.configs import get_config, make_plan, smoke_config
-from repro.core.parallel import CommPolicy, ParallelCtx
-from repro.core.taco import TacoConfig
+from repro.core.parallel import ParallelCtx
+from repro.core.registry import from_spec
 from repro.data.pipeline import DataConfig, SyntheticLM
 from repro.optim.adamw import OptConfig
 from repro.train.trainer import Trainer, TrainerConfig
@@ -25,12 +25,13 @@ def mesh1():
     return MESH
 
 
-def small_setup(tmp_path, policy, total_steps=30, seed=0, arch="gpt-350m"):
+def small_setup(tmp_path, comm_spec, total_steps=30, seed=0,
+                arch="gpt-350m"):
     from repro.models.model import Model
     cfg = smoke_config(get_config(arch))
     plan = make_plan(cfg, 1, 1)
     model = Model(cfg, plan)
-    ctx = ParallelCtx(policy=policy)
+    ctx = ParallelCtx(plan=from_spec(comm_spec))
     oc = OptConfig(lr_max=1e-3, lr_min=1e-4, warmup_steps=5,
                    total_steps=total_steps)
     tc = TrainerConfig(total_steps=total_steps, ckpt_every=10,
@@ -42,7 +43,7 @@ def small_setup(tmp_path, policy, total_steps=30, seed=0, arch="gpt-350m"):
 
 def test_loss_decreases(tmp_path):
     model, ctx, oc, tc, data = small_setup(
-        tmp_path, CommPolicy.baseline(), total_steps=30)
+        tmp_path, "baseline", total_steps=30)
     tr = Trainer(model, mesh1(), ctx, oc, tc, data)
     _, _, losses = tr.run(resume=False)
     first, last = np.mean(losses[:5]), np.mean(losses[-5:])
@@ -54,12 +55,12 @@ def test_taco_training_tracks_baseline(tmp_path):
     compression on every TP site changes the loss trajectory only
     marginally."""
     runs = {}
-    for name, policy in [
-        ("base", CommPolicy.baseline()),
-        ("taco", CommPolicy.taco(TacoConfig(impl="jnp"))),
+    for name, spec in [
+        ("base", "baseline"),
+        ("taco", "tp=taco:jnp"),
     ]:
         model, ctx, oc, tc, data = small_setup(
-            tmp_path / name, policy, total_steps=30)
+            tmp_path / name, spec, total_steps=30)
         tr = Trainer(model, mesh1(), ctx, oc, tc, data)
         _, _, losses = tr.run(resume=False)
         runs[name] = losses
@@ -76,7 +77,7 @@ def test_restart_after_injected_failure(tmp_path):
     checkpoint and converge to the same final state as an uninterrupted
     run (bitwise replay thanks to the pure-function-of-step pipeline)."""
     model, ctx, oc, tc, data = small_setup(
-        tmp_path, CommPolicy.baseline(), total_steps=20)
+        tmp_path, "baseline", total_steps=20)
     # uninterrupted reference
     tr_ref = Trainer(model, mesh1(), ctx, oc, tc, data)
     p_ref, _, _ = tr_ref.run(resume=False)
