@@ -1,5 +1,7 @@
 """Shared benchmark utilities. Every table prints ``name,us_per_call,
-derived`` CSV rows via ``emit`` so benchmarks/run.py output is uniform."""
+derived`` CSV rows via ``emit`` so benchmarks/run.py output is uniform;
+``emit`` also records each row in ``ROWS`` so the harness can persist a
+machine-readable perf trajectory (``benchmarks.run --json``)."""
 from __future__ import annotations
 
 import time
@@ -7,9 +9,16 @@ import time
 import jax
 import numpy as np
 
+# every emit() of the current process, in order — drained by run.py --json
+ROWS: list[dict] = []
+
 
 def emit(name: str, us_per_call: float | None, derived: str):
     us = "" if us_per_call is None else f"{us_per_call:.2f}"
+    ROWS.append({"name": name,
+                 "us_per_call": None if us_per_call is None
+                 else float(us_per_call),
+                 "derived": derived})
     print(f"{name},{us},{derived}", flush=True)
 
 

@@ -3,14 +3,24 @@
   accuracy       Table 1 + Fig 11/13/14 (convergence under compression grid)
   blocksize      Table 2 (ASH block-size sweep)
   fusion         Fig 16 (fused vs unfused operator; rotated-domain reduce)
+  overlap        single-buffer vs multi-buffer wire packing + chunked ring
+                 vs monolithic transport (8-device CPU subprocess)
   comm_volume    Fig 15 / §5.4 (TP wire bytes per step vs TP degree)
   roofline_table deliverable (g) presentation from dry-run artifacts
   threed         Table 3 (3D-parallel throughput model; needs PP results)
 
 Output format: ``name,us_per_call,derived`` CSV rows.
 Usage: PYTHONPATH=src python -m benchmarks.run [--quick] [--only NAME]
+       [--json [PATH]]
+
+``--json`` persists every emitted row (plus run metadata) to
+``BENCH_collectives.json`` (or PATH) — the machine-readable perf
+trajectory future PRs diff against; the fusion and overlap tables are the
+collective-engine baselines.
 """
 import argparse
+import json
+import platform
 import sys
 import traceback
 
@@ -18,14 +28,20 @@ import traceback
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--quick", action="store_true")
-    ap.add_argument("--only", default=None)
+    ap.add_argument("--only", default=None,
+                    help="comma-separated table names (e.g. fusion,overlap)")
+    ap.add_argument("--json", nargs="?", const="BENCH_collectives.json",
+                    default=None, metavar="PATH",
+                    help="persist all emitted rows to PATH "
+                         "(default BENCH_collectives.json)")
     args = ap.parse_args()
 
     from benchmarks import (accuracy, blocksize, comm_volume, fusion,
-                            roofline_table)
+                            overlap, roofline_table)
     tables = {
         "blocksize": blocksize.run,
         "fusion": fusion.run,
+        "overlap": overlap.run,
         "comm_volume": comm_volume.run,
         "roofline_table": roofline_table.run,
         "accuracy": accuracy.run,
@@ -35,10 +51,14 @@ def main() -> None:
         tables["threed"] = threed.run
     except ImportError:
         pass
+    only = set(args.only.split(",")) if args.only else None
+    if only and not only <= set(tables):
+        raise SystemExit(f"unknown tables {sorted(only - set(tables))}; "
+                         f"available: {sorted(tables)}")
     print("name,us_per_call,derived")
     failures = []
     for name, fn in tables.items():
-        if args.only and name != args.only:
+        if only and name not in only:
             continue
         try:
             fn(quick=args.quick)
@@ -46,6 +66,24 @@ def main() -> None:
             failures.append(name)
             print(f"{name},,ERROR:{type(e).__name__}:{e}", flush=True)
             traceback.print_exc(file=sys.stderr)
+    if args.json:
+        from benchmarks import common
+        import jax
+        payload = {
+            "meta": {
+                "quick": args.quick,
+                "only": args.only,
+                "backend": jax.default_backend(),
+                "device_count": jax.device_count(),
+                "jax": jax.__version__,
+                "python": platform.python_version(),
+            },
+            "rows": common.ROWS,
+        }
+        with open(args.json, "w") as f:
+            json.dump(payload, f, indent=2)
+            f.write("\n")
+        print(f"wrote {len(common.ROWS)} rows to {args.json}", flush=True)
     if failures:
         raise SystemExit(f"benchmark failures: {failures}")
 

@@ -2,7 +2,9 @@
 # Tier-1 CI gate: the full test suite must collect cleanly and pass.
 #
 #   scripts/ci.sh            # full tier-1 run (includes slow subprocess tests)
-#   scripts/ci.sh --fast     # skip tests marked slow (quick signal)
+#   scripts/ci.sh --fast     # skip slow-marked tests in the main run
+#                            # (the fail-fast gate below still runs the
+#                            # transport-parity subprocess + overlap smoke)
 #
 # pytest exits 2 on collection errors and 1 on failures; both fail the gate.
 set -euo pipefail
@@ -16,14 +18,25 @@ if [[ "${1:-}" == "--fast" ]]; then
     shift
 fi
 
-# Fail-fast gate: the compat shims and the codec-registry/spec-grammar
-# contract run first (~seconds; the jit/HLO-lowering registry test is
-# excluded here) — grammar or shim breakage surfaces before the expensive
-# model/train tests spin up. The gate files run again in the main
-# invocation below: that duplication is deliberate, so the final pytest
-# summary line still counts the complete suite.
+# Fail-fast gate: the compat shims, the codec-registry/spec-grammar
+# contract, and the transport-parity suite (packed-wire + chunked-ring
+# bit-identity incl. the 8-device subprocess matrix) run first — grammar,
+# shim, or wire-format breakage surfaces before the expensive model/train
+# tests spin up. The jit/HLO-lowering registry test is excluded from the
+# gate; the test_overlap.py invocation passes no -m filter, so its
+# slow-marked parity subprocess (~40s) deliberately runs here even under
+# --fast: the gate is the ONLY place parity runs in fast mode, and in
+# full mode the re-run in the main invocation below is the same
+# deliberate duplication as the compat/registry files (the final pytest
+# summary line counts the complete suite).
 python -m pytest -x -q tests/test_compat.py tests/test_registry.py \
     -k "not hlo"
+python -m pytest -x -q tests/test_overlap.py
+
+# Collective-transport benchmark smoke: the overlap table must RUN
+# (8-device subprocess, packed vs multi-buffer vs chunked ring) — no
+# timing assertions, just successful execution of the measured paths.
+python -m benchmarks.run --only overlap --quick
 
 # pytest aborts before running anything and exits 2 on collection errors,
 # so a single invocation is both the collection gate and the test run

@@ -13,6 +13,15 @@ peer dimension and ``n`` (static) is a multiple of ``granule``. ``encode``
 returns a tuple of arrays that the collective layer transports; ``decode``
 inverts; ``decode_sum`` reduces a stacked peer axis during ReduceScatter
 (fused, rotated-domain where applicable).
+
+Every compressing codec also publishes a static :class:`WireLayout` via
+``wire_layout(n)`` — the byte offsets/dtypes of its encoded components per
+slot — which lets the collective layer bitcast-and-concatenate all
+components into ONE contiguous uint8 wire buffer per hop (one lax
+collective instead of 2–3), and a ``chunks`` knob selecting the chunked
+ring-overlap transport (``chunks=N`` double-buffered wire slices; see
+``repro.core.collectives``).  ``IdentityCodec.wire_layout`` returns None:
+the baseline transports the raw tensor and has nothing to pack.
 """
 from __future__ import annotations
 
@@ -28,13 +37,68 @@ from repro.kernels import ops as kops
 
 __all__ = [
     "IdentityCodec", "TacoCodec", "Sdp4BitCodec", "TahQuantCodec",
-    "Int8Codec", "wire_bytes_per_element",
+    "Int8Codec", "wire_bytes_per_element", "WireComponent", "WireLayout",
+    "make_wire_layout",
 ]
+
+
+# --------------------------------------------------------------------------
+# wire layout: the static byte format of one encoded slot
+# --------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class WireComponent:
+    """One encoded component inside the packed wire buffer: ``size``
+    elements of ``dtype`` (a numpy dtype name) starting at byte
+    ``offset`` of the slot's contiguous uint8 wire row."""
+
+    name: str
+    dtype: str
+    size: int
+    offset: int
+
+    @property
+    def itemsize(self) -> int:
+        return np.dtype(self.dtype).itemsize
+
+    @property
+    def nbytes(self) -> int:
+        return self.size * self.itemsize
+
+
+@dataclasses.dataclass(frozen=True)
+class WireLayout:
+    """Static per-slot wire format: components in ``encode`` output order,
+    densely packed (offset_i+1 == offset_i + nbytes_i)."""
+
+    components: tuple
+
+    @property
+    def total_bytes(self) -> int:
+        if not self.components:
+            return 0
+        last = self.components[-1]
+        return last.offset + last.nbytes
+
+
+def make_wire_layout(*comps) -> WireLayout:
+    """Build a dense :class:`WireLayout` from ``(name, dtype, size)``
+    triples, computing byte offsets."""
+    out, off = [], 0
+    for name, dtype, size in comps:
+        c = WireComponent(name, np.dtype(dtype).name, int(size), off)
+        out.append(c)
+        off += c.nbytes
+    return WireLayout(tuple(out))
 
 
 @dataclasses.dataclass(frozen=True)
 class IdentityCodec:
     granule: int = 1
+    chunks: int = 1   # fixed; the baseline has no wire layout to slice
+
+    def wire_layout(self, n):
+        return None   # transports the raw tensor — nothing to pack
 
     def encode(self, x):
         return (x,)
@@ -61,10 +125,15 @@ class TacoCodec:
     """The paper's compressor. Payload uint8 (bitcast fp8/int8) + scales."""
 
     cfg: TacoConfig = TacoConfig()
+    chunks: int = 1
 
     @property
     def granule(self) -> int:
         return self.cfg.block_size
+
+    def wire_layout(self, n):
+        from repro.core import taco as taco_mod
+        return make_wire_layout(*taco_mod.wire_components(self.cfg, n))
 
     def _split(self, x):
         slots, n = x.shape
@@ -127,10 +196,15 @@ class TacoCodec:
 class Sdp4BitCodec:
     block: int = 128
     rotate: bool = True
+    chunks: int = 1
 
     @property
     def granule(self) -> int:
         return self.block
+
+    def wire_layout(self, n):
+        return make_wire_layout(("payload", "uint8", n // 2),
+                                ("scale", "float32", n // self.block))
 
     def encode(self, x):
         return dp_compress.compress_int4(x, self.block, self.rotate)
@@ -151,10 +225,15 @@ class Sdp4BitCodec:
 @dataclasses.dataclass(frozen=True)
 class TahQuantCodec:
     group: int = 64
+    chunks: int = 1
 
     @property
     def granule(self) -> int:
         return self.group
+
+    def wire_layout(self, n):
+        return make_wire_layout(("payload", "int8", n),
+                                ("scale", "float32", n // self.group))
 
     def encode(self, x):
         return pp_compress.compress_int8_group(x, self.group)
@@ -177,10 +256,15 @@ class Int8Codec:
     """Per-group int8 for weight all-gather (beyond-paper, DESIGN.md §7.3)."""
 
     group: int = 128
+    chunks: int = 1
 
     @property
     def granule(self) -> int:
         return self.group
+
+    def wire_layout(self, n):
+        return make_wire_layout(("payload", "int8", n),
+                                ("scale", "float32", n // self.group))
 
     def encode(self, x):
         return pp_compress.compress_int8_group(x, self.group)

@@ -17,9 +17,25 @@ All six public collectives are instances of ONE generic wrapper,
 ``_compressed_collective(impl, bwd)``: ``impl`` computes the forward
 communication with the forward codec, ``bwd`` maps the cotangent through
 the conjugate collective with the codec pair swapped. The shared
-pad → encode → transport-each-wire-component → decode/decode_sum → crop
-plumbing lives in ``_transport``; a new collective (e.g. a chunked-overlap
-variant) is one ``impl`` + one ``bwd`` line.
+pad → encode → pack → move-one-wire-buffer → unpack → decode/decode_sum
+→ crop plumbing lives in ``_transport``.
+
+Wire packing (ZipCCL-style fused buffer): every compressing codec
+publishes a static ``wire_layout(n)`` (byte offsets/dtypes of its encoded
+components), and ``_transport`` bitcast-concatenates all components into
+ONE contiguous uint8 buffer per hop — each compressed all-gather /
+reduce-scatter / ppermute / all-to-all issues exactly ONE lax collective
+instead of one per component (2–3 before).  ``multibuffer_wire()``
+restores the per-component transport for parity tests and benchmarks.
+
+Chunked ring overlap (Flash-Communication-style): codecs with
+``chunks=N > 1`` route their all-gather / reduce-scatter through ring
+variants built from ``ppermute`` steps over N wire slices.  Chunk
+streams carry no data dependencies on each other, so the encode of chunk
+i+1 and the fused decode/decode_sum of chunk i−1 are free to overlap the
+transfer of chunk i under an asynchronous scheduler; results are
+bit-identical to the monolithic path (contributions are compressed once
+and peer sums happen at the destination in peer-index order).
 
 Megatron conjugate pairs provided for both TP modes:
   SP mode        : ``all_gather_c``(seq) fwd / ``psum_scatter_c``(seq) bwd
@@ -33,6 +49,7 @@ stage, cf. MegaScale).
 """
 from __future__ import annotations
 
+import contextlib
 import functools
 
 import jax
@@ -57,13 +74,97 @@ def _pad_to(x, mult):
     return x, n
 
 
+# --------------------------------------------------------------------------
+# single-buffer wire packing
+# --------------------------------------------------------------------------
+
+_WIRE_PACKING = True
+
+
+@contextlib.contextmanager
+def multibuffer_wire():
+    """Temporarily restore the pre-packing transport engine: each encoded
+    component moves as its own collective, and chunked-ring codecs fall
+    back to the monolithic transport (the ring exists to slice the packed
+    buffer).  Affects TRACING: only use around fresh jit/lower calls
+    (parity tests and benchmarks) — already-compiled functions keep
+    whatever layout they were traced with."""
+    global _WIRE_PACKING
+    prev, _WIRE_PACKING = _WIRE_PACKING, False
+    try:
+        yield
+    finally:
+        _WIRE_PACKING = prev
+
+
+def _wire_layout(codec, n):
+    wl = getattr(codec, "wire_layout", None)
+    return None if wl is None else wl(n)
+
+
+def _to_bytes(a):
+    """Bitcast any wire component to a flat-per-slot uint8 view."""
+    if a.dtype == jnp.uint8:
+        return a
+    if a.dtype.itemsize == 1:
+        return jax.lax.bitcast_convert_type(a, jnp.uint8)
+    u8 = jax.lax.bitcast_convert_type(a, jnp.uint8)   # (..., k, itemsize)
+    return u8.reshape(*a.shape[:-1], a.shape[-1] * a.dtype.itemsize)
+
+
+def _from_bytes(seg, dtype, size):
+    dt = jnp.dtype(dtype)
+    if dt.itemsize == 1:
+        return seg if dt == jnp.uint8 \
+            else jax.lax.bitcast_convert_type(seg, dt)
+    seg = seg.reshape(*seg.shape[:-1], size, dt.itemsize)
+    return jax.lax.bitcast_convert_type(seg, dt)
+
+
+def pack_wire(enc, layout):
+    """Encoded component tuple -> ONE contiguous uint8 buffer per slot,
+    laid out per ``layout`` (bitcast + trailing-axis concatenation).
+
+    The static width checks catch an encode/wire_layout disagreement at
+    trace time — without them a mismatched codec would ship bit-garbage
+    through unpack_wire's static slices with no exception anywhere."""
+    if len(enc) != len(layout.components):
+        raise ValueError(f"encode produced {len(enc)} components, layout "
+                         f"declares {len(layout.components)}")
+    parts = []
+    for a, comp in zip(enc, layout.components):
+        b = _to_bytes(a)
+        if b.shape[-1] != comp.nbytes:
+            raise ValueError(
+                f"component {comp.name!r}: encode emitted {b.shape[-1]} "
+                f"bytes/slot, layout declares {comp.nbytes}")
+        parts.append(b)
+    return parts[0] if len(parts) == 1 else jnp.concatenate(parts, axis=-1)
+
+
+def unpack_wire(wire, layout):
+    """Inverse of :func:`pack_wire`: slice the uint8 buffer at the static
+    byte offsets and bitcast each component back.  Works with any number
+    of leading (peer/slot) axes."""
+    return tuple(
+        _from_bytes(wire[..., c.offset:c.offset + c.nbytes], c.dtype, c.size)
+        for c in layout.components)
+
+
 def _transport(x2d, codec, move, *, reduce=False, dtype):
     """Shared codec plumbing for every compressed collective: pad the
-    trailing dim of ``x2d`` to the codec granule, encode, apply ``move``
-    (one lax collective) to each wire component, decode — fused-summing
-    the stacked peer axis when ``reduce`` — and crop the padding."""
+    trailing dim of ``x2d`` to the codec granule, encode, pack all wire
+    components into one uint8 buffer, apply ``move`` (ONE lax collective),
+    unpack, decode — fused-summing the stacked peer axis when ``reduce``
+    — and crop the padding.  Codecs without a wire layout (or under
+    :func:`multibuffer_wire`) fall back to one ``move`` per component."""
     padded, n = _pad_to(x2d, codec.granule)
-    enc = tuple(move(a) for a in codec.encode(padded))
+    enc = codec.encode(padded)
+    layout = _wire_layout(codec, padded.shape[-1]) if _WIRE_PACKING else None
+    if layout is None:
+        enc = tuple(move(a) for a in enc)
+    else:
+        enc = unpack_wire(move(pack_wire(enc, layout)), layout)
     if reduce:
         return codec.decode_sum(enc, padded.shape[-1], dtype)[:n]
     return codec.decode(enc, padded.shape[-1], dtype)[..., :n]
@@ -101,9 +202,98 @@ def _compressed_collective(name, impl, bwd, n_static, doc=None):
 # forward impls (shared by the custom_vjp wrappers below)
 # --------------------------------------------------------------------------
 
+def _ring_chunks(codec):
+    """Number of ring chunks the codec requests (1 = monolithic)."""
+    return int(getattr(codec, "chunks", 1) or 1)
+
+
+def _peer_order(stack, idx, p):
+    """Reorder an arrival-ordered ``(P, ...)`` stack into peer-index order.
+
+    Ring arrival k holds the buffer of peer ``(idx - k) mod P``, so peer
+    j's buffer sits at arrival ``(idx - j) mod P``."""
+    return jnp.take(stack, (idx - jnp.arange(p)) % p, axis=0)
+
+
+def _chunk_slices(x2d, codec):
+    """Pad the trailing dim to ``chunks * granule`` and return the static
+    chunk views plus the original trailing size and chunk size."""
+    chunks = _ring_chunks(codec)
+    padded, n0 = _pad_to(x2d, chunks * codec.granule)
+    csz = padded.shape[-1] // chunks
+    return [padded[:, c * csz:(c + 1) * csz] for c in range(chunks)], n0, csz
+
+
+def _ag_one_ring(x, ax, dim, codec):
+    """Chunked ring all-gather: the local wire buffer is forwarded
+    neighbor-to-neighbor for P-1 ``ppermute`` steps per chunk.  Chunk
+    streams are data-independent, so chunk c+1's encode and chunk c-1's
+    decode can overlap chunk c's transfer (double buffering); the decode
+    consumes the peer-ordered wire stack, making the result bit-identical
+    to the monolithic single-collective path."""
+    p = axis_size(ax)
+    segs, n0, csz = _chunk_slices(x.reshape(1, -1), codec)
+    layout = _wire_layout(codec, csz)
+    ring = tuple((s, (s + 1) % p) for s in range(p))
+    idx = jax.lax.axis_index(ax)
+    # encode+pack every chunk up front: no chunk depends on another's ring
+    # steps, which is exactly what lets an async scheduler overlap them
+    wires = [pack_wire(codec.encode(seg), layout) for seg in segs]
+    outs = []
+    for buf in wires:
+        arrivals = [buf]
+        for _ in range(p - 1):
+            buf = jax.lax.ppermute(buf, ax, ring)
+            arrivals.append(buf)
+        stack = _peer_order(jnp.stack(arrivals)[:, 0], idx, p)    # (P, bytes)
+        outs.append(codec.decode(unpack_wire(stack, layout), csz, x.dtype))
+    dec = (jnp.concatenate(outs, axis=-1) if len(outs) > 1
+           else outs[0])[:, :n0]                                  # (P, n)
+    dec = dec.reshape(p, *x.shape)
+    out = jnp.moveaxis(dec, 0, dim)
+    shape = list(x.shape)
+    shape[dim] *= p
+    return out.reshape(shape)
+
+
+def _rs_one_ring(x, ax, dim, codec):
+    """Chunked ring reduce-scatter (two-shot preserving): at step k every
+    device ppermutes its once-compressed contribution for the peer k hops
+    ahead directly to it — no partial-sum requantization — and the fused
+    ``decode_sum`` runs per chunk on the peer-ordered stack, bit-identical
+    to the monolithic compressed all-to-all."""
+    p = axis_size(ax)
+    moved = jnp.moveaxis(x, dim, 0)
+    d = moved.shape[0]
+    assert d % p == 0, f"scatter dim {d} not divisible by axis size {p}"
+    rows = moved.reshape(p, -1)                    # row j -> destined peer j
+    segs, n0, csz = _chunk_slices(rows, codec)
+    layout = _wire_layout(codec, csz)
+    idx = jax.lax.axis_index(ax)
+    outs = []
+    for seg in segs:
+        wire = pack_wire(codec.encode(seg), layout)            # (P, bytes)
+        arrivals = [jax.lax.dynamic_index_in_dim(wire, idx, 0,
+                                                 keepdims=False)]
+        for k in range(1, p):
+            send = jax.lax.dynamic_index_in_dim(wire, (idx + k) % p, 0,
+                                                keepdims=False)
+            shift = tuple((s, (s + k) % p) for s in range(p))
+            arrivals.append(jax.lax.ppermute(send, ax, shift))
+        stack = _peer_order(jnp.stack(arrivals), idx, p)       # (P, bytes)
+        dec = codec.decode_sum(unpack_wire(stack, layout), csz, x.dtype)
+        outs.append(dec.reshape(-1)[:csz])
+    summed = (jnp.concatenate(outs) if len(outs) > 1 else outs[0])[:n0]
+    out = summed.reshape(d // p, *moved.shape[1:])
+    return jnp.moveaxis(out, 0, dim) if dim != 0 else out
+
+
 def _ag_one(x, ax, dim, codec):
     if isinstance(codec, IdentityCodec):
         return jax.lax.all_gather(x, ax, axis=dim, tiled=True)
+    if _WIRE_PACKING and _ring_chunks(codec) > 1 \
+            and _wire_layout(codec, codec.granule):
+        return _ag_one_ring(x, ax, dim, codec)
     p = axis_size(ax)
     dec = _transport(
         x.reshape(1, -1), codec,
@@ -125,6 +315,9 @@ def _ag_impl(x, axis_name, dim, codec):
 def _rs_one(x, ax, dim, codec):
     if isinstance(codec, IdentityCodec):
         return jax.lax.psum_scatter(x, ax, scatter_dimension=dim, tiled=True)
+    if _WIRE_PACKING and _ring_chunks(codec) > 1 \
+            and _wire_layout(codec, codec.granule):
+        return _rs_one_ring(x, ax, dim, codec)
     p = axis_size(ax)
     moved = jnp.moveaxis(x, dim, 0)
     d = moved.shape[0]

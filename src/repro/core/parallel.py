@@ -118,6 +118,17 @@ class CommPlan:
         return {path: float(getattr(self, path).bytes_per_element())
                 for path in PATHS}
 
+    def wire_chunks(self) -> dict:
+        """Per-path ring-overlap chunk counts (1 = monolithic transport).
+
+        ``chunks`` rides on the codec itself, so every consumer of the
+        plan (train ``run_segments``, serve decode, the pipeline step)
+        picks up the chunked ring transport with no extra plumbing — the
+        collective layer dispatches on the codec.  This accessor only
+        surfaces the knob for telemetry."""
+        return {path: int(getattr(getattr(self, path), "chunks", 1))
+                for path in PATHS}
+
 
 @dataclasses.dataclass(frozen=True)
 class ParallelCtx:

@@ -27,11 +27,16 @@ Codec args (all optional; normalized output only emits non-defaults):
     taco      e4m3|e5m2|int8, b<N> (block), g<N> (quant group),
               dual|folded, ash|hadamard|notransform, blockscale|tensorscale,
               auto|jnp|pallas|pallas_interpret, cd<dtype> (compute dtype),
-              tau<float>, eps<float>, disabled
-    sdp4bit   b<N> (block), norot
-    tahquant  g<N> (group)
-    int8      g<N> (group)
+              tau<float>, eps<float>, disabled, chunks=<N>
+    sdp4bit   b<N> (block), norot, chunks=<N>
+    tahquant  g<N> (group), chunks=<N>
+    int8      g<N> (group), chunks=<N>
     none      no args ("identity" is a whole-spec alias, not a codec name)
+
+``chunks=N`` (N >= 1) selects the chunked ring-overlap transport for the
+codec's all-gather / reduce-scatter hops (N double-buffered wire slices;
+see ``repro.core.collectives``).  It is only valid for codecs that
+publish a wire layout — ``none:chunks=4`` raises :class:`CommSpecError`.
 
 Examples::
 
@@ -67,10 +72,17 @@ class Codec(Protocol):
     ``encode`` maps a 2-D ``(slots, n)`` array (``n`` a static multiple of
     ``granule``) to a tuple of wire arrays; ``decode`` inverts; and
     ``decode_sum`` reduces a stacked peer axis during ReduceScatter.
+    ``wire_layout(n)`` publishes the static per-slot byte layout of the
+    ``encode`` output (a ``codecs.WireLayout``) so the collective layer
+    can pack all components into one fused wire buffer — return None for
+    codecs that transport raw tensors (then ``chunks=`` specs are
+    rejected and the multi-buffer transport is used).
     """
 
     @property
     def granule(self) -> int: ...
+
+    def wire_layout(self, n): ...
 
     def encode(self, x): ...
 
@@ -139,12 +151,19 @@ def codec_from_spec(spec: str):
     name, args = parts[0], tuple(parts[1:])
     entry = get_codec(name)
     try:
-        return entry.parse(args)
+        codec = entry.parse(args)
     except CommSpecError:
         raise
     except Exception as e:  # noqa: BLE001 — surface as a spec error
         raise CommSpecError(f"bad args for codec {name!r}: {spec!r} ({e})") \
             from e
+    if getattr(codec, "chunks", 1) > 1:
+        wl = getattr(codec, "wire_layout", None)
+        if wl is None or wl(codec.granule) is None:
+            raise CommSpecError(
+                f"codec {name!r} has no wire layout; 'chunks=' requires "
+                "one (chunked ring transport slices the packed wire buffer)")
+    return codec
 
 
 def codec_to_spec(codec) -> str:
@@ -189,16 +208,32 @@ def _pos_int(tok, prefix):
     return n
 
 
+def _chunks_val(tok):
+    """``chunks=<N>`` codec arg -> N (>= 1)."""
+    try:
+        n = int(tok[len("chunks="):])
+    except ValueError:
+        raise CommSpecError(
+            f"arg {tok!r}: chunks needs an integer >= 1") from None
+    if n < 1:
+        raise CommSpecError(f"arg {tok!r}: chunks must be >= 1, got {n}")
+    return n
+
+
 def _parse_taco(args):
     kw = {}
+    codec_kw = {}
 
-    def put(key, val, tok):
-        if key in kw:
+    def put(key, val, tok, into=None):
+        d = kw if into is None else into
+        if key in d:
             raise CommSpecError(f"duplicate taco arg {tok!r}")
-        kw[key] = val
+        d[key] = val
 
     for tok in args:
-        if tok in _TACO_FMT:
+        if tok.startswith("chunks="):
+            put("chunks", _chunks_val(tok), tok, into=codec_kw)
+        elif tok in _TACO_FMT:
             put("fmt", tok, tok)
         elif tok in _TACO_META:
             put("metadata", tok, tok)
@@ -224,7 +259,7 @@ def _parse_taco(args):
             raise CommSpecError(f"unknown taco arg {tok!r}")
     # invalid combinations (e.g. tensorscale + g<N>) raise ValueError in
     # TacoConfig.__post_init__; codec_from_spec wraps that as CommSpecError
-    return TacoCodec(TacoConfig(**kw))
+    return TacoCodec(TacoConfig(**kw), **codec_kw)
 
 
 def _unparse_taco(codec):
@@ -253,13 +288,17 @@ def _unparse_taco(codec):
         out.append(f"tau{cfg.tau!r}")
     if cfg.eps != ref.eps:
         out.append(f"eps{cfg.eps!r}")
+    if codec.chunks != 1:
+        out.append(f"chunks={codec.chunks}")
     return tuple(out)
 
 
 def _parse_sdp4bit(args):
     kw = {}
     for tok in args:
-        if tok.startswith("b") and tok[1:].isdigit():
+        if tok.startswith("chunks="):
+            kw["chunks"] = _chunks_val(tok)
+        elif tok.startswith("b") and tok[1:].isdigit():
             kw["block"] = _pos_int(tok, "b")
         elif tok == "norot":
             kw["rotate"] = False
@@ -274,6 +313,8 @@ def _unparse_sdp4bit(codec):
         out.append(f"b{codec.block}")
     if not codec.rotate:
         out.append("norot")
+    if codec.chunks != 1:
+        out.append(f"chunks={codec.chunks}")
     return tuple(out)
 
 
@@ -281,14 +322,21 @@ def _make_group_codec(cls, name):
     def parse(args):
         kw = {}
         for tok in args:
-            if tok.startswith("g") and tok[1:].isdigit():
+            if tok.startswith("chunks="):
+                kw["chunks"] = _chunks_val(tok)
+            elif tok.startswith("g") and tok[1:].isdigit():
                 kw["group"] = _pos_int(tok, "g")
             else:
                 raise CommSpecError(f"unknown {name} arg {tok!r}")
         return cls(**kw)
 
     def unparse(codec):
-        return (f"g{codec.group}",) if codec.group != cls().group else ()
+        out = []
+        if codec.group != cls().group:
+            out.append(f"g{codec.group}")
+        if codec.chunks != 1:
+            out.append(f"chunks={codec.chunks}")
+        return tuple(out)
 
     return parse, unparse
 

@@ -25,7 +25,8 @@ import jax.numpy as jnp
 from repro.core import ash as ash_mod
 from repro.core import quant as quant_mod
 
-__all__ = ["TacoConfig", "Compressed", "compress", "decompress", "wire_bytes", "raw_bytes"]
+__all__ = ["TacoConfig", "Compressed", "compress", "decompress", "wire_bytes",
+           "raw_bytes", "wire_components"]
 
 
 @dataclasses.dataclass(frozen=True)
@@ -120,6 +121,24 @@ def decompress(c: Compressed, cfg: TacoConfig, *, shape, dtype) -> jax.Array:
     for d in shape:
         size *= d
     return ash_mod.block_unpartition(blocks, size, shape).astype(dtype)
+
+
+def wire_components(cfg: TacoConfig, n: int) -> tuple:
+    """Static wire format of one ``n``-element slot (``n`` a multiple of
+    ``cfg.block_size``): ``(name, dtype_name, elems_per_slot)`` triples in
+    ``TacoCodec.encode`` output order.  This is the byte-layout contract
+    the collective layer packs into its single fused wire buffer.
+    """
+    b = cfg.block_size
+    if n % b:
+        raise ValueError(f"slot size {n} not a multiple of block {b}")
+    mb = n // b
+    groups = b // (cfg.quant_group_size or b)
+    payload_dtype = "uint8" if cfg.format_spec.is_float else "int8"
+    comps = [("payload", payload_dtype, n), ("scale", "float32", mb * groups)]
+    if cfg.metadata != "folded":
+        comps.append(("alpha", "float32", mb))
+    return tuple(comps)
 
 
 def wire_bytes(c: Compressed) -> int:

@@ -60,10 +60,15 @@ def supported(cfg) -> bool:
     return cfg.transform == "ash" and cfg.scale_granularity == "block"
 
 
-@functools.partial(jax.jit, static_argnames=("cfg", "interpret"))
 def compress_blocks_pallas(blocks: jax.Array, cfg, interpret: bool = False):
     """(M, B) -> (q (M,B) storage dtype, alpha (M,), s (M,G)). M % 128 == 0
-    is handled by padding here (padded rows are discarded by the caller)."""
+    is handled by padding here (padded rows are discarded by the caller).
+
+    Deliberately NOT wrapped in its own ``jax.jit``: every production call
+    site (``ops.compress_blocks`` under the collective/model jit) already
+    traces inside an outer jit, where a nested jit only adds dispatch and
+    trace-cache overhead on the hot path.
+    """
     fmt = cfg.format_spec
     m, b = blocks.shape
     gs = cfg.quant_group_size or b

@@ -42,9 +42,11 @@ def _decompress_kernel(q_ref, s_ref, alpha_ref, h_ref, o_ref, *, groups,
     o_ref[...] = g.astype(out_dtype)
 
 
-@functools.partial(jax.jit, static_argnames=("cfg", "interpret"))
 def decompress_blocks_pallas(q, s, alpha, cfg, interpret: bool = False):
-    """(q (M,B), s (M,G), alpha (M,)|None) -> blocks (M,B) compute dtype."""
+    """(q (M,B), s (M,G), alpha (M,)|None) -> blocks (M,B) compute dtype.
+
+    Like ``compress_blocks_pallas``, not jit-wrapped: call sites already
+    sit under an outer jit (nested jit = pure dispatch overhead)."""
     fmt = cfg.format_spec
     m, b = q.shape
     groups = s.shape[-1]
@@ -88,9 +90,9 @@ def _decompress_reduce_kernel(q_ref, f_ref, h_ref, o_ref, *, groups,
     o_ref[...] = acc.astype(out_dtype)
 
 
-@functools.partial(jax.jit, static_argnames=("cfg", "interpret"))
 def decompress_reduce_pallas(q, s, alpha, cfg, interpret: bool = False):
-    """Stacked peers: q (P,M,B), s (P,M,G), alpha (P,M)|None -> sum (M,B)."""
+    """Stacked peers: q (P,M,B), s (P,M,G), alpha (P,M)|None -> sum (M,B).
+    Not jit-wrapped (see ``decompress_blocks_pallas``)."""
     peers, m, b = q.shape
     groups = s.shape[-1]
     f = s if alpha is None else s / alpha[..., None]

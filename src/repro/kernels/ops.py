@@ -48,15 +48,17 @@ def decompress_reduce(q: jax.Array, s: jax.Array, alpha, cfg):
     impl = _impl_for(cfg)
     if impl == "jnp":
         from repro.core import ash as ash_mod
-        from repro.core import quant as quant_mod
         peers, m, b = q.shape
         groups = s.shape[-1]
-        f = s if alpha is None else s / alpha[..., None]
+        f = s if alpha is None else s / alpha[..., None]       # (P, M, G)
+        # grouped einsum broadcasts the per-group scale over each group's
+        # elements inside the contraction — no materialized (P, M, B)
+        # f32 scale tensor on the dry-run/CPU path
         zsum = jnp.einsum(
-            "pmb,pmb->mb",
-            q.astype(cfg.compute_dtype),
-            jnp.repeat(f, b // groups, axis=-1).reshape(peers, m, b).astype(cfg.compute_dtype),
-        )
+            "pmgk,pmg->mgk",
+            q.reshape(peers, m, groups, b // groups).astype(cfg.compute_dtype),
+            f.astype(cfg.compute_dtype),
+        ).reshape(m, b)
         if cfg.transform in ("ash", "hadamard"):
             zsum = zsum @ ash_mod.hadamard_matrix(b, cfg.compute_dtype)
         return zsum

@@ -30,8 +30,9 @@ def main():
     ap.add_argument("--smoke", action="store_true", default=True)
     ap.add_argument("--mesh", default="1,1,1")
     ap.add_argument("--comm-spec", default=None, dest="comm_spec",
-                    help="compression plan spec or alias "
-                         "(see docs/COMPRESSION.md)")
+                    help="compression plan spec or alias, e.g. "
+                         "'tp=taco:chunks=4' for the chunked ring-overlap "
+                         "decode transport (see docs/COMPRESSION.md)")
     ap.add_argument("--policy", default="taco",
                     help="deprecated alias for --comm-spec")
     ap.add_argument("--batch", type=int, default=4)

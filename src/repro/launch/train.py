@@ -34,8 +34,9 @@ def main():
                     help="pod,data,model sizes (needs matching device count)")
     ap.add_argument("--comm-spec", default=None, dest="comm_spec",
                     help="compression plan spec or alias, e.g. "
-                         "'tp=taco:folded,grad_rs=sdp4bit,skip_first=2' "
-                         "(see docs/COMPRESSION.md)")
+                         "'tp=taco:folded:chunks=4,grad_rs=sdp4bit,"
+                         "skip_first=2' — 'chunks=N' selects the chunked "
+                         "ring-overlap transport (see docs/COMPRESSION.md)")
     ap.add_argument("--policy", default="taco",
                     help="deprecated alias for --comm-spec")
     ap.add_argument("--lr", type=float, default=3e-4)

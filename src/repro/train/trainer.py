@@ -125,6 +125,9 @@ class Trainer:
                     1.0 if plan != self.ctx.plan.steady() else 0.0
                 for path, bpe in plan.wire_bytes_per_element().items():
                     metrics[f"comm/{path}_bytes_per_elem"] = bpe
+                for path, nc in plan.wire_chunks().items():
+                    if nc != 1:   # chunked ring transport active on path
+                        metrics[f"comm/{path}_chunks"] = nc
                 if step % self.tc.log_every == 0:
                     log.info("step %d loss %.4f gnorm %.3f lr %.2e (%.2fs) "
                              "tp_wire %.3fB/elem",

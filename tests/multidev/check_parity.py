@@ -1,0 +1,229 @@
+"""Transport-parity checks for the packed-wire + chunked-ring engine.
+
+Run in a subprocess with XLA_FLAGS=--xla_force_host_platform_device_count=8
+(see tests/test_overlap.py). Exits nonzero on any failure.
+
+Three contracts, for EVERY registered compressing codec (taco dual/folded,
+sdp4bit, tahquant, int8):
+
+  1. packed single-buffer transport is BIT-IDENTICAL to the multi-buffer
+     transport (the packing is pure bitcast/concat plumbing);
+  2. chunked ring transport (chunks=N) is BIT-IDENTICAL to the monolithic
+     single-collective transport (contributions are compressed once; peer
+     sums run at the destination in peer-index order) — including ragged
+     trailing sizes that force different internal padding;
+  3. lowered HLO: every packed compressed hop issues exactly ONE lax
+     collective (all-gather / all-to-all / collective-permute), the
+     multi-buffer layout issues one per wire component, and the ring
+     issues exactly chunks*(P-1) collective-permutes.
+"""
+import dataclasses
+import os
+import re
+from collections import Counter
+
+os.environ.setdefault("XLA_FLAGS", "--xla_force_host_platform_device_count=8")
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import PartitionSpec as P
+
+from repro.compat import shard_map
+from repro.core import collectives as cc
+from repro.core.codecs import (IdentityCodec, Int8Codec, Sdp4BitCodec,
+                               TacoCodec, TahQuantCodec)
+from repro.core.taco import TacoConfig
+
+ID = IdentityCodec()
+CODECS = {
+    "taco": TacoCodec(TacoConfig(impl="jnp")),
+    "taco_folded": TacoCodec(TacoConfig(impl="jnp", metadata="folded")),
+    "sdp4bit": Sdp4BitCodec(),
+    "tahquant": TahQuantCodec(),
+    "int8": Int8Codec(),
+}
+CHUNKS = 4
+TP = 4  # model-axis size of the (2, 4) mesh
+
+mesh = jax.make_mesh((2, 4), ("data", "model"))
+rng = np.random.default_rng(3)
+FAILURES = []
+
+_COLLECTIVE = re.compile(
+    r"stablehlo\.(all_gather|all_to_all|all_reduce|reduce_scatter"
+    r"|collective_permute|collective_broadcast)\b")
+
+
+def check_equal(name, got, want):
+    same = np.array_equal(np.asarray(got), np.asarray(want))
+    print(f"{'PASS' if same else 'FAIL'} {name}: bit-identical={same}")
+    if not same:
+        FAILURES.append(name)
+
+
+def check_counts(name, counter, want):
+    ok = dict(counter) == want
+    print(f"{'PASS' if ok else 'FAIL'} {name}: collectives={dict(counter)} "
+          f"want={want}")
+    if not ok:
+        FAILURES.append(name)
+
+
+def jit_sm(fn, in_spec, out_spec):
+    return jax.jit(shard_map(fn, mesh=mesh, in_specs=in_spec,
+                             out_specs=out_spec, check_vma=False))
+
+
+def collectives_of(fn, x, in_spec, out_spec):
+    txt = jit_sm(fn, in_spec, out_spec).lower(x).as_text()
+    return Counter(m.group(1) for m in _COLLECTIVE.finditer(txt))
+
+
+def run(fn, x, in_spec, out_spec):
+    return jit_sm(fn, in_spec, out_spec)(x)
+
+
+# ---------------------------------------------------------------- parity
+# ragged trailing size: 8*500 elements per device is NOT a multiple of any
+# codec granule, exercising the different pad-to-granule vs
+# pad-to-chunks*granule internal layouts
+x_ag = jnp.asarray(rng.normal(0, 0.02, (16, 512)).astype(np.float32))
+x_ragged = jnp.asarray(rng.normal(0, 0.02, (16, 500)).astype(np.float32))
+x_rs = jnp.asarray(rng.normal(0, 0.02, (16, 512)).astype(np.float32))
+x_a2a = jnp.asarray(rng.normal(0, 0.02, (32, 256)).astype(np.float32))
+PERM = tuple((i, (i + 1) % TP) for i in range(TP))
+
+for name, codec in CODECS.items():
+    ring = dataclasses.replace(codec, chunks=CHUNKS)
+
+    def ag(v, c=codec):
+        return cc.all_gather_c(v, "model", 0, c, ID)
+
+    def ag_ring(v, c=ring):
+        return cc.all_gather_c(v, "model", 0, c, ID)
+
+    def rs(v, c=codec):
+        return cc.psum_scatter_c(v, "model", 0, c, ID)
+
+    def rs_ring(v, c=ring):
+        return cc.psum_scatter_c(v, "model", 0, c, ID)
+
+    def ar(v, c=codec):
+        return cc.allreduce_g(v, "model", c, ID)
+
+    def ar_ring(v, c=ring):
+        return cc.allreduce_g(v, "model", c, ID)
+
+    def pp(v, c=codec):
+        return cc.ppermute_c(v, "model", PERM, c, ID)
+
+    def a2a(v, c=codec):
+        return cc.all_to_all_c(v, "model", 0, 0, c, ID)
+
+    ag_specs = (P(("data", "model")), P("data"))
+    rs_specs = (P(("data",)), P(("data", "model")))
+    ar_specs = (P(("data",)), P("data"))
+    pp_specs = (P(("data", "model")), P(("data", "model")))
+
+    packed_ag = run(ag, x_ag, *ag_specs)
+    with cc.multibuffer_wire():
+        check_equal(f"{name}/ag_packed_vs_multibuf",
+                    packed_ag, run(ag, x_ag, *ag_specs))
+    check_equal(f"{name}/ag_ring_vs_monolithic",
+                packed_ag, run(ag_ring, x_ag, *ag_specs))
+    check_equal(f"{name}/ag_ring_vs_monolithic_ragged",
+                run(ag, x_ragged, *ag_specs),
+                run(ag_ring, x_ragged, *ag_specs))
+
+    packed_rs = run(rs, x_rs, *rs_specs)
+    with cc.multibuffer_wire():
+        check_equal(f"{name}/rs_packed_vs_multibuf",
+                    packed_rs, run(rs, x_rs, *rs_specs))
+    check_equal(f"{name}/rs_ring_vs_monolithic",
+                packed_rs, run(rs_ring, x_rs, *rs_specs))
+    check_equal(f"{name}/rs_ring_vs_monolithic_ragged",
+                run(rs, x_ragged, *rs_specs),
+                run(rs_ring, x_ragged, *rs_specs))
+
+    check_equal(f"{name}/allreduce_ring_vs_monolithic",
+                run(ar, x_rs, *ar_specs), run(ar_ring, x_rs, *ar_specs))
+
+    packed_pp = run(pp, x_ag, *pp_specs)
+    with cc.multibuffer_wire():
+        check_equal(f"{name}/ppermute_packed_vs_multibuf",
+                    packed_pp, run(pp, x_ag, *pp_specs))
+    packed_a2a = run(a2a, x_a2a, *pp_specs)
+    with cc.multibuffer_wire():
+        check_equal(f"{name}/a2a_packed_vs_multibuf",
+                    packed_a2a, run(a2a, x_a2a, *pp_specs))
+
+# ------------------------------------------------- gradients through rings
+TACO = CODECS["taco"]
+TACO_RING = dataclasses.replace(TACO, chunks=CHUNKS)
+w = jnp.asarray(rng.normal(0, 0.1, (512, 64)).astype(np.float32))
+
+
+def grad_of(codec):
+    def loss(v):
+        g = cc.all_gather_c(v, "model", 0, codec, codec)
+        return jnp.sum(jnp.tanh(g @ w)) / g.size
+    return run(lambda v: jax.grad(loss)(v), x_ag,
+               P(("data", "model")), P(("data", "model")))
+
+
+check_equal("grad/ag_ring_vs_monolithic", grad_of(TACO), grad_of(TACO_RING))
+
+# --------------------------------------------------------- HLO inspection
+# taco dual metadata has THREE wire components — the strongest fusion case
+ag_specs = (P(("data", "model")), P("data"))
+rs_specs = (P(("data",)), P(("data", "model")))
+pp_specs = (P(("data", "model")), P(("data", "model")))
+
+check_counts("hlo/ag_packed_one_collective",
+             collectives_of(lambda v: cc.all_gather_c(v, "model", 0, TACO, ID),
+                            x_ag, *ag_specs),
+             {"all_gather": 1})
+with cc.multibuffer_wire():
+    check_counts("hlo/ag_multibuf_three_collectives",
+                 collectives_of(
+                     lambda v: cc.all_gather_c(v, "model", 0, TACO, ID),
+                     x_ag, *ag_specs),
+                 {"all_gather": 3})
+check_counts("hlo/rs_packed_one_collective",
+             collectives_of(
+                 lambda v: cc.psum_scatter_c(v, "model", 0, TACO, ID),
+                 x_rs, *rs_specs),
+             {"all_to_all": 1})
+check_counts("hlo/ppermute_packed_one_collective",
+             collectives_of(
+                 lambda v: cc.ppermute_c(v, "model", PERM, TACO, ID),
+                 x_ag, *pp_specs),
+             {"collective_permute": 1})
+check_counts("hlo/a2a_packed_one_collective",
+             collectives_of(
+                 lambda v: cc.all_to_all_c(v, "model", 0, 0, TACO, ID),
+                 x_a2a, *pp_specs),
+             {"all_to_all": 1})
+check_counts("hlo/ag_ring_chunked_permutes",
+             collectives_of(
+                 lambda v: cc.all_gather_c(v, "model", 0, TACO_RING, ID),
+                 x_ag, *ag_specs),
+             {"collective_permute": CHUNKS * (TP - 1)})
+check_counts("hlo/rs_ring_chunked_permutes",
+             collectives_of(
+                 lambda v: cc.psum_scatter_c(v, "model", 0, TACO_RING, ID),
+                 x_rs, *rs_specs),
+             {"collective_permute": CHUNKS * (TP - 1)})
+# multibuffer_wire() restores the FULL pre-packing engine: chunked codecs
+# fall back to the monolithic multi-buffer transport, no ring permutes
+with cc.multibuffer_wire():
+    check_counts("hlo/ring_disabled_under_multibuffer_wire",
+                 collectives_of(
+                     lambda v: cc.all_gather_c(v, "model", 0, TACO_RING, ID),
+                     x_ag, *ag_specs),
+                 {"all_gather": 3})
+
+if FAILURES:
+    raise SystemExit(f"FAILED: {FAILURES}")
+print("ALL TRANSPORT PARITY CHECKS PASSED")

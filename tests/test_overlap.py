@@ -1,0 +1,211 @@
+"""Wire-packing + chunked-ring-overlap transport tests.
+
+Fast in-process coverage of the single-buffer wire engine (layout
+invariants, pack/unpack bitcast round-trips, one-collective HLO on the
+paths that lower on a 1-device mesh, ``chunks=N`` spec grammar, and
+single-device parity); the full 8-device bit-identity + HLO-count matrix
+runs in a subprocess (tests/multidev/check_parity.py), which scripts/ci.sh
+also executes in its fail-fast gate.
+"""
+import os
+import re
+import subprocess
+import sys
+from collections import Counter
+from pathlib import Path
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from jax.sharding import PartitionSpec as P
+
+from repro.compat import shard_map
+from repro.core import collectives as cc
+from repro.core.codecs import IdentityCodec, TacoCodec
+from repro.core.registry import (CommSpecError, codec_from_spec, from_spec,
+                                 to_spec)
+from repro.core.taco import TacoConfig
+
+REPO = Path(__file__).resolve().parents[1]
+ID = IdentityCodec()
+TACO = TacoCodec(TacoConfig(impl="jnp"))
+
+_COLLECTIVE = re.compile(
+    r"stablehlo\.(all_gather|all_to_all|all_reduce|reduce_scatter"
+    r"|collective_permute|collective_broadcast)\b")
+
+# every registered compressing codec, plus arg'd variants with distinct
+# component shapes (dual vs folded metadata, quant groups)
+LAYOUT_SPECS = ["taco:jnp", "taco:jnp:folded", "taco:jnp:g64",
+                "sdp4bit", "sdp4bit:b256", "tahquant", "int8", "int8:g64"]
+
+
+def one_dev_mesh():
+    return jax.make_mesh((1, 1), ("data", "model"))
+
+
+def lowered_collectives(fn, x):
+    mesh = one_dev_mesh()
+    txt = jax.jit(shard_map(fn, mesh=mesh, in_specs=P(), out_specs=P(),
+                            check_vma=False)).lower(x).as_text()
+    return Counter(m.group(1) for m in _COLLECTIVE.finditer(txt))
+
+
+def run1(fn, x):
+    mesh = one_dev_mesh()
+    return jax.jit(shard_map(fn, mesh=mesh, in_specs=P(),
+                             out_specs=P(), check_vma=False))(x)
+
+
+# --------------------------------------------------------------------------
+# wire layout invariants + pack/unpack round-trip
+# --------------------------------------------------------------------------
+
+@pytest.mark.parametrize("spec", LAYOUT_SPECS)
+def test_wire_layout_matches_encode(spec, rng):
+    codec = codec_from_spec(spec)
+    n = 4 * codec.granule
+    layout = codec.wire_layout(n)
+    enc = codec.encode(jnp.asarray(
+        rng.normal(0, 0.02, (3, n)).astype(np.float32)))
+    assert len(layout.components) == len(enc)
+    off = 0
+    for comp, arr in zip(layout.components, enc):
+        assert comp.offset == off, "components must be densely packed"
+        assert comp.dtype == np.dtype(arr.dtype).name
+        assert comp.size == arr.shape[-1]
+        off += comp.nbytes
+    assert layout.total_bytes == off
+
+
+@pytest.mark.parametrize("spec", LAYOUT_SPECS)
+def test_pack_unpack_roundtrip_bitexact(spec, rng):
+    codec = codec_from_spec(spec)
+    n = 4 * codec.granule
+    layout = codec.wire_layout(n)
+    enc = codec.encode(jnp.asarray(
+        rng.normal(0, 0.02, (3, n)).astype(np.float32)))
+    wire = cc.pack_wire(enc, layout)
+    assert wire.dtype == jnp.uint8
+    assert wire.shape == (3, layout.total_bytes)
+    back = cc.unpack_wire(wire, layout)
+    for a, b in zip(enc, back):
+        assert a.dtype == b.dtype and a.shape == b.shape
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    # unpack must also handle extra leading (peer) axes
+    stacked = jnp.stack([wire, wire])
+    back2 = cc.unpack_wire(stacked, layout)
+    for a, b in zip(enc, back2):
+        assert b.shape == (2,) + a.shape
+
+
+def test_identity_codec_has_no_layout():
+    assert ID.wire_layout(128) is None
+
+
+# --------------------------------------------------------------------------
+# HLO: one collective per packed compressed hop (1-device mesh lowers
+# all_gather and collective_permute; the all_to_all paths are covered on
+# the 8-device mesh in check_parity.py)
+# --------------------------------------------------------------------------
+
+def test_hlo_packed_all_gather_is_one_collective(rng):
+    x = jnp.asarray(rng.normal(0, 0.02, (8, 512)).astype(np.float32))
+    got = lowered_collectives(
+        lambda v: cc.all_gather_c(v, "model", 0, TACO, ID), x)
+    assert dict(got) == {"all_gather": 1}, got
+
+
+def test_hlo_multibuffer_all_gather_one_collective_per_component(rng):
+    x = jnp.asarray(rng.normal(0, 0.02, (8, 512)).astype(np.float32))
+    with cc.multibuffer_wire():
+        got = lowered_collectives(
+            lambda v: cc.all_gather_c(v, "model", 0, TACO, ID), x)
+    assert dict(got) == {"all_gather": 3}, got  # payload + scale + alpha
+
+
+def test_hlo_packed_ppermute_is_one_collective(rng):
+    x = jnp.asarray(rng.normal(0, 0.02, (8, 512)).astype(np.float32))
+    got = lowered_collectives(
+        lambda v: cc.ppermute_c(v, "model", ((0, 0),), TACO, ID), x)
+    assert dict(got) == {"collective_permute": 1}, got
+
+
+# --------------------------------------------------------------------------
+# chunks=N spec grammar
+# --------------------------------------------------------------------------
+
+@pytest.mark.parametrize("spec", [
+    "tp=taco:folded:chunks=4",
+    "tp=taco:b128:jnp:chunks=2",
+    "grad_rs=sdp4bit:chunks=2",
+    "pp=tahquant:chunks=8",
+    "weight_ag=int8:g64:chunks=2",
+])
+def test_chunks_spec_roundtrip(spec):
+    plan = from_spec(spec)
+    assert to_spec(plan) == spec
+    assert from_spec(to_spec(plan)) == plan
+
+
+def test_chunks_one_is_the_default_and_not_emitted():
+    assert to_spec(from_spec("tp=taco:chunks=1")) == "tp=taco"
+    assert from_spec("tp=taco:chunks=1") == from_spec("tp=taco")
+
+
+@pytest.mark.parametrize("bad", [
+    "tp=taco:chunks=0",
+    "tp=taco:chunks=-2",
+    "tp=taco:chunks=x",
+    "tp=taco:chunks=",
+    "tp=taco:chunks=4:chunks=2",
+    "tp=none:chunks=4",          # no wire layout -> rejected
+    "pp=none:chunks=2",
+])
+def test_bad_chunks_specs_rejected(bad):
+    with pytest.raises(CommSpecError):
+        from_spec(bad)
+
+
+def test_chunks_threads_through_plan_telemetry():
+    plan = from_spec("tp=taco:chunks=4,grad_rs=sdp4bit:chunks=2")
+    assert plan.wire_chunks() == {"tp_fwd": 4, "tp_bwd": 4, "grad_rs": 2,
+                                  "weight_ag": 1, "pp": 1}
+    assert from_spec("baseline").wire_chunks() == \
+        {p: 1 for p in plan.wire_chunks()}
+
+
+# --------------------------------------------------------------------------
+# single-device parity (degenerate P=1 ring; full matrix is multi-device)
+# --------------------------------------------------------------------------
+
+def test_single_device_packed_and_ring_parity(rng):
+    x = jnp.asarray(rng.normal(0, 0.02, (8, 500)).astype(np.float32))
+    ring = codec_from_spec("taco:jnp:chunks=4")
+    for make in [lambda c: (lambda v: cc.all_gather_c(v, "model", 0, c, ID)),
+                 lambda c: (lambda v: cc.psum_scatter_c(v, "model", 0, c, ID))]:
+        packed = run1(make(TACO), x)
+        with cc.multibuffer_wire():
+            multi = run1(make(TACO), x)
+        chunked = run1(make(ring), x)
+        np.testing.assert_array_equal(np.asarray(packed), np.asarray(multi))
+        np.testing.assert_array_equal(np.asarray(packed), np.asarray(chunked))
+
+
+# --------------------------------------------------------------------------
+# the full 8-device matrix
+# --------------------------------------------------------------------------
+
+@pytest.mark.slow
+def test_multidevice_transport_parity_subprocess():
+    """Bit-identity of packed/chunked vs monolithic multi-buffer for every
+    codec + exact HLO collective counts, on a real (2, 4) device mesh."""
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+    env["PYTHONPATH"] = str(REPO / "src")
+    proc = subprocess.run(
+        [sys.executable, str(REPO / "tests" / "multidev" / "check_parity.py")],
+        env=env, capture_output=True, text=True, timeout=900)
+    assert proc.returncode == 0, proc.stdout + proc.stderr
+    assert "ALL TRANSPORT PARITY CHECKS PASSED" in proc.stdout

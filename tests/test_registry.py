@@ -37,6 +37,10 @@ CODEC_SPECS = [
     "tahquant:g32",
     "int8",
     "int8:g64",
+    "taco:folded:chunks=4",
+    "sdp4bit:chunks=2",
+    "tahquant:g32:chunks=8",
+    "int8:chunks=2",
 ]
 
 # decode tolerance (rel L2) per codec family on small-magnitude noise
@@ -102,7 +106,8 @@ def test_unknown_codec_and_bad_args_rejected():
                 "tahquant:b64", "none:arg", "taco:e4m3:e5m2",
                 "taco:g64:tensorscale", "taco:b0", "taco:g0",
                 "sdp4bit:b0", "tahquant:g0", "int8:g0",
-                "taco:cdnot_a_dtype"]:
+                "taco:cdnot_a_dtype", "taco:chunks=0", "taco:chunks=no",
+                "sdp4bit:chunks=-1", "none:chunks=4"]:
         with pytest.raises(CommSpecError):
             codec_from_spec(bad)
 
