@@ -18,6 +18,13 @@ single-buffer transport engine (`repro.core.collectives`):
     the ring pays for its extra launches (no async overlap to win back);
     the numbers exist to track that the decomposition overhead stays
     bounded, and the row is the baseline future async work improves on.
+  * kernel-fused wire emission vs the pack copy — ``encode_wire`` /
+    ``decode_wire`` running in the fused Pallas kernels (interpret mode
+    on CPU: same HLO structure, payload+scales+alpha stored straight at
+    their wire offsets, zero concatenates) vs the jnp copy path
+    (``pack_wire`` bitcast-concat).  The CPU rows track the trajectory of
+    the ``*_bw_*`` copy overhead the fusion eliminates; on TPU the fused
+    kernel is the single-HBM-write path.
 
 Timing collectives needs >1 device, and XLA device count is fixed at
 process start, so ``run`` re-executes this module as a worker subprocess
@@ -92,6 +99,8 @@ def _worker(quick: bool) -> None:
     taco = codec_from_spec("taco:jnp")          # dual metadata: 3 components
     chunks = 4
     taco_ring = codec_from_spec(f"taco:jnp:chunks={chunks}")
+    # fused wire-emission kernels (interpret mode on CPU)
+    taco_fused = codec_from_spec("taco:pallas_interpret")
 
     def jit_sm(fn, in_spec, out_spec):
         return jax.jit(shard_map(fn, mesh=mesh, in_specs=in_spec,
@@ -119,6 +128,12 @@ def _worker(quick: bool) -> None:
              f"collectives={n_p};vs_multibuf={us_m / us_p:.2f}x")
         emit(f"overlap/{tag}_multibuf", us_m,
              f"collectives={n_m};baseline")
+        # kernel-fused wire emission vs the pack_wire copy (us_p above)
+        fn_f = make_fn(taco_fused)
+        us_f = time_fn(fn_f, x, iters=iters)
+        n_f = _collective_count(fn_f, x)
+        emit(f"overlap/{tag}_fusedwire", us_f,
+             f"collectives={n_f};vs_copy={us_p / us_f:.2f}x")
         if ring_codec is not None:
             fn_r = make_fn(ring_codec)
             us_r = time_fn(fn_r, x, iters=iters)

@@ -1,0 +1,83 @@
+"""Lowered-HLO collective-count regression gate.
+
+Compares a fresh ``benchmarks.run --json`` output against the committed
+``BENCH_collectives.json`` baseline: every row whose ``derived`` column
+records a ``collectives=N`` count (the fusion/overlap transport tables)
+must lower to AT MOST as many lax collectives as the baseline recorded.
+A count regression means a transport change silently split a fused wire
+buffer back into multiple collectives — exactly the class of bug the
+single-buffer engine's HLO-count tests exist to catch, enforced here at
+the benchmark level too (scripts/ci.sh runs this after the quick
+fusion+overlap re-run).
+
+Timings are NOT compared (CI machines are noisy); only the structural
+collective counts gate.
+
+Usage: python scripts/check_bench_regression.py NEW.json [BASELINE.json]
+"""
+from __future__ import annotations
+
+import json
+import re
+import sys
+from pathlib import Path
+
+_COUNT = re.compile(r"(?:^|;)collectives=(\d+)(?:;|$)")
+
+
+def collective_counts(payload: dict) -> dict:
+    out = {}
+    for row in payload.get("rows", []):
+        m = _COUNT.search(row.get("derived") or "")
+        if m:
+            out[row["name"]] = int(m.group(1))
+    return out
+
+
+def main(argv: list[str]) -> int:
+    if not 2 <= len(argv) <= 3:
+        print(__doc__)
+        return 2
+    new_path = Path(argv[1])
+    base_path = Path(argv[2]) if len(argv) == 3 else \
+        Path(__file__).resolve().parents[1] / "BENCH_collectives.json"
+    new = collective_counts(json.loads(new_path.read_text()))
+    base = collective_counts(json.loads(base_path.read_text()))
+    if not new:
+        print(f"FAIL: {new_path} has no collectives= rows (benchmark "
+              "broke or emitted nothing)")
+        return 1
+    regressions = []
+    for name, count in sorted(new.items()):
+        want = base.get(name)
+        if want is not None and count > want:
+            regressions.append(f"  {name}: {want} -> {count}")
+    checked = sum(1 for n in new if n in base)
+    missing = sorted(set(base) - set(new))
+    if checked == 0:
+        # zero overlap means the row names were renamed without updating
+        # the committed baseline — the gate would pass vacuously forever
+        print(f"FAIL: no row of {new_path} matches a {base_path.name} "
+              "baseline row; regenerate the baseline "
+              "(python -m benchmarks.run --only fusion,overlap --json)")
+        return 1
+    if missing:
+        # a baseline-pinned transport path stopped being measured: either
+        # the path was removed on purpose (regenerate the baseline) or
+        # the benchmark silently lost coverage
+        print(f"FAIL: {base_path.name} baseline rows absent from "
+              f"{new_path}:")
+        print("\n".join(f"  {name}" for name in missing))
+        return 1
+    if regressions:
+        print("FAIL: lowered-HLO collective count regressed vs "
+              f"{base_path.name}:")
+        print("\n".join(regressions))
+        return 1
+    print(f"PASS: {checked} collective-count rows at or below the "
+          f"{base_path.name} baseline ({len(new) - checked} new rows)")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main(sys.argv))

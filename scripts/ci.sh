@@ -33,10 +33,16 @@ python -m pytest -x -q tests/test_compat.py tests/test_registry.py \
     -k "not hlo"
 python -m pytest -x -q tests/test_overlap.py
 
-# Collective-transport benchmark smoke: the overlap table must RUN
-# (8-device subprocess, packed vs multi-buffer vs chunked ring) — no
-# timing assertions, just successful execution of the measured paths.
-python -m benchmarks.run --only overlap --quick
+# Collective-transport regression gate: re-run the fusion+overlap tables
+# (8-device subprocess: packed vs multi-buffer vs fused-wire vs chunked
+# ring) and fail if any lowered-HLO collective count regressed versus the
+# committed BENCH_collectives.json baseline.  Timings are recorded but
+# not gated (CI machines are noisy); the structural counts are exact.
+BENCH_GATE_JSON="$(mktemp /tmp/bench_gate.XXXXXX.json)"
+trap 'rm -f "$BENCH_GATE_JSON"' EXIT
+python -m benchmarks.run --only fusion,overlap --json "$BENCH_GATE_JSON" \
+    --quick
+python scripts/check_bench_regression.py "$BENCH_GATE_JSON"
 
 # pytest aborts before running anything and exits 2 on collection errors,
 # so a single invocation is both the collection gate and the test run

@@ -16,12 +16,22 @@ inverts; ``decode_sum`` reduces a stacked peer axis during ReduceScatter
 
 Every compressing codec also publishes a static :class:`WireLayout` via
 ``wire_layout(n)`` — the byte offsets/dtypes of its encoded components per
-slot — which lets the collective layer bitcast-and-concatenate all
-components into ONE contiguous uint8 wire buffer per hop (one lax
-collective instead of 2–3), and a ``chunks`` knob selecting the chunked
-ring-overlap transport (``chunks=N`` double-buffered wire slices; see
+slot — which lets the collective layer move all components as ONE
+contiguous uint8 wire buffer per hop (one lax collective instead of 2–3),
+and a ``chunks`` knob selecting the chunked ring-overlap transport
+(``chunks=N`` double-buffered wire slices; see
 ``repro.core.collectives``).  ``IdentityCodec.wire_layout`` returns None:
 the baseline transports the raw tensor and has nothing to pack.
+
+Wire-native fast paths: the transport calls ``encode_wire(x)`` /
+``decode_wire(wire, n, dtype)`` / ``decode_sum_wire(wire, n, dtype)``
+rather than composing ``encode`` with :func:`pack_wire` itself.  The
+generic :class:`WireFastPath` implementations ARE that composition — they
+define the wire format — while codecs with fused kernels (TACO) override
+them to emit/consume the packed buffer straight from the Pallas kernel
+(one HBM write, no concat-and-slice copies; paper §4.4 "highly fused
+compression operator").  Overrides must stay bit-identical to the generic
+path — property-tested in tests/test_wire_fused.py.
 """
 from __future__ import annotations
 
@@ -38,7 +48,7 @@ from repro.kernels import ops as kops
 __all__ = [
     "IdentityCodec", "TacoCodec", "Sdp4BitCodec", "TahQuantCodec",
     "Int8Codec", "wire_bytes_per_element", "WireComponent", "WireLayout",
-    "make_wire_layout",
+    "make_wire_layout", "pack_wire", "unpack_wire", "WireFastPath",
 ]
 
 
@@ -92,6 +102,83 @@ def make_wire_layout(*comps) -> WireLayout:
     return WireLayout(tuple(out))
 
 
+# --------------------------------------------------------------------------
+# wire pack/unpack: bitcast plumbing between a codec's component tuple and
+# the single contiguous uint8 wire buffer (the copy path; fused kernels
+# write the same byte layout directly)
+# --------------------------------------------------------------------------
+
+def _to_bytes(a):
+    """Bitcast any wire component to a flat-per-slot uint8 view."""
+    if a.dtype == jnp.uint8:
+        return a
+    if a.dtype.itemsize == 1:
+        return jax.lax.bitcast_convert_type(a, jnp.uint8)
+    u8 = jax.lax.bitcast_convert_type(a, jnp.uint8)   # (..., k, itemsize)
+    return u8.reshape(*a.shape[:-1], a.shape[-1] * a.dtype.itemsize)
+
+
+def _from_bytes(seg, dtype, size):
+    dt = jnp.dtype(dtype)
+    if dt.itemsize == 1:
+        return seg if dt == jnp.uint8 \
+            else jax.lax.bitcast_convert_type(seg, dt)
+    seg = seg.reshape(*seg.shape[:-1], size, dt.itemsize)
+    return jax.lax.bitcast_convert_type(seg, dt)
+
+
+def pack_wire(enc, layout):
+    """Encoded component tuple -> ONE contiguous uint8 buffer per slot,
+    laid out per ``layout`` (bitcast + trailing-axis concatenation).
+
+    The static width checks catch an encode/wire_layout disagreement at
+    trace time — without them a mismatched codec would ship bit-garbage
+    through unpack_wire's static slices with no exception anywhere."""
+    if len(enc) != len(layout.components):
+        raise ValueError(f"encode produced {len(enc)} components, layout "
+                         f"declares {len(layout.components)}")
+    parts = []
+    for a, comp in zip(enc, layout.components):
+        b = _to_bytes(a)
+        if b.shape[-1] != comp.nbytes:
+            raise ValueError(
+                f"component {comp.name!r}: encode emitted {b.shape[-1]} "
+                f"bytes/slot, layout declares {comp.nbytes}")
+        parts.append(b)
+    return parts[0] if len(parts) == 1 else jnp.concatenate(parts, axis=-1)
+
+
+def unpack_wire(wire, layout):
+    """Inverse of :func:`pack_wire`: slice the uint8 buffer at the static
+    byte offsets and bitcast each component back.  Works with any number
+    of leading (peer/slot) axes."""
+    return tuple(
+        _from_bytes(wire[..., c.offset:c.offset + c.nbytes], c.dtype, c.size)
+        for c in layout.components)
+
+
+class WireFastPath:
+    """Generic wire-native paths: pack/unpack composed with encode/decode.
+
+    These ARE the definition of the wire byte format.  Codecs with fused
+    kernels override them (emitting/consuming the packed buffer directly
+    in the kernel) and must stay bit-identical to these compositions —
+    the contract the transport's HLO-count and parity tests rely on."""
+
+    def encode_wire(self, x):
+        """(slots, n) -> (slots, total_bytes) uint8 wire buffer."""
+        return pack_wire(self.encode(x), self.wire_layout(x.shape[-1]))
+
+    def decode_wire(self, wire, n, dtype):
+        """(..., total_bytes) uint8 -> (..., n) decoded in ``dtype``."""
+        return self.decode(unpack_wire(wire, self.wire_layout(n)), n, dtype)
+
+    def decode_sum_wire(self, wire, n, dtype):
+        """(P, ..., total_bytes) uint8 -> peer-summed decode (fused)."""
+        return self.decode_sum(unpack_wire(wire, self.wire_layout(n)),
+                               n, dtype)
+
+
 @dataclasses.dataclass(frozen=True)
 class IdentityCodec:
     granule: int = 1
@@ -99,6 +186,16 @@ class IdentityCodec:
 
     def wire_layout(self, n):
         return None   # transports the raw tensor — nothing to pack
+
+    def encode_wire(self, x):
+        raise TypeError("IdentityCodec transports raw tensors and has no "
+                        "wire form (wire_layout() is None)")
+
+    def decode_wire(self, wire, n, dtype):
+        raise TypeError("IdentityCodec has no wire form")
+
+    def decode_sum_wire(self, wire, n, dtype):
+        raise TypeError("IdentityCodec has no wire form")
 
     def encode(self, x):
         return (x,)
@@ -121,8 +218,13 @@ class IdentityCodec:
 
 
 @dataclasses.dataclass(frozen=True)
-class TacoCodec:
-    """The paper's compressor. Payload uint8 (bitcast fp8/int8) + scales."""
+class TacoCodec(WireFastPath):
+    """The paper's compressor. Payload uint8 (bitcast fp8/int8) + scales.
+
+    On the Pallas impls the wire-native methods dispatch to the fused
+    kernels (``kernels.ash_compress.compress_wire_pallas`` and friends)
+    that read/write the packed uint8 buffer at its static
+    ``wire_layout(n)`` byte offsets directly — no pack/unpack copies."""
 
     cfg: TacoConfig = TacoConfig()
     chunks: int = 1
@@ -191,9 +293,34 @@ class TacoCodec:
         scalars = groups + (0 if self.cfg.metadata == "folded" else 1)
         return 1.0 + 4.0 * scalars / b
 
+    # ---- fused wire-native fast paths (Pallas impls, VMEM-sized slots) ----
+    def encode_wire(self, x):
+        if kops.wire_kernel_impl(self.cfg, x.shape[-1]) is not None:
+            return kops.compress_wire(x, self.cfg)
+        return super().encode_wire(x)
+
+    def decode_wire(self, wire, n, dtype):
+        if kops.wire_kernel_impl(self.cfg, n) is not None:
+            lead = wire.shape[:-1]
+            out = kops.decompress_wire(
+                wire.reshape(-1, wire.shape[-1]), n, self.cfg)
+            return out.reshape(*lead, n).astype(dtype)
+        return super().decode_wire(wire, n, dtype)
+
+    def decode_sum_wire(self, wire, n, dtype):
+        # the fused reduce kernel consumes a (P, total_bytes) peer stack
+        # as ONE Pallas block, so the VMEM budget is gated on P*n (not n);
+        # other stackings take the generic unpack path
+        if wire.ndim == 2 and \
+                kops.wire_kernel_impl(self.cfg, wire.shape[0] * n) \
+                is not None:
+            out = kops.decompress_reduce_wire(wire, n, self.cfg)
+            return out.reshape(-1)[:n].astype(dtype)
+        return super().decode_sum_wire(wire, n, dtype)
+
 
 @dataclasses.dataclass(frozen=True)
-class Sdp4BitCodec:
+class Sdp4BitCodec(WireFastPath):
     block: int = 128
     rotate: bool = True
     chunks: int = 1
@@ -223,7 +350,7 @@ class Sdp4BitCodec:
 
 
 @dataclasses.dataclass(frozen=True)
-class TahQuantCodec:
+class TahQuantCodec(WireFastPath):
     group: int = 64
     chunks: int = 1
 
@@ -252,7 +379,7 @@ class TahQuantCodec:
 
 
 @dataclasses.dataclass(frozen=True)
-class Int8Codec:
+class Int8Codec(WireFastPath):
     """Per-group int8 for weight all-gather (beyond-paper, DESIGN.md §7.3)."""
 
     group: int = 128

@@ -22,11 +22,17 @@ pad → encode → pack → move-one-wire-buffer → unpack → decode/decode_su
 
 Wire packing (ZipCCL-style fused buffer): every compressing codec
 publishes a static ``wire_layout(n)`` (byte offsets/dtypes of its encoded
-components), and ``_transport`` bitcast-concatenates all components into
-ONE contiguous uint8 buffer per hop — each compressed all-gather /
-reduce-scatter / ppermute / all-to-all issues exactly ONE lax collective
-instead of one per component (2–3 before).  ``multibuffer_wire()``
-restores the per-component transport for parity tests and benchmarks.
+components), and ``_transport`` moves all components as ONE contiguous
+uint8 buffer per hop — each compressed all-gather / reduce-scatter /
+ppermute / all-to-all issues exactly ONE lax collective instead of one
+per component (2–3 before).  The buffer is produced/consumed through the
+codec's wire-native fast paths (``encode_wire``/``decode_wire``/
+``decode_sum_wire``): the generic codecs compose ``pack_wire``/
+``unpack_wire`` (bitcast + concat, defined in ``repro.core.codecs`` and
+re-exported here), while TACO's Pallas impls emit and read the packed
+bytes straight from the fused kernels — no concat-and-slice copies
+between compression and the collective.  ``multibuffer_wire()`` restores
+the per-component transport for parity tests and benchmarks.
 
 Chunked ring overlap (Flash-Communication-style): codecs with
 ``chunks=N > 1`` route their all-gather / reduce-scatter through ring
@@ -56,7 +62,8 @@ import jax
 import jax.numpy as jnp
 
 from repro.compat import axis_size
-from repro.core.codecs import IdentityCodec
+from repro.core.codecs import (IdentityCodec,  # noqa: F401 — re-exported
+                               pack_wire, unpack_wire)
 
 Identity = IdentityCodec()
 
@@ -102,72 +109,27 @@ def _wire_layout(codec, n):
     return None if wl is None else wl(n)
 
 
-def _to_bytes(a):
-    """Bitcast any wire component to a flat-per-slot uint8 view."""
-    if a.dtype == jnp.uint8:
-        return a
-    if a.dtype.itemsize == 1:
-        return jax.lax.bitcast_convert_type(a, jnp.uint8)
-    u8 = jax.lax.bitcast_convert_type(a, jnp.uint8)   # (..., k, itemsize)
-    return u8.reshape(*a.shape[:-1], a.shape[-1] * a.dtype.itemsize)
-
-
-def _from_bytes(seg, dtype, size):
-    dt = jnp.dtype(dtype)
-    if dt.itemsize == 1:
-        return seg if dt == jnp.uint8 \
-            else jax.lax.bitcast_convert_type(seg, dt)
-    seg = seg.reshape(*seg.shape[:-1], size, dt.itemsize)
-    return jax.lax.bitcast_convert_type(seg, dt)
-
-
-def pack_wire(enc, layout):
-    """Encoded component tuple -> ONE contiguous uint8 buffer per slot,
-    laid out per ``layout`` (bitcast + trailing-axis concatenation).
-
-    The static width checks catch an encode/wire_layout disagreement at
-    trace time — without them a mismatched codec would ship bit-garbage
-    through unpack_wire's static slices with no exception anywhere."""
-    if len(enc) != len(layout.components):
-        raise ValueError(f"encode produced {len(enc)} components, layout "
-                         f"declares {len(layout.components)}")
-    parts = []
-    for a, comp in zip(enc, layout.components):
-        b = _to_bytes(a)
-        if b.shape[-1] != comp.nbytes:
-            raise ValueError(
-                f"component {comp.name!r}: encode emitted {b.shape[-1]} "
-                f"bytes/slot, layout declares {comp.nbytes}")
-        parts.append(b)
-    return parts[0] if len(parts) == 1 else jnp.concatenate(parts, axis=-1)
-
-
-def unpack_wire(wire, layout):
-    """Inverse of :func:`pack_wire`: slice the uint8 buffer at the static
-    byte offsets and bitcast each component back.  Works with any number
-    of leading (peer/slot) axes."""
-    return tuple(
-        _from_bytes(wire[..., c.offset:c.offset + c.nbytes], c.dtype, c.size)
-        for c in layout.components)
-
-
 def _transport(x2d, codec, move, *, reduce=False, dtype):
     """Shared codec plumbing for every compressed collective: pad the
-    trailing dim of ``x2d`` to the codec granule, encode, pack all wire
-    components into one uint8 buffer, apply ``move`` (ONE lax collective),
-    unpack, decode — fused-summing the stacked peer axis when ``reduce``
-    — and crop the padding.  Codecs without a wire layout (or under
-    :func:`multibuffer_wire`) fall back to one ``move`` per component."""
+    trailing dim of ``x2d`` to the codec granule, encode straight into the
+    packed uint8 wire buffer (``encode_wire`` — one fused kernel write on
+    the Pallas impls), apply ``move`` (ONE lax collective), and decode
+    straight from the moved buffer — fused-summing the stacked peer axis
+    when ``reduce`` — then crop the padding.  Codecs without a wire
+    layout (or under :func:`multibuffer_wire`) fall back to one ``move``
+    per encoded component."""
     padded, n = _pad_to(x2d, codec.granule)
-    enc = codec.encode(padded)
-    layout = _wire_layout(codec, padded.shape[-1]) if _WIRE_PACKING else None
+    pn = padded.shape[-1]
+    layout = _wire_layout(codec, pn) if _WIRE_PACKING else None
     if layout is None:
-        enc = tuple(move(a) for a in enc)
-    else:
-        enc = unpack_wire(move(pack_wire(enc, layout)), layout)
+        enc = tuple(move(a) for a in codec.encode(padded))
+        if reduce:
+            return codec.decode_sum(enc, pn, dtype)[:n]
+        return codec.decode(enc, pn, dtype)[..., :n]
+    wire = move(codec.encode_wire(padded))
     if reduce:
-        return codec.decode_sum(enc, padded.shape[-1], dtype)[:n]
-    return codec.decode(enc, padded.shape[-1], dtype)[..., :n]
+        return codec.decode_sum_wire(wire, pn, dtype)[:n]
+    return codec.decode_wire(wire, pn, dtype)[..., :n]
 
 
 def _compressed_collective(name, impl, bwd, n_static, doc=None):
@@ -233,12 +195,12 @@ def _ag_one_ring(x, ax, dim, codec):
     to the monolithic single-collective path."""
     p = axis_size(ax)
     segs, n0, csz = _chunk_slices(x.reshape(1, -1), codec)
-    layout = _wire_layout(codec, csz)
     ring = tuple((s, (s + 1) % p) for s in range(p))
     idx = jax.lax.axis_index(ax)
-    # encode+pack every chunk up front: no chunk depends on another's ring
-    # steps, which is exactly what lets an async scheduler overlap them
-    wires = [pack_wire(codec.encode(seg), layout) for seg in segs]
+    # encode every chunk straight to its wire buffer up front: no chunk
+    # depends on another's ring steps, which is exactly what lets an async
+    # scheduler overlap them
+    wires = [codec.encode_wire(seg) for seg in segs]
     outs = []
     for buf in wires:
         arrivals = [buf]
@@ -246,7 +208,7 @@ def _ag_one_ring(x, ax, dim, codec):
             buf = jax.lax.ppermute(buf, ax, ring)
             arrivals.append(buf)
         stack = _peer_order(jnp.stack(arrivals)[:, 0], idx, p)    # (P, bytes)
-        outs.append(codec.decode(unpack_wire(stack, layout), csz, x.dtype))
+        outs.append(codec.decode_wire(stack, csz, x.dtype))
     dec = (jnp.concatenate(outs, axis=-1) if len(outs) > 1
            else outs[0])[:, :n0]                                  # (P, n)
     dec = dec.reshape(p, *x.shape)
@@ -265,14 +227,16 @@ def _rs_one_ring(x, ax, dim, codec):
     p = axis_size(ax)
     moved = jnp.moveaxis(x, dim, 0)
     d = moved.shape[0]
-    assert d % p == 0, f"scatter dim {d} not divisible by axis size {p}"
+    if d % p:
+        raise ValueError(
+            f"compressed reduce-scatter: scatter dim {dim} has size {d}, "
+            f"not divisible by axis {ax!r} of size {p}")
     rows = moved.reshape(p, -1)                    # row j -> destined peer j
     segs, n0, csz = _chunk_slices(rows, codec)
-    layout = _wire_layout(codec, csz)
     idx = jax.lax.axis_index(ax)
     outs = []
     for seg in segs:
-        wire = pack_wire(codec.encode(seg), layout)            # (P, bytes)
+        wire = codec.encode_wire(seg)                          # (P, bytes)
         arrivals = [jax.lax.dynamic_index_in_dim(wire, idx, 0,
                                                  keepdims=False)]
         for k in range(1, p):
@@ -281,7 +245,7 @@ def _rs_one_ring(x, ax, dim, codec):
             shift = tuple((s, (s + k) % p) for s in range(p))
             arrivals.append(jax.lax.ppermute(send, ax, shift))
         stack = _peer_order(jnp.stack(arrivals), idx, p)       # (P, bytes)
-        dec = codec.decode_sum(unpack_wire(stack, layout), csz, x.dtype)
+        dec = codec.decode_sum_wire(stack, csz, x.dtype)
         outs.append(dec.reshape(-1)[:csz])
     summed = (jnp.concatenate(outs) if len(outs) > 1 else outs[0])[:n0]
     out = summed.reshape(d // p, *moved.shape[1:])
@@ -321,7 +285,12 @@ def _rs_one(x, ax, dim, codec):
     p = axis_size(ax)
     moved = jnp.moveaxis(x, dim, 0)
     d = moved.shape[0]
-    assert d % p == 0, f"scatter dim {d} not divisible by axis size {p}"
+    if d % p:
+        # a ValueError, not an assert: `python -O` strips asserts and the
+        # reshape below would silently mis-slice peers into bit-garbage
+        raise ValueError(
+            f"compressed reduce-scatter: scatter dim {dim} has size {d}, "
+            f"not divisible by axis {ax!r} of size {p}")
     chunks = moved.reshape(p, -1)                              # chunk i -> peer i
     # Paper's two-shot phase 1: ONE compressed AlltoAll, followed by ONE
     # fused local reduction (rotated-domain, single inverse rotation —
@@ -374,7 +343,10 @@ def _a2a_impl(x, axis_name, split_dim, concat_dim, codec):
     p = axis_size(axis_name)
     moved = jnp.moveaxis(x, split_dim, 0)
     d = moved.shape[0]
-    assert d % p == 0, f"split dim {d} not divisible by axis size {p}"
+    if d % p:
+        raise ValueError(
+            f"compressed all-to-all: split dim {split_dim} has size {d}, "
+            f"not divisible by axis {axis_name!r} of size {p}")
     chunks = moved.reshape(p, -1)
     dec = _transport(
         chunks, codec,
@@ -467,14 +439,45 @@ def psum_exact(x, axis_name):
 # Communication-volume accounting (for benchmarks / roofline cross-check)
 # --------------------------------------------------------------------------
 
+def wire_slot_bytes(codec, n: int, *, chunks: int | None = None):
+    """EXACT packed-buffer bytes the transport puts on the wire for one
+    ``n``-element slot: the trailing dim is padded to ``chunks * granule``
+    (matching ``_pad_to``/``_chunk_slices``) and each of the ``chunks``
+    wire slices is ``wire_layout(padded / chunks).total_bytes`` — the
+    telemetry therefore equals the actual uint8 buffer size even for
+    ragged trailing dims.  ``chunks`` defaults to the codec's ring chunk
+    count (the AG/RS transports); pass ``chunks=1`` for hops that never
+    chunk (ppermute / all-to-all route chunked codecs through the
+    monolithic transport).  Returns None for layout-less codecs
+    (identity: raw dtype bytes, no padding)."""
+    chunks = _ring_chunks(codec) if chunks is None else max(1, int(chunks))
+    mult = chunks * codec.granule
+    padded = ((int(n) + mult - 1) // mult) * mult
+    layout = _wire_layout(codec, padded // chunks)
+    if layout is None:
+        return None
+    return chunks * layout.total_bytes
+
+
 def gather_wire_bytes(local_shape, dtype, p, codec) -> float:
-    """Approx. bytes put on the wire per device by one all_gather."""
+    """Exact bytes put on the wire per device by one all_gather (the
+    local slot's packed wire buffer, including chunk padding, replicated
+    to the other p-1 peers)."""
     import numpy as np
     n = int(np.prod(local_shape))
-    return n * codec.bytes_per_element(dtype) * (p - 1)
+    slot = wire_slot_bytes(codec, n)
+    if slot is None:
+        slot = n * np.dtype(dtype).itemsize
+    return float(slot) * (p - 1)
 
 
 def scatter_wire_bytes(local_shape, dtype, p, codec) -> float:
+    """Exact bytes put on the wire per device by one reduce-scatter:
+    p-1 of the p destination slots (each ``n/p`` elements, padded and
+    packed) leave the device."""
     import numpy as np
     n = int(np.prod(local_shape))
-    return n * codec.bytes_per_element(dtype) * (p - 1) / p
+    slot = wire_slot_bytes(codec, n // p)
+    if slot is None:
+        slot = (n // p) * np.dtype(dtype).itemsize
+    return float(slot) * (p - 1)

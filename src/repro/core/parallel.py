@@ -113,10 +113,35 @@ class CommPlan:
                      for _ in range(n))
 
     # ---- telemetry --------------------------------------------------------
-    def wire_bytes_per_element(self) -> dict:
-        """Per-path wire bytes per bf16 element (2.0 = uncompressed)."""
-        return {path: float(getattr(self, path).bytes_per_element())
-                for path in PATHS}
+    def wire_bytes_per_element(self, n: int | None = None) -> dict:
+        """Per-path wire bytes per element (2.0 = uncompressed bf16).
+
+        With ``n`` (the per-hop slot element count) the value is EXACT
+        for the path's primary hop: the packed-buffer size from the
+        codec's ``wire_layout``, including the transport's padding of the
+        trailing dim to ``chunks * granule`` — so ragged slots report
+        what actually crosses the wire.  The tp/grad_rs/weight_ag values
+        describe the AG/RS hops (chunk-padded); a tp codec's occasional
+        ``ep_all_to_all`` hop, like the pp ppermute, takes the monolithic
+        granule-only padding instead.  Without ``n`` it is the asymptotic
+        granule-aligned ratio (the per-step trainer telemetry, where no
+        single slot size exists)."""
+        out = {}
+        for path in PATHS:
+            codec = getattr(self, path)
+            if n is not None:
+                # the pp path is a ppermute hop, which routes chunked
+                # codecs through the monolithic transport (granule-only
+                # padding); the other paths' primary hops are AG/RS and
+                # chunk-pad (tp's a2a hop — see docstring — is the
+                # granule-only exception)
+                slot = cc.wire_slot_bytes(
+                    codec, n, chunks=1 if path == "pp" else None)
+                if slot is not None:
+                    out[path] = slot / n
+                    continue
+            out[path] = float(codec.bytes_per_element())
+        return out
 
     def wire_chunks(self) -> dict:
         """Per-path ring-overlap chunk counts (1 = monolithic transport).

@@ -27,7 +27,8 @@ Codec args (all optional; normalized output only emits non-defaults):
     taco      e4m3|e5m2|int8, b<N> (block), g<N> (quant group),
               dual|folded, ash|hadamard|notransform, blockscale|tensorscale,
               auto|jnp|pallas|pallas_interpret, cd<dtype> (compute dtype),
-              tau<float>, eps<float>, disabled, chunks=<N>
+              tau<float>, eps<float>, seps<float> (scale floor), disabled,
+              chunks=<N>
     sdp4bit   b<N> (block), norot, chunks=<N>
     tahquant  g<N> (group), chunks=<N>
     int8      g<N> (group), chunks=<N>
@@ -74,9 +75,16 @@ class Codec(Protocol):
     ``decode_sum`` reduces a stacked peer axis during ReduceScatter.
     ``wire_layout(n)`` publishes the static per-slot byte layout of the
     ``encode`` output (a ``codecs.WireLayout``) so the collective layer
-    can pack all components into one fused wire buffer — return None for
+    can move all components as one fused wire buffer — return None for
     codecs that transport raw tensors (then ``chunks=`` specs are
     rejected and the multi-buffer transport is used).
+
+    ``encode_wire``/``decode_wire``/``decode_sum_wire`` are the
+    wire-native fast paths the transport actually calls: they emit/consume
+    the packed uint8 buffer directly and MUST be bit-identical to
+    ``pack_wire(encode(x), wire_layout(n))`` (resp. decode/decode_sum of
+    ``unpack_wire``) — inherit ``codecs.WireFastPath`` for the generic
+    compositions, or override with fused kernels (see ``TacoCodec``).
     """
 
     @property
@@ -89,6 +97,12 @@ class Codec(Protocol):
     def decode(self, enc, n, dtype): ...
 
     def decode_sum(self, enc, n, dtype): ...
+
+    def encode_wire(self, x): ...
+
+    def decode_wire(self, wire, n, dtype): ...
+
+    def decode_sum_wire(self, wire, n, dtype): ...
 
     def bytes_per_element(self, in_dtype=None) -> float: ...
 
@@ -251,6 +265,8 @@ def _parse_taco(args):
             put("compute_dtype", tok[2:], tok)
         elif tok.startswith("tau"):
             put("tau", float(tok[3:]), tok)
+        elif tok.startswith("seps"):   # before 'eps': scale floor (Eq. 9)
+            put("scale_eps", float(tok[4:]), tok)
         elif tok.startswith("eps"):
             put("eps", float(tok[3:]), tok)
         elif tok == "disabled":
@@ -288,6 +304,8 @@ def _unparse_taco(codec):
         out.append(f"tau{cfg.tau!r}")
     if cfg.eps != ref.eps:
         out.append(f"eps{cfg.eps!r}")
+    if cfg.scale_eps != ref.scale_eps:
+        out.append(f"seps{cfg.scale_eps!r}")
     if codec.chunks != 1:
         out.append(f"chunks={codec.chunks}")
     return tuple(out)

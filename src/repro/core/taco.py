@@ -38,6 +38,11 @@ class TacoConfig:
     fmt: str = "e4m3"                     # e4m3 | e5m2 | int8
     tau: float = 1.0
     eps: float = 1e-12
+    # Floor on the dual-scale s (Eq. 9) keeping all-zero / denormal blocks
+    # away from 0/0. ONE cfg-derived value routed through BOTH the Pallas
+    # kernels and the jnp ref — kernel/ref parity on degenerate blocks is
+    # tested in tests/test_kernels.py.
+    scale_eps: float = 1e-30
     transform: Literal["ash", "hadamard", "none"] = "ash"
     scale_granularity: Literal["block", "tensor"] = "block"
     quant_group_size: int | None = None   # finer-than-block s granularity

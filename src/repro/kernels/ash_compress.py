@@ -31,25 +31,38 @@ from repro.core import ash as ash_mod
 ROW_TILE = 128
 
 
-def _compress_kernel(x_ref, h_ref, q_ref, alpha_ref, s_ref, *, tau, eps, qmax,
-                     groups, out_dtype, is_float):
-    g = x_ref[...].astype(jnp.float32)                      # (R, B)
+def _block_compress(g, h, *, tau, eps, scale_eps, qmax, groups, out_dtype,
+                    is_float):
+    """Shared per-block-row math of both compress kernels: (R, B) f32 ->
+    (q (R,B) storage dtype, alpha (R,), s (R,G)).  Every op is row-wise
+    independent, and both kernels invoke it at the same (ROW_TILE, B)
+    tile shape (see ``_row_tiles``), so the block and fused-wire paths
+    produce bit-identical rows — the wire fast path's parity contract."""
     r, b = g.shape
     # -- reduction 1: block RMS energy ------------------------------------
     sigma = jnp.sqrt(jnp.mean(g * g, axis=-1) + eps)        # (R,)
     alpha = tau / sigma                                     # (R,)
     # -- rotation on the MXU ----------------------------------------------
-    z = (alpha[:, None] * g) @ h_ref[...]                   # (R, B)
+    z = (alpha[:, None] * g) @ h                            # (R, B)
     # -- reduction 2: per-group max magnitude ------------------------------
     zg = z.reshape(r, groups, b // groups)
     s = jnp.max(jnp.abs(zg), axis=-1) / qmax                # (R, G)
-    s = jnp.maximum(s, 1e-30)
+    s = jnp.maximum(s, scale_eps)   # cfg.scale_eps — same floor as the ref
     # -- saturating convert -------------------------------------------------
     scaled = jnp.clip(zg / s[..., None], -qmax, qmax).reshape(r, b)
     if is_float:
         q = scaled.astype(out_dtype)
     else:
         q = jnp.round(scaled).astype(jnp.int8)
+    return q, alpha, s
+
+
+def _compress_kernel(x_ref, h_ref, q_ref, alpha_ref, s_ref, *, tau, eps,
+                     scale_eps, qmax, groups, out_dtype, is_float):
+    g = x_ref[...].astype(jnp.float32)                      # (R, B)
+    q, alpha, s = _block_compress(
+        g, h_ref[...], tau=tau, eps=eps, scale_eps=scale_eps, qmax=qmax,
+        groups=groups, out_dtype=out_dtype, is_float=is_float)
     q_ref[...] = q
     alpha_ref[...] = alpha
     s_ref[...] = s
@@ -79,8 +92,9 @@ def compress_blocks_pallas(blocks: jax.Array, cfg, interpret: bool = False):
     h = ash_mod.hadamard_matrix(b, jnp.float32)
 
     kernel = functools.partial(
-        _compress_kernel, tau=cfg.tau, eps=cfg.eps, qmax=fmt.qmax,
-        groups=groups, out_dtype=fmt.dtype, is_float=fmt.is_float)
+        _compress_kernel, tau=cfg.tau, eps=cfg.eps, scale_eps=cfg.scale_eps,
+        qmax=fmt.qmax, groups=groups, out_dtype=fmt.dtype,
+        is_float=fmt.is_float)
 
     q, alpha, s = pl.pallas_call(
         kernel,
@@ -104,3 +118,111 @@ def compress_blocks_pallas(blocks: jax.Array, cfg, interpret: bool = False):
     if mp != m:
         q, alpha, s = q[:m], alpha[:m], s[:m]
     return q, alpha, s
+
+
+# --------------------------------------------------------------------------
+# fused wire emission (paper §4.4 "highly fused compression operator"):
+# compress AND serialize in one kernel — the payload, per-group scales,
+# and alpha land at their static wire_layout(n) byte offsets of ONE packed
+# uint8 output row, so the transport ships the kernel's output buffer
+# as-is (single HBM write; no pack_wire concat copy).
+# --------------------------------------------------------------------------
+
+def wire_geometry(cfg, n: int):
+    """Static byte geometry of one ``n``-element wire slot: ``(mb, groups,
+    scale_nbytes, alpha_nbytes, total_bytes)``, derived from
+    ``repro.core.taco.wire_components`` — the kernels serialize to the
+    SAME layout contract the transport packs/unpacks, by construction."""
+    import numpy as np
+
+    from repro.core import taco as taco_mod
+
+    comps = {name: (dtype, size)
+             for name, dtype, size in taco_mod.wire_components(cfg, n)}
+    mb = n // cfg.block_size
+    scale_nbytes = comps["scale"][1] * np.dtype(comps["scale"][0]).itemsize
+    groups = comps["scale"][1] // mb
+    alpha_nbytes = 0
+    if "alpha" in comps:
+        alpha_nbytes = comps["alpha"][1] * \
+            np.dtype(comps["alpha"][0]).itemsize
+    return mb, groups, scale_nbytes, alpha_nbytes, n + scale_nbytes + \
+        alpha_nbytes
+
+
+def _row_tiles(mb):
+    """Static (row0, rows) spans covering ``mb`` block rows in ROW_TILE
+    batches.  The fused wire kernels iterate these so every matmul runs at
+    the block kernels' exact (ROW_TILE, B) shape (partial tiles are
+    zero-padded to ROW_TILE): XLA:CPU dispatches 1-row dots down a gemv
+    path with a different accumulation schedule than gemm, so matching
+    tile shapes — not just row-wise math — is what makes the fused and
+    per-component paths bit-identical in interpret mode."""
+    return [(r0, min(ROW_TILE, mb - r0)) for r0 in range(0, mb, ROW_TILE)]
+
+
+def _pad_rows(a, rows, *, value=0.0):
+    if a.shape[0] == rows:
+        return a
+    pad = [(0, rows - a.shape[0])] + [(0, 0)] * (a.ndim - 1)
+    return jnp.pad(a, pad, constant_values=value)
+
+
+def _compress_wire_kernel(x_ref, h_ref, w_ref, *, tau, eps, scale_eps, qmax,
+                          groups, out_dtype, is_float, mb, b, folded):
+    n = mb * b
+    g = x_ref[...].reshape(mb, b).astype(jnp.float32)       # one slot's blocks
+    s_off, a_off = n, n + mb * groups * 4
+    for r0, rows in _row_tiles(mb):
+        q, alpha, s = _block_compress(
+            _pad_rows(g[r0:r0 + rows], ROW_TILE), h_ref[...], tau=tau,
+            eps=eps, scale_eps=scale_eps, qmax=qmax, groups=groups,
+            out_dtype=out_dtype, is_float=is_float)
+        q, alpha, s = q[:rows], alpha[:rows], s[:rows]
+        # serialize straight into the packed wire row: per-tile stores at
+        # the static byte offsets of ONE output buffer (no concatenate —
+        # the interpret-mode HLO between encode and the collective is
+        # concat-free, and on TPU each store is a VMEM->HBM tile write)
+        w_ref[0, r0 * b:r0 * b + rows * b] = \
+            jax.lax.bitcast_convert_type(q, jnp.uint8).reshape(rows * b)
+        meta = (s / alpha[:, None]) if folded else s        # (rows, G) f32
+        w_ref[0, s_off + r0 * groups * 4:
+              s_off + (r0 + rows) * groups * 4] = \
+            jax.lax.bitcast_convert_type(meta, jnp.uint8).reshape(
+                rows * groups * 4)
+        if not folded:
+            w_ref[0, a_off + r0 * 4:a_off + (r0 + rows) * 4] = \
+                jax.lax.bitcast_convert_type(alpha, jnp.uint8).reshape(
+                    rows * 4)
+
+
+def compress_wire_pallas(x: jax.Array, cfg, interpret: bool = False):
+    """(slots, n) -> (slots, total_bytes) packed uint8 wire buffer.
+
+    One grid step per slot: all ``n // block_size`` blocks of the slot are
+    compressed and serialized to the slot's contiguous wire row in a
+    single pass (VMEM working set: the slot + the Hadamard matrix).
+    Bit-identical to ``pack_wire(TacoCodec.encode(x), wire_layout(n))`` on
+    the same impl — the per-row math is shared with ``_compress_kernel``.
+    Not jit-wrapped: call sites always sit under an outer jit."""
+    fmt = cfg.format_spec
+    slots, n = x.shape
+    b = cfg.block_size
+    mb, groups, _, _, total = wire_geometry(cfg, n)
+    h = ash_mod.hadamard_matrix(b, jnp.float32)
+    kernel = functools.partial(
+        _compress_wire_kernel, tau=cfg.tau, eps=cfg.eps,
+        scale_eps=cfg.scale_eps, qmax=fmt.qmax, groups=groups,
+        out_dtype=fmt.dtype, is_float=fmt.is_float, mb=mb, b=b,
+        folded=(cfg.metadata == "folded"))
+    return pl.pallas_call(
+        kernel,
+        grid=(slots,),
+        in_specs=[
+            pl.BlockSpec((1, n), lambda i: (i, 0)),
+            pl.BlockSpec((b, b), lambda i: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, total), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((slots, total), jnp.uint8),
+        interpret=interpret,
+    )(x, h)

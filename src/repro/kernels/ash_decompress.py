@@ -21,8 +21,11 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
 from repro.core import ash as ash_mod
-
-ROW_TILE = 128
+# ROW_TILE is shared with the compress kernels: _row_tiles sizes its spans
+# by it, and the tile-shape bit-parity contract (see ash_compress.
+# _row_tiles) requires every kernel to matmul at the same (ROW_TILE, B)
+from repro.kernels.ash_compress import (ROW_TILE, _pad_rows, _row_tiles,
+                                        wire_geometry)
 
 
 def _expand_scale(s, r, b, groups):
@@ -118,3 +121,145 @@ def decompress_reduce_pallas(q, s, alpha, cfg, interpret: bool = False):
         interpret=interpret,
     )(q, f, h)
     return out[:m] if mp != m else out
+
+
+# --------------------------------------------------------------------------
+# fused wire consumption: the receiver-side duals of
+# ash_compress.compress_wire_pallas — dequantize straight out of the packed
+# uint8 wire buffer by bitcasting its static wire_layout(n) byte ranges in
+# VMEM (no unpack_wire slice-and-bitcast copies between the collective and
+# the kernel).
+# --------------------------------------------------------------------------
+
+def _wire_fields(w, n, mb, b, groups, folded, payload_dtype):
+    """Bitcast the payload/scale/alpha byte ranges of wire rows ``w``
+    (..., total_bytes) back to typed arrays — the in-kernel mirror of
+    ``unpack_wire``."""
+    lead = w.shape[:-1]
+    q = jax.lax.bitcast_convert_type(
+        w[..., :n].reshape(*lead, mb, b), payload_dtype)
+    s = jax.lax.bitcast_convert_type(
+        w[..., n:n + mb * groups * 4].reshape(*lead, mb, groups, 4),
+        jnp.float32)
+    if folded:
+        return q, s, None
+    alpha = jax.lax.bitcast_convert_type(
+        w[..., n + mb * groups * 4:].reshape(*lead, mb, 4), jnp.float32)
+    return q, s, alpha
+
+
+def _decompress_wire_kernel(w_ref, h_ref, o_ref, *, mb, b, groups, folded,
+                            payload_dtype, apply_rotation, out_dtype):
+    n = mb * b
+    q, s, alpha = _wire_fields(w_ref[...][0], n, mb, b, groups, folded,
+                               payload_dtype)
+    # ROW_TILE-shaped tiles for bit-parity with decompress_blocks_pallas
+    # (see _row_tiles's gemv note); partial tiles pad alpha with 1s so the
+    # discarded rows stay finite
+    for r0, rows in _row_tiles(mb):
+        qt = _pad_rows(q[r0:r0 + rows].astype(jnp.float32), ROW_TILE)
+        st = _pad_rows(s[r0:r0 + rows].reshape(rows, groups), ROW_TILE)
+        z = qt * _expand_scale(st, ROW_TILE, b, groups)
+        g = z @ h_ref[...] if apply_rotation else z
+        if not folded:   # folded metadata already carries s/alpha
+            at = _pad_rows(alpha[r0:r0 + rows], ROW_TILE, value=1.0)
+            g = g / at[:, None]
+        o_ref[0, r0 * b:r0 * b + rows * b] = \
+            g[:rows].reshape(rows * b).astype(out_dtype)
+
+
+def decompress_wire_pallas(wire: jax.Array, n: int, cfg,
+                           interpret: bool = False):
+    """(slots, total_bytes) packed uint8 -> (slots, n) compute dtype.
+
+    One grid step per slot, reading the slot's wire row once from HBM.
+    Bit-identical to ``decode(unpack_wire(wire, layout), n, dtype)`` on the
+    same impl (shared row-wise math; see _block_compress's contract note).
+    Not jit-wrapped: call sites always sit under an outer jit."""
+    fmt = cfg.format_spec
+    slots, total = wire.shape
+    b = cfg.block_size
+    mb, groups, _, _, want = wire_geometry(cfg, n)
+    if total != want:
+        raise ValueError(f"wire row has {total} bytes, layout for n={n} "
+                         f"declares {want}")
+    h = ash_mod.hadamard_matrix(b, jnp.float32)
+    kernel = functools.partial(
+        _decompress_wire_kernel, mb=mb, b=b, groups=groups,
+        folded=(cfg.metadata == "folded"),
+        payload_dtype=fmt.dtype if fmt.is_float else jnp.int8,
+        apply_rotation=cfg.transform in ("ash", "hadamard"),
+        out_dtype=cfg.compute_dtype)
+    return pl.pallas_call(
+        kernel,
+        grid=(slots,),
+        in_specs=[
+            pl.BlockSpec((1, total), lambda i: (i, 0)),
+            pl.BlockSpec((b, b), lambda i: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, n), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((slots, n), cfg.compute_dtype),
+        interpret=interpret,
+    )(wire, h)
+
+
+def _decompress_reduce_wire_kernel(w_ref, h_ref, o_ref, *, mb, b, groups,
+                                   folded, payload_dtype, apply_rotation,
+                                   out_dtype):
+    n = mb * b
+    w = w_ref[...]                                          # (P, total) uint8
+    p = w.shape[0]
+    q, s, alpha = _wire_fields(w, n, mb, b, groups, folded, payload_dtype)
+    f = s.reshape(p, mb, groups)
+    if not folded:
+        f = f / alpha[..., None]
+    # ROW_TILE-shaped inverse rotations for bit-parity with
+    # decompress_reduce_pallas (see ash_compress._row_tiles's gemv note)
+    for r0, rows in _row_tiles(mb):
+        qt = q[:, r0:r0 + rows].astype(jnp.float32)
+        ft = f[:, r0:r0 + rows]
+        if rows != ROW_TILE:
+            pad = ((0, 0), (0, ROW_TILE - rows), (0, 0))
+            qt, ft = jnp.pad(qt, pad), jnp.pad(ft, pad)
+        fe = jnp.repeat(ft, b // groups, axis=-1).reshape(p, ROW_TILE, b)
+        acc = jnp.sum(qt * fe, axis=0)                      # rotated domain
+        if apply_rotation:
+            acc = acc @ h_ref[...]                          # ONE inverse rot
+        o_ref[r0:r0 + rows, :] = acc[:rows].astype(out_dtype)
+
+
+def decompress_reduce_wire_pallas(wire: jax.Array, n: int, cfg,
+                                  interpret: bool = False):
+    """Peer-stacked packed wire rows (P, total_bytes) -> summed (mb, B).
+
+    The ReduceScatter local reduction fused with wire consumption: one
+    kernel bitcasts every peer's payload/metadata out of the stacked wire
+    buffer, accumulates in the rotated domain, and applies ONE inverse
+    rotation (DESIGN.md §7.2).  Single grid step — the whole peer stack is
+    one VMEM-resident wire tile (chunked ring transports keep per-chunk
+    slots small by construction).  Not jit-wrapped."""
+    fmt = cfg.format_spec
+    peers, total = wire.shape
+    b = cfg.block_size
+    mb, groups, _, _, want = wire_geometry(cfg, n)
+    if total != want:
+        raise ValueError(f"wire row has {total} bytes, layout for n={n} "
+                         f"declares {want}")
+    h = ash_mod.hadamard_matrix(b, jnp.float32)
+    kernel = functools.partial(
+        _decompress_reduce_wire_kernel, mb=mb, b=b, groups=groups,
+        folded=(cfg.metadata == "folded"),
+        payload_dtype=fmt.dtype if fmt.is_float else jnp.int8,
+        apply_rotation=cfg.transform in ("ash", "hadamard"),
+        out_dtype=cfg.compute_dtype)
+    return pl.pallas_call(
+        kernel,
+        grid=(1,),
+        in_specs=[
+            pl.BlockSpec((peers, total), lambda i: (0, 0)),
+            pl.BlockSpec((b, b), lambda i: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((mb, b), lambda i: (0, 0)),
+        out_shape=jax.ShapeDtypeStruct((mb, b), cfg.compute_dtype),
+        interpret=interpret,
+    )(wire, h)

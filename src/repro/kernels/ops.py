@@ -64,3 +64,52 @@ def decompress_reduce(q: jax.Array, s: jax.Array, alpha, cfg):
         return zsum
     return ash_decompress.decompress_reduce_pallas(
         q, s, alpha, cfg, interpret=(impl == "pallas_interpret"))
+
+
+# --------------------------------------------------------------------------
+# fused wire-native fast paths (TacoCodec.encode_wire/decode_wire/
+# decode_sum_wire dispatch here; the jnp impl has no fused kernel and the
+# codec composes pack_wire/unpack_wire with encode/decode instead)
+# --------------------------------------------------------------------------
+
+# VMEM guard for the on-device fused wire path: the wire kernels hold one
+# whole transport slot per Pallas block (grid over slots), so a huge
+# monolithic slot — e.g. a full flattened gradient all-gather — would
+# neither fit VMEM nor trace cheaply (the in-kernel ROW_TILE loop unrolls
+# mb/128 matmuls).  Slots past this budget fall back to the ROW_TILE-tiled
+# block kernels + pack_wire.  Interpret mode has no VMEM and stays fused
+# at any size (CPU parity tests and benchmarks).
+WIRE_FUSED_MAX_SLOT_ELEMS = 512 * 1024   # ~2 MB f32 in + ~0.5 MB wire out
+
+
+def wire_kernel_impl(cfg, n: int | None = None):
+    """The Pallas impl name when the fused wire kernels cover ``cfg`` at
+    slot size ``n`` (same config coverage as the block kernels, plus the
+    on-device VMEM slot budget), else None."""
+    impl = _impl_for(cfg)
+    if impl not in ("pallas", "pallas_interpret"):
+        return None
+    if impl == "pallas" and n is not None and n > WIRE_FUSED_MAX_SLOT_ELEMS:
+        return None
+    return impl
+
+
+def compress_wire(x: jax.Array, cfg):
+    """(slots, n) -> packed (slots, total_bytes) uint8 wire buffer."""
+    impl = wire_kernel_impl(cfg, x.shape[-1])
+    return ash_compress.compress_wire_pallas(
+        x, cfg, interpret=(impl == "pallas_interpret"))
+
+
+def decompress_wire(wire: jax.Array, n: int, cfg):
+    """Packed (slots, total_bytes) uint8 -> (slots, n) compute dtype."""
+    impl = wire_kernel_impl(cfg, n)
+    return ash_decompress.decompress_wire_pallas(
+        wire, n, cfg, interpret=(impl == "pallas_interpret"))
+
+
+def decompress_reduce_wire(wire: jax.Array, n: int, cfg):
+    """Peer-stacked (P, total_bytes) wire rows -> fused summed (mb, B)."""
+    impl = wire_kernel_impl(cfg, n)
+    return ash_decompress.decompress_reduce_wire_pallas(
+        wire, n, cfg, interpret=(impl == "pallas_interpret"))

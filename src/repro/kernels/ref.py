@@ -40,7 +40,7 @@ def compress_blocks_ref(blocks: jax.Array, cfg) -> tuple[jax.Array, jax.Array, j
     z, alpha = _transform_fwd(blocks, cfg)
     if cfg.scale_granularity == "tensor":
         # Single per-tensor scale (the paper's "ASH alone" / naive regimes).
-        s_val = jnp.maximum(jnp.max(jnp.abs(z)) / fmt.qmax, 1e-30)
+        s_val = jnp.maximum(jnp.max(jnp.abs(z)) / fmt.qmax, cfg.scale_eps)
         m = blocks.shape[0]
         s = jnp.broadcast_to(s_val, (m, 1))
         scaled = jnp.clip(z / s_val, -fmt.qmax, fmt.qmax)
@@ -49,7 +49,8 @@ def compress_blocks_ref(blocks: jax.Array, cfg) -> tuple[jax.Array, jax.Array, j
         else:
             q = jnp.round(scaled).astype(jnp.int8)
         return q, alpha, s
-    q, s = quant_mod.quantize_ds(z, fmt, group_size=cfg.quant_group_size)
+    q, s = quant_mod.quantize_ds(z, fmt, group_size=cfg.quant_group_size,
+                                 eps=cfg.scale_eps)
     return q, alpha, s
 
 

@@ -39,6 +39,13 @@ ID = IdentityCodec()
 CODECS = {
     "taco": TacoCodec(TacoConfig(impl="jnp")),
     "taco_folded": TacoCodec(TacoConfig(impl="jnp", metadata="folded")),
+    # fused wire-emission kernels (interpret mode): encode_wire/decode_wire/
+    # decode_sum_wire run in the Pallas kernels, multibuffer stays on the
+    # component path — packed-vs-multibuf parity therefore also pins
+    # kernel-vs-jnp wire bytes
+    "taco_fused": TacoCodec(TacoConfig(impl="pallas_interpret")),
+    "taco_fused_folded": TacoCodec(TacoConfig(impl="pallas_interpret",
+                                              metadata="folded")),
     "sdp4bit": Sdp4BitCodec(),
     "tahquant": TahQuantCodec(),
     "int8": Int8Codec(),

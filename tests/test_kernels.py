@@ -96,6 +96,49 @@ def test_quant_group_size_kernel(rng):
                                rtol=1e-3, atol=1e-6)
 
 
+@pytest.mark.parametrize("scale_eps", [1e-30, 1e-20, 1e-6])
+def test_scale_floor_parity_zero_and_denormal_blocks(scale_eps):
+    """The dual-scale floor is ONE cfg-derived value (cfg.scale_eps)
+    routed through both the Pallas kernel and the jnp ref — all-zero and
+    denormal blocks must quantize identically on both paths (the kernel
+    used to hardcode 1e-30 while quantize_ds took a configurable eps)."""
+    zero = jnp.zeros((4, 256), jnp.float32)
+    denormal = jnp.full((4, 256), 1e-38, jnp.float32)
+    mixed = jnp.concatenate([zero, denormal,
+                             jnp.linspace(-1e-35, 1e-35, 256)[None, :]])
+    for x in (zero, denormal, mixed):
+        cp, cj = cfgs(scale_eps=scale_eps)
+        qp, ap, sp = ops.compress_blocks(x, cp)
+        qj, aj, sj = ref.compress_blocks_ref(x, cj)
+        np.testing.assert_array_equal(np.asarray(sp), np.asarray(sj))
+        np.testing.assert_array_equal(np.asarray(ap), np.asarray(aj))
+        np.testing.assert_array_equal(
+            np.asarray(qp.astype(jnp.float32)),
+            np.asarray(qj.astype(jnp.float32)))
+        # floor applied: no zero scales anywhere (f32-rounded floor)
+        assert float(jnp.min(sp)) >= float(np.float32(scale_eps))
+        # decode side agrees too (zero blocks must decode to exact zeros)
+        dp = ops.decompress_blocks(qp, sp, ap, cp)
+        dj = ref.decompress_blocks_ref(qj, sj, aj, cj)
+        np.testing.assert_array_equal(np.asarray(dp), np.asarray(dj))
+        if x is zero:   # zero blocks round-trip to exact zeros
+            assert float(jnp.max(jnp.abs(dp))) == 0.0
+
+
+def test_scale_floor_routed_through_wire_kernel():
+    """The fused wire-emission kernel uses the same cfg.scale_eps floor:
+    scales inside the packed buffer match the block kernel's bit-for-bit
+    on degenerate blocks."""
+    from repro.core.registry import codec_from_spec
+    from repro.core.codecs import pack_wire
+    codec = codec_from_spec("taco:pallas_interpret:seps1e-20")
+    assert codec.cfg.scale_eps == 1e-20
+    x = jnp.zeros((2, 512), jnp.float32)
+    want = pack_wire(codec.encode(x), codec.wire_layout(512))
+    np.testing.assert_array_equal(np.asarray(codec.encode_wire(x)),
+                                  np.asarray(want))
+
+
 def test_kernel_fallback_for_unsupported_config(rng):
     """Ablation configs (plain hadamard / per-tensor scale) fall back to the
     jnp path even when pallas requested."""

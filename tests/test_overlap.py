@@ -180,9 +180,10 @@ def test_chunks_threads_through_plan_telemetry():
 # single-device parity (degenerate P=1 ring; full matrix is multi-device)
 # --------------------------------------------------------------------------
 
-def test_single_device_packed_and_ring_parity(rng):
-    x = jnp.asarray(rng.normal(0, 0.02, (8, 500)).astype(np.float32))
-    ring = codec_from_spec("taco:jnp:chunks=4")
+def _three_path_parity(x, chunks=4):
+    """Monolithic packed, chunked ring, and multi-buffer transports must
+    agree bit-for-bit on ``x`` for both AG and RS."""
+    ring = codec_from_spec(f"taco:jnp:chunks={chunks}")
     for make in [lambda c: (lambda v: cc.all_gather_c(v, "model", 0, c, ID)),
                  lambda c: (lambda v: cc.psum_scatter_c(v, "model", 0, c, ID))]:
         packed = run1(make(TACO), x)
@@ -191,6 +192,164 @@ def test_single_device_packed_and_ring_parity(rng):
         chunked = run1(make(ring), x)
         np.testing.assert_array_equal(np.asarray(packed), np.asarray(multi))
         np.testing.assert_array_equal(np.asarray(packed), np.asarray(chunked))
+
+
+def test_single_device_packed_and_ring_parity(rng):
+    _three_path_parity(jnp.asarray(
+        rng.normal(0, 0.02, (8, 500)).astype(np.float32)))
+
+
+# --------------------------------------------------------------------------
+# degenerate transport shapes: all three paths bit-identical
+# --------------------------------------------------------------------------
+
+def test_degenerate_trailing_dim_smaller_than_granule(rng):
+    # 8*100 = 800 elements/slot < granule 256 on the AG path slot? no —
+    # the AG slot is the whole flattened tensor; make the per-slot
+    # trailing dim itself sub-granule: (1, 100) -> one 100-element slot
+    _three_path_parity(jnp.asarray(
+        rng.normal(0, 0.02, (1, 100)).astype(np.float32)))
+
+
+def test_degenerate_exact_chunks_granule_multiple(rng):
+    # trailing dim an exact multiple of chunks*granule: NO padding on
+    # either the monolithic (pad to granule) or ring (pad to
+    # chunks*granule) layout
+    _three_path_parity(jnp.asarray(
+        rng.normal(0, 0.02, (4, 1024)).astype(np.float32)), chunks=4)
+
+
+def test_degenerate_chunks_exceed_block_count(rng):
+    # 100 elements = ONE 256-block after granule padding, but chunks=8
+    # rings 8 wire slices — the transport must pad to chunks*granule
+    # (2048) and stay bit-identical, not crash or truncate
+    _three_path_parity(jnp.asarray(
+        rng.normal(0, 0.02, (1, 100)).astype(np.float32)), chunks=8)
+
+
+def test_chunks_exceed_block_count_multiblock_one_ulp(rng):
+    """chunks=8 over a 2-3 block tensor: ring chunks decode ONE block per
+    call where the monolithic path decodes all blocks in one batch, and
+    XLA:CPU dispatches m=1 dots (gemv) with a different accumulation
+    schedule than m>1 (gemm) — a backend instruction-selection artifact,
+    not transport corruption.  The wire BYTES are bit-identical (asserted
+    below); the decoded floats may differ by 1 ulp of the inverse
+    rotation.  When decode batch structures match (the other degenerate
+    tests, and every multi-device shape in check_parity.py) results are
+    bit-identical."""
+    x = jnp.asarray(rng.normal(0, 0.02, (2, 300)).astype(np.float32))
+    ring = codec_from_spec("taco:jnp:chunks=8")
+    # wire bytes: monolithic slot vs concatenated ring slices, bit-equal
+    flat = x.reshape(1, -1)
+    segs, _, csz = cc._chunk_slices(flat, ring)
+    ring_wire = jnp.concatenate([ring.encode_wire(s)[:, :csz]
+                                 for s in segs], axis=-1)
+    mono_padded, _ = cc._pad_to(flat, TACO.granule)
+    mono_wire = TACO.encode_wire(mono_padded)
+    np.testing.assert_array_equal(
+        np.asarray(mono_wire[:, :mono_padded.shape[-1]]),
+        np.asarray(ring_wire[:, :mono_padded.shape[-1]]))
+    # decoded values: identical to 1 ulp
+    for make in [lambda c: (lambda v: cc.all_gather_c(v, "model", 0, c, ID)),
+                 lambda c: (lambda v: cc.psum_scatter_c(v, "model", 0, c,
+                                                        ID))]:
+        np.testing.assert_allclose(
+            np.asarray(run1(make(TACO), x)),
+            np.asarray(run1(make(ring), x)), rtol=0, atol=1e-7)
+
+
+# --------------------------------------------------------------------------
+# shape validation: ValueError (not a -O-strippable assert) with context
+# --------------------------------------------------------------------------
+
+@pytest.mark.parametrize("chunks", [1, 4])
+def test_rs_indivisible_scatter_dim_raises_fake_axis(chunks, monkeypatch,
+                                                     rng):
+    """_rs_one/_rs_one_ring divisibility: patch axis_size so the check
+    trips without a multi-device mesh, and assert the message carries the
+    dim/axis context."""
+    monkeypatch.setattr(cc, "axis_size", lambda ax: 4)
+    codec = codec_from_spec(f"taco:jnp:chunks={chunks}")
+    x = jnp.zeros((6, 8), jnp.float32)  # 6 % 4 != 0
+    with pytest.raises(ValueError, match=r"scatter dim 0 has size 6.*model"):
+        cc._rs_impl(x, "model", 0, codec)
+
+
+def test_a2a_indivisible_split_dim_raises_fake_axis(monkeypatch):
+    monkeypatch.setattr(cc, "axis_size", lambda ax: 4)
+    codec = codec_from_spec("taco:jnp")
+    x = jnp.zeros((6, 8), jnp.float32)
+    with pytest.raises(ValueError, match=r"split dim 0 has size 6.*model"):
+        cc._a2a_impl(x, "model", 0, 0, codec)
+
+
+# --------------------------------------------------------------------------
+# wire-byte telemetry == actual packed buffer size (incl. chunk padding)
+# --------------------------------------------------------------------------
+
+@pytest.mark.parametrize("spec,n", [
+    ("taco:jnp", 500),                    # ragged: pads 500 -> 512
+    ("taco:jnp:chunks=4", 500),           # ragged+ring: pads 500 -> 1024
+    ("taco:jnp:folded:chunks=4", 1000),   # pads 1000 -> 1024
+    ("sdp4bit:chunks=2", 100),            # pads 100 -> 256
+    ("tahquant", 64),                     # exact: no padding
+    ("int8:g64:chunks=2", 96),            # pads 96 -> 128
+])
+def test_wire_slot_bytes_equals_packed_buffer(spec, n, rng):
+    codec = codec_from_spec(spec)
+    told = cc.wire_slot_bytes(codec, n)
+    # actually pad + slice + encode exactly as the transport does
+    chunks = int(getattr(codec, "chunks", 1))
+    x = jnp.asarray(rng.normal(0, 0.02, (1, n)).astype(np.float32))
+    segs, n0, csz = cc._chunk_slices(x, codec)
+    actual = sum(int(codec.encode_wire(seg).shape[-1]) for seg in segs)
+    assert told == actual, (spec, n, told, actual)
+    assert len(segs) == chunks and n0 == n
+
+
+def test_gather_scatter_wire_bytes_ragged(rng):
+    """gather/scatter telemetry counts the padded packed buffer, not the
+    pre-padding element count."""
+    ring = codec_from_spec("taco:jnp:chunks=4")
+    n = 500   # pads to 1024 under chunks*granule
+    per_slot = cc.wire_slot_bytes(ring, n)
+    assert cc.gather_wire_bytes((n,), jnp.float32, 8, ring) == \
+        per_slot * 7
+    assert cc.scatter_wire_bytes((8 * n,), jnp.float32, 8, ring) == \
+        per_slot * 7
+    # the old element-count formula under-reports on ragged sizes
+    assert per_slot > n * ring.bytes_per_element()
+    # identity: raw dtype bytes, unchanged semantics
+    assert cc.gather_wire_bytes((n,), jnp.float32, 8, ID) == n * 4 * 7
+
+
+def test_commplan_wire_bytes_per_element_exact_with_n():
+    from repro.core.registry import from_spec
+    plan = from_spec("tp=taco:chunks=4")
+    n = 500
+    exact = plan.wire_bytes_per_element(n)
+    asym = plan.wire_bytes_per_element()
+    assert exact["tp_fwd"] == cc.wire_slot_bytes(plan.tp_fwd, n) / n
+    assert exact["tp_fwd"] > asym["tp_fwd"]        # padding surfaced
+    assert exact["grad_rs"] == asym["grad_rs"]     # identity path unchanged
+
+
+def test_pp_path_telemetry_never_chunk_pads(rng):
+    """ppermute hops route chunked codecs through the monolithic
+    transport (granule-only padding), so pp telemetry must not count the
+    chunks*granule padding the ring AG/RS paths would."""
+    from repro.core.registry import from_spec
+    plan = from_spec("pp=tahquant:chunks=2")
+    n = 100   # granule 64: pads to 128 monolithic, 128 ring — use taco
+    plan4 = from_spec("pp=taco:chunks=4")
+    got = plan4.wire_bytes_per_element(n)["pp"]
+    # actual ppermute wire buffer: monolithic pad to ONE granule
+    padded, _ = cc._pad_to(jnp.zeros((1, n), jnp.float32), plan4.pp.granule)
+    actual = plan4.pp.encode_wire(padded).shape[-1]
+    assert got == actual / n
+    assert got < cc.wire_slot_bytes(plan4.pp, n) / n   # ring padding bigger
+    assert plan.wire_bytes_per_element(64)["pp"] == \
+        cc.wire_slot_bytes(plan.pp, 64, chunks=1) / 64
 
 
 # --------------------------------------------------------------------------

@@ -38,6 +38,8 @@ CODEC_SPECS = [
     "int8",
     "int8:g64",
     "taco:folded:chunks=4",
+    "taco:seps1e-20",
+    "taco:pallas_interpret:eps1e-10:seps1e-25",
     "sdp4bit:chunks=2",
     "tahquant:g32:chunks=8",
     "int8:chunks=2",
