@@ -18,6 +18,18 @@ single-buffer transport engine (`repro.core.collectives`):
     the ring pays for its extra launches (no async overlap to win back);
     the numbers exist to track that the decomposition overhead stays
     bounded, and the row is the baseline future async work improves on.
+  * pipelined vs serial ring schedule — every ring row is PAIRED with a
+    ``schedule=serial`` twin (``*_ring_cN`` vs ``*_ring_cN_serial``): the
+    software-pipelined stage schedule (``repro.core.overlap``, barrier-
+    fenced (encode[c], transfer[c-1], decode[c-2]) ticks) against the
+    hoisted all-encodes-first emission.  The fences add no ops but DO
+    constrain the synchronous CPU scheduler, which shows up as a small
+    measured overhead on some hops (``vs_serial`` 0.87-1.02x at the
+    committed baseline, worst on latency-bound reduce-scatter) — the
+    paired rows pin that cost honestly, so an async/TPU backend where
+    pipelined pulls ahead shows up as a tracked win rather than an
+    anecdote, and a CPU regression where the fences get more expensive
+    shows up too.
   * kernel-fused wire emission vs the pack copy — ``encode_wire`` /
     ``decode_wire`` running in the fused Pallas kernels (interpret mode
     on CPU: same HLO structure, payload+scales+alpha stored straight at
@@ -95,12 +107,19 @@ def _worker(quick: bool) -> None:
     x_bw = tp_like_tensor(rng, (64, 2048) if quick else (256, 4096))
     iters = 10 if quick else 50
 
+    from repro.core.registry import codec_to_spec
+
     identity = codec_from_spec("none")
     taco = codec_from_spec("taco:jnp")          # dual metadata: 3 components
     chunks = 4
     taco_ring = codec_from_spec(f"taco:jnp:chunks={chunks}")
     # fused wire-emission kernels (interpret mode on CPU)
     taco_fused = codec_from_spec("taco:pallas_interpret")
+
+    def serial_twin(ring_codec):
+        """Same codec + chunking, schedule=serial — derived through the
+        spec grammar so the paired rows can never drift apart."""
+        return codec_from_spec(codec_to_spec(ring_codec) + ":schedule=serial")
 
     def jit_sm(fn, in_spec, out_spec):
         return jax.jit(shard_map(fn, mesh=mesh, in_specs=in_spec,
@@ -138,8 +157,17 @@ def _worker(quick: bool) -> None:
             fn_r = make_fn(ring_codec)
             us_r = time_fn(fn_r, x, iters=iters)
             n_r = _collective_count(fn_r, x)
+            # paired schedule rows: same chunking, same ring steps, only
+            # the stage emission order (and its barrier fences) differs
+            fn_s = make_fn(serial_twin(ring_codec))
+            us_s = time_fn(fn_s, x, iters=iters)
+            n_s = _collective_count(fn_s, x)
             emit(f"overlap/{tag}_ring_c{chunks}", us_r,
-                 f"collectives={n_r};vs_monolithic={us_p / us_r:.2f}x")
+                 f"collectives={n_r};schedule=pipelined;"
+                 f"vs_monolithic={us_p / us_r:.2f}x;"
+                 f"vs_serial={us_s / us_r:.2f}x")
+            emit(f"overlap/{tag}_ring_c{chunks}_serial", us_s,
+                 f"collectives={n_s};schedule=serial;baseline")
 
     measure("all_gather", x_lat, ag, taco_ring)
     measure("reduce_scatter", x_lat, rs, taco_ring)

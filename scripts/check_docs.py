@@ -1,0 +1,121 @@
+"""Documentation link-and-reference linter (CI: scripts/ci.sh).
+
+Keeps the docs front door honest against the tree it describes.  Three
+checks over README.md, ROADMAP.md, and every docs/*.md:
+
+  1. LINKS — every relative markdown link target ``[text](path)`` must
+     exist (resolved against the linking file's directory; ``#anchors``
+     stripped; http(s)/mailto links skipped).
+  2. PATHS — every file path mentioned in inline code spans must exist.
+     A span counts as a path reference when it looks like one: only
+     path characters, and either ends with a known source suffix
+     (.py/.md/.sh/.json/.ini) or names a directory with a trailing
+     slash.  Candidates resolve against the repo root, ``src/repro``
+     (module-map style references like ``core/collectives.py``), and
+     ``docs/``.
+  3. SPECS — every compression spec embedded in the docs must parse
+     through the real grammar (``repro.core.registry.from_spec``):
+     inline code spans that start with a plan path/knob key (uppercase
+     letters mark grammar placeholders like ``tp=X`` and are skipped),
+     every ``--comm-spec "…"`` / ``--comm-spec <alias>`` occurrence,
+     and every ``from_spec("…")`` literal — fenced code blocks
+     included for the latter two.
+
+Exits nonzero listing every violation.  Run directly:
+
+    PYTHONPATH=src python scripts/check_docs.py
+"""
+from __future__ import annotations
+
+import re
+import sys
+from pathlib import Path
+
+ROOT = Path(__file__).resolve().parents[1]
+
+_FENCE = re.compile(r"^```.*?^```", re.M | re.S)
+_LINK = re.compile(r"\[[^\]]*\]\(([^)\s]+)\)")
+_SPAN = re.compile(r"`([^`\n]+)`")
+_PATHISH = re.compile(r"[A-Za-z0-9_./-]+")
+_SUFFIXES = (".py", ".md", ".sh", ".json", ".ini")
+# plan-level spec keys; a span starting with one of these and '=' is a
+# spec the grammar must accept (schedule=/chunks= are CODEC args and may
+# legitimately appear alone in prose, so they are not keys here)
+_SPEC_KEYS = ("tp", "tp_fwd", "tp_bwd", "grad_rs", "weight_ag", "pp",
+              "skip_first", "skip_last", "warmup")
+_SPEC_SPAN = re.compile(
+    r"^(?:%s)=[^\s`]+$" % "|".join(_SPEC_KEYS))
+_COMM_SPEC = re.compile(r"--comm-spec\s+(?:\"([^\"]+)\"|([^\s\"']+))")
+_FROM_SPEC = re.compile(r"from_spec\(\"([^\"]+)\"\)")
+
+
+def doc_files() -> list[Path]:
+    files = [ROOT / "README.md", ROOT / "ROADMAP.md"]
+    files += sorted((ROOT / "docs").glob("*.md"))
+    return [f for f in files if f.exists()]
+
+
+def check_links(path: Path, prose: str, errors: list[str]) -> None:
+    for target in _LINK.findall(prose):
+        if target.startswith(("http://", "https://", "mailto:")):
+            continue
+        rel = target.split("#", 1)[0]
+        if not rel:                     # pure #anchor into the same file
+            continue
+        if not (path.parent / rel).exists():
+            errors.append(f"{path.name}: broken link -> {target}")
+
+
+def _path_candidate(span: str) -> bool:
+    if not _PATHISH.fullmatch(span):
+        return False
+    return span.endswith(_SUFFIXES) or ("/" in span and span.endswith("/"))
+
+
+def check_paths(path: Path, prose: str, errors: list[str]) -> None:
+    roots = (ROOT, ROOT / "src" / "repro", ROOT / "docs")
+    for span in _SPAN.findall(prose):
+        if not _path_candidate(span):
+            continue
+        if not any((r / span).exists() for r in roots):
+            errors.append(f"{path.name}: referenced path missing -> {span}")
+
+
+def check_specs(path: Path, prose: str, raw: str, errors: list[str]) -> None:
+    from repro.core.registry import CommSpecError, from_spec
+    specs = []
+    for span in _SPAN.findall(prose):
+        # uppercase = grammar placeholder (tp=X, skip_first=N), not a spec
+        if _SPEC_SPAN.match(span) and span == span.lower():
+            specs.append(span)
+    for quoted, bare in _COMM_SPEC.findall(raw):
+        specs.append(quoted or bare)
+    specs += _FROM_SPEC.findall(raw)
+    for spec in specs:
+        try:
+            from_spec(spec)
+        except CommSpecError as e:
+            errors.append(f"{path.name}: spec does not parse -> "
+                          f"{spec!r} ({e})")
+
+
+def main() -> int:
+    errors: list[str] = []
+    files = doc_files()
+    for path in files:
+        raw = path.read_text()
+        prose = _FENCE.sub("", raw)     # links/spans: outside code fences
+        check_links(path, prose, errors)
+        check_paths(path, prose, errors)
+        check_specs(path, prose, raw, errors)
+    if errors:
+        print(f"FAIL: {len(errors)} documentation reference error(s):")
+        print("\n".join(f"  {e}" for e in errors))
+        return 1
+    print(f"PASS: links, file paths, and spec strings of "
+          f"{len(files)} doc files all resolve")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

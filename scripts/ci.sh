@@ -33,6 +33,11 @@ python -m pytest -x -q tests/test_compat.py tests/test_registry.py \
     -k "not hlo"
 python -m pytest -x -q tests/test_overlap.py
 
+# Docs linter: every README/ROADMAP/docs link, referenced file path, and
+# embedded compression spec must resolve against the actual tree/grammar
+# (cheap; runs before the expensive stages)
+python scripts/check_docs.py
+
 # Collective-transport regression gate: re-run the fusion+overlap tables
 # (8-device subprocess: packed vs multi-buffer vs fused-wire vs chunked
 # ring) and fail if any lowered-HLO collective count regressed versus the

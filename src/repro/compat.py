@@ -24,6 +24,12 @@ Exports
                           after 0.4.x).
   HAS_FP8 / FLOAT8_E4M3 / FLOAT8_E5M2 / has_dtype
                           FP8 wire-format capability detection.
+  optimization_barrier / HAS_OPTIMIZATION_BARRIER
+                          jax.lax.optimization_barrier where available
+                          (the scheduling fence of the software-pipelined
+                          ring transport), identity fallback otherwise —
+                          results are bit-identical either way, only the
+                          anti-reordering fence is lost.
 """
 from __future__ import annotations
 
@@ -38,7 +44,8 @@ __all__ = [
     "axis_type_auto", "axis_size", "tree_map", "tree_leaves",
     "tree_flatten", "tree_unflatten", "tree_structure",
     "tree_leaves_with_path", "tree_map_with_path", "keystr", "HAS_FP8",
-    "FLOAT8_E4M3", "FLOAT8_E5M2", "has_dtype",
+    "FLOAT8_E4M3", "FLOAT8_E5M2", "has_dtype", "optimization_barrier",
+    "HAS_OPTIMIZATION_BARRIER",
 ]
 
 
@@ -148,6 +155,32 @@ else:
         Pre-``lax.axis_size`` idiom: ``psum`` of the constant 1 over the
         axis constant-folds to the axis size as a Python int."""
         return jax.lax.psum(1, axis_name)
+
+
+# --------------------------------------------------------------------------
+# scheduling fences
+# --------------------------------------------------------------------------
+
+HAS_OPTIMIZATION_BARRIER = hasattr(jax.lax, "optimization_barrier")
+
+if HAS_OPTIMIZATION_BARRIER:
+
+    def optimization_barrier(values):
+        """Identity on ``values`` (any pytree) that XLA may not reorder
+        across: every op producing an input finishes before any op
+        consuming an output starts.  The software-pipelined ring transport
+        (``repro.core.overlap``) fences its stage ticks with this so the
+        compiler cannot re-serialize the interleaved chunk streams."""
+        return jax.lax.optimization_barrier(values)
+
+else:
+
+    def optimization_barrier(values):
+        """Identity fallback for jax builds without
+        ``lax.optimization_barrier``: results are bit-identical (the
+        barrier is semantically the identity), only the anti-reordering
+        scheduling fence is lost."""
+        return values
 
 
 # --------------------------------------------------------------------------

@@ -23,6 +23,15 @@ and a ``chunks`` knob selecting the chunked ring-overlap transport
 ``repro.core.collectives``).  ``IdentityCodec.wire_layout`` returns None:
 the baseline transports the raw tensor and has nothing to pack.
 
+Chunked codecs additionally carry a ``schedule`` knob (spec token
+``schedule=pipelined|serial``, default ``pipelined``) choosing how the
+ring transport orders the per-chunk stages: ``pipelined`` emits the
+software-pipelined (encode[c], transfer[c-1], decode[c-2]) stage schedule
+fenced with optimization barriers (``repro.core.overlap``), ``serial``
+keeps the hoisted all-encodes-first ordering for parity testing.  Both
+are bit-identical; ``schedule`` is ignored when ``chunks == 1`` (the
+monolithic transport has a single stage of each kind).
+
 Wire-native fast paths: the transport calls ``encode_wire(x)`` /
 ``decode_wire(wire, n, dtype)`` / ``decode_sum_wire(wire, n, dtype)``
 rather than composing ``encode`` with :func:`pack_wire` itself.  The
@@ -42,6 +51,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core import dp_compress, pp_compress
+from repro.core.overlap import PIPELINED
 from repro.core.taco import TacoConfig
 from repro.kernels import ops as kops
 
@@ -228,6 +238,7 @@ class TacoCodec(WireFastPath):
 
     cfg: TacoConfig = TacoConfig()
     chunks: int = 1
+    schedule: str = PIPELINED
 
     @property
     def granule(self) -> int:
@@ -324,6 +335,7 @@ class Sdp4BitCodec(WireFastPath):
     block: int = 128
     rotate: bool = True
     chunks: int = 1
+    schedule: str = PIPELINED
 
     @property
     def granule(self) -> int:
@@ -353,6 +365,7 @@ class Sdp4BitCodec(WireFastPath):
 class TahQuantCodec(WireFastPath):
     group: int = 64
     chunks: int = 1
+    schedule: str = PIPELINED
 
     @property
     def granule(self) -> int:
@@ -384,6 +397,7 @@ class Int8Codec(WireFastPath):
 
     group: int = 128
     chunks: int = 1
+    schedule: str = PIPELINED
 
     @property
     def granule(self) -> int:

@@ -39,9 +39,14 @@ Chunked ring overlap (Flash-Communication-style): codecs with
 variants built from ``ppermute`` steps over N wire slices.  Chunk
 streams carry no data dependencies on each other, so the encode of chunk
 i+1 and the fused decode/decode_sum of chunk i−1 are free to overlap the
-transfer of chunk i under an asynchronous scheduler; results are
-bit-identical to the monolithic path (contributions are compressed once
-and peer sums happen at the destination in peer-index order).
+transfer of chunk i; the stage emission order is owned by
+``repro.core.overlap`` — ``schedule=pipelined`` (the default) emits the
+barrier-fenced software-pipelined (encode[c], transfer[c-1], decode[c-2])
+tick schedule so XLA cannot hoist the encodes and re-serialize the
+streams, ``schedule=serial`` keeps the hoisted all-encodes-first order
+for parity testing.  Results are bit-identical across both schedules and
+the monolithic path (contributions are compressed once and peer sums
+happen at the destination in peer-index order).
 
 Megatron conjugate pairs provided for both TP modes:
   SP mode        : ``all_gather_c``(seq) fwd / ``psum_scatter_c``(seq) bwd
@@ -62,6 +67,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.compat import axis_size
+from repro.core import overlap
 from repro.core.codecs import (IdentityCodec,  # noqa: F401 — re-exported
                                pack_wire, unpack_wire)
 
@@ -165,21 +171,36 @@ def _compressed_collective(name, impl, bwd, n_static, doc=None):
 # --------------------------------------------------------------------------
 
 def _ring_chunks(codec):
-    """Number of ring chunks the codec requests (1 = monolithic)."""
+    """Number of ring chunks the codec requests (1 = monolithic).
+
+    Codecs without the knob (``IdentityCodec``) count as 1 — the ring
+    exists to slice the packed wire buffer, which they don't have."""
     return int(getattr(codec, "chunks", 1) or 1)
 
 
 def _peer_order(stack, idx, p):
     """Reorder an arrival-ordered ``(P, ...)`` stack into peer-index order.
 
-    Ring arrival k holds the buffer of peer ``(idx - k) mod P``, so peer
-    j's buffer sits at arrival ``(idx - j) mod P``."""
+    THE ring bit-parity invariant.  After k neighbor-forwarding hops a
+    device holds the buffer of peer ``(idx - k) mod P``, so arrivals are
+    stacked in a device-DEPENDENT order; the monolithic collectives
+    (``lax.all_gather`` / the two-shot all-to-all) deliver peer-index
+    order on every device.  Decoding — and especially ``decode_sum``'s
+    sequential float accumulation, whose rounding depends on operand
+    order — must therefore consume ``stack[j] == peer j's buffer``
+    everywhere, which this gather restores (peer j's buffer sits at
+    arrival ``(idx - j) mod P``).  Skipping it would yield per-device
+    1-ulp sum differences, not just permuted outputs."""
     return jnp.take(stack, (idx - jnp.arange(p)) % p, axis=0)
 
 
 def _chunk_slices(x2d, codec):
     """Pad the trailing dim to ``chunks * granule`` and return the static
-    chunk views plus the original trailing size and chunk size."""
+    chunk views plus the original trailing size and chunk size.
+
+    The padding is compressed and shipped like real data (see
+    ``wire_slot_bytes`` for the byte accounting); every chunk view has
+    the same static size so all ring streams share one wire layout."""
     chunks = _ring_chunks(codec)
     padded, n0 = _pad_to(x2d, chunks * codec.granule)
     csz = padded.shape[-1] // chunks
@@ -188,27 +209,33 @@ def _chunk_slices(x2d, codec):
 
 def _ag_one_ring(x, ax, dim, codec):
     """Chunked ring all-gather: the local wire buffer is forwarded
-    neighbor-to-neighbor for P-1 ``ppermute`` steps per chunk.  Chunk
-    streams are data-independent, so chunk c+1's encode and chunk c-1's
-    decode can overlap chunk c's transfer (double buffering); the decode
-    consumes the peer-ordered wire stack, making the result bit-identical
-    to the monolithic single-collective path."""
+    neighbor-to-neighbor for P-1 ``ppermute`` steps per chunk, and each
+    chunk's decode consumes the peer-ordered arrival stack (see
+    :func:`_peer_order` for the invariant), making the result
+    bit-identical to the monolithic single-collective path.
+
+    Chunk streams are data-independent, so chunk c+1's encode and chunk
+    c-1's fused decode can overlap chunk c's transfer; the stage emission
+    order (pipelined with barrier fences vs hoisted serial) is the
+    codec's ``schedule`` knob, dispatched through
+    :func:`repro.core.overlap.run_ring`."""
     p = axis_size(ax)
     segs, n0, csz = _chunk_slices(x.reshape(1, -1), codec)
     ring = tuple((s, (s + 1) % p) for s in range(p))
     idx = jax.lax.axis_index(ax)
-    # encode every chunk straight to its wire buffer up front: no chunk
-    # depends on another's ring steps, which is exactly what lets an async
-    # scheduler overlap them
-    wires = [codec.encode_wire(seg) for seg in segs]
-    outs = []
-    for buf in wires:
+
+    def transfer(buf):
+        """P-1 neighbor-forwarding ring steps -> peer-ordered stack."""
         arrivals = [buf]
         for _ in range(p - 1):
             buf = jax.lax.ppermute(buf, ax, ring)
             arrivals.append(buf)
-        stack = _peer_order(jnp.stack(arrivals)[:, 0], idx, p)    # (P, bytes)
-        outs.append(codec.decode_wire(stack, csz, x.dtype))
+        return _peer_order(jnp.stack(arrivals)[:, 0], idx, p)   # (P, bytes)
+
+    outs = overlap.run_ring(
+        segs, encode=codec.encode_wire, transfer=transfer,
+        decode=lambda stack: codec.decode_wire(stack, csz, x.dtype),
+        schedule=overlap.ring_schedule(codec))
     dec = (jnp.concatenate(outs, axis=-1) if len(outs) > 1
            else outs[0])[:, :n0]                                  # (P, n)
     dec = dec.reshape(p, *x.shape)
@@ -222,8 +249,19 @@ def _rs_one_ring(x, ax, dim, codec):
     """Chunked ring reduce-scatter (two-shot preserving): at step k every
     device ppermutes its once-compressed contribution for the peer k hops
     ahead directly to it — no partial-sum requantization — and the fused
-    ``decode_sum`` runs per chunk on the peer-ordered stack, bit-identical
-    to the monolithic compressed all-to-all."""
+    ``decode_sum`` runs per chunk on the peer-ordered stack (see
+    :func:`_peer_order`), bit-identical to the monolithic compressed
+    all-to-all.  Stage emission order is the codec's ``schedule`` knob,
+    dispatched through :func:`repro.core.overlap.run_ring`.
+
+    The per-peer sends are hoisted OUT of the step loop as one gather of
+    the chunk's (P, bytes) wire matrix into send order (row k = the
+    contribution for the peer k hops ahead); each step then reads its row
+    with a static slice.  The former per-step ``dynamic_index_in_dim``
+    selections re-materialized a dynamic-slice of the full wire matrix at
+    every step — the lowered HLO now carries ZERO dynamic-slices
+    (asserted in tests/multidev/check_parity.py), bit-parity unchanged.
+    """
     p = axis_size(ax)
     moved = jnp.moveaxis(x, dim, 0)
     d = moved.shape[0]
@@ -234,25 +272,34 @@ def _rs_one_ring(x, ax, dim, codec):
     rows = moved.reshape(p, -1)                    # row j -> destined peer j
     segs, n0, csz = _chunk_slices(rows, codec)
     idx = jax.lax.axis_index(ax)
-    outs = []
-    for seg in segs:
-        wire = codec.encode_wire(seg)                          # (P, bytes)
-        arrivals = [jax.lax.dynamic_index_in_dim(wire, idx, 0,
-                                                 keepdims=False)]
+
+    def transfer(wire):
+        """Shifted two-shot sends -> peer-ordered stack, one hoisted
+        gather: ``sends[k] == wire[(idx + k) % p]``."""
+        sends = jnp.take(wire, (idx + jnp.arange(p)) % p, axis=0)
+        arrivals = [sends[0]]                      # own contribution
         for k in range(1, p):
-            send = jax.lax.dynamic_index_in_dim(wire, (idx + k) % p, 0,
-                                                keepdims=False)
             shift = tuple((s, (s + k) % p) for s in range(p))
-            arrivals.append(jax.lax.ppermute(send, ax, shift))
-        stack = _peer_order(jnp.stack(arrivals), idx, p)       # (P, bytes)
+            arrivals.append(jax.lax.ppermute(sends[k], ax, shift))
+        return _peer_order(jnp.stack(arrivals), idx, p)        # (P, bytes)
+
+    def decode(stack):
         dec = codec.decode_sum_wire(stack, csz, x.dtype)
-        outs.append(dec.reshape(-1)[:csz])
+        return dec.reshape(-1)[:csz]
+
+    outs = overlap.run_ring(
+        segs, encode=codec.encode_wire, transfer=transfer, decode=decode,
+        schedule=overlap.ring_schedule(codec))
     summed = (jnp.concatenate(outs) if len(outs) > 1 else outs[0])[:n0]
     out = summed.reshape(d // p, *moved.shape[1:])
     return jnp.moveaxis(out, 0, dim) if dim != 0 else out
 
 
 def _ag_one(x, ax, dim, codec):
+    """One-axis compressed all-gather: identity codecs take the native
+    lax collective (baseline HLO untouched), chunked wire codecs the
+    ring, everything else the monolithic packed transport — all three
+    bit-identical (check_parity matrix)."""
     if isinstance(codec, IdentityCodec):
         return jax.lax.all_gather(x, ax, axis=dim, tiled=True)
     if _WIRE_PACKING and _ring_chunks(codec) > 1 \
@@ -271,12 +318,19 @@ def _ag_one(x, ax, dim, codec):
 
 
 def _ag_impl(x, axis_name, dim, codec):
+    """Hierarchical all-gather over (possibly tuple) ``axis_name``,
+    innermost axis first — matches ``lax.all_gather``'s major-to-minor
+    concatenation order (module docstring)."""
     for ax in reversed(_axes_tuple(axis_name)):
         x = _ag_one(x, ax, dim, codec)
     return x
 
 
 def _rs_one(x, ax, dim, codec):
+    """One-axis compressed reduce-scatter (same three-way dispatch as
+    :func:`_ag_one`); the compressed path is the paper's two-shot: ONE
+    compressed all-to-all + ONE fused local reduction, no partial-sum
+    requantization."""
     if isinstance(codec, IdentityCodec):
         return jax.lax.psum_scatter(x, ax, scatter_dimension=dim, tiled=True)
     if _WIRE_PACKING and _ring_chunks(codec) > 1 \
@@ -305,12 +359,17 @@ def _rs_one(x, ax, dim, codec):
 
 
 def _rs_impl(x, axis_name, dim, codec):
+    """Hierarchical reduce-scatter, outermost axis first (the scatter
+    conjugate of :func:`_ag_impl`'s gather order)."""
     for ax in _axes_tuple(axis_name):
         x = _rs_one(x, ax, dim, codec)
     return x
 
 
 def _ar_impl(x, axis_name, codec):
+    """Compressed two-shot AllReduce = ReduceScatter ∘ AllGather over the
+    flattened tensor (two compressions per round, as in the paper);
+    identity codecs take native ``lax.psum``."""
     if isinstance(codec, IdentityCodec):
         return jax.lax.psum(x, axis_name)
     axes = _axes_tuple(axis_name)
@@ -325,6 +384,10 @@ def _ar_impl(x, axis_name, codec):
 
 
 def _pp_impl(x, axis_name, perm, codec):
+    """Compressed point-to-point permute: one packed wire buffer per
+    ``lax.ppermute``.  ``chunks=`` is deliberately ignored here — a
+    pipeline send is already a single hop with nothing to ring over
+    (telemetry accounts accordingly, see ``wire_slot_bytes``)."""
     if isinstance(codec, IdentityCodec):
         return jax.lax.ppermute(x, axis_name, perm)
     dec = _transport(x.reshape(1, -1), codec,
@@ -334,6 +397,10 @@ def _pp_impl(x, axis_name, perm, codec):
 
 
 def _a2a_impl(x, axis_name, split_dim, concat_dim, codec):
+    """Compressed all-to-all (MoE dispatch), one packed wire buffer per
+    hop; peer-major concat along the split dim reproduces the tiled
+    ``lax.all_to_all`` layout bit-for-bit.  ``chunks=`` ignored, as for
+    ppermute."""
     if isinstance(codec, IdentityCodec):
         return jax.lax.all_to_all(
             x, axis_name, split_axis=split_dim, concat_axis=concat_dim, tiled=True)
@@ -371,7 +438,14 @@ all_gather_c = _compressed_collective(
     doc="""Compressed all-gather concatenating along ``dim`` (tiled layout).
 
     ``all_gather_c(x, axis_name, dim, fwd_codec, bwd_codec)``; backward is
-    the compressed reduce-scatter with the codec pair swapped.""")
+    the compressed reduce-scatter with the codec pair swapped.
+
+    Wire/parity contract: one packed uint8 wire buffer per lax collective
+    (``chunks*(P-1)`` ppermutes on the ring path, schedule per the
+    codec's ``schedule`` knob); output matches the tiled
+    ``lax.all_gather`` layout and is bit-identical across the packed /
+    multibuffer / ring-pipelined / ring-serial transports for every
+    registered codec (tests/multidev/check_parity.py).""")
 
 
 psum_scatter_c = _compressed_collective(
@@ -383,7 +457,14 @@ psum_scatter_c = _compressed_collective(
     doc="""Compressed reduce-scatter along ``dim`` (tiled layout).
 
     ``psum_scatter_c(x, axis_name, dim, fwd_codec, bwd_codec)``; backward
-    is the compressed all-gather with the codec pair swapped.""")
+    is the compressed all-gather with the codec pair swapped.
+
+    Wire/parity contract: two-shot — every contribution is compressed
+    exactly ONCE (no partial-sum requantization) and the fused
+    ``decode_sum`` accumulates the peer stack in peer-index order on
+    every device (:func:`_peer_order`), so packed / multibuffer /
+    ring-pipelined / ring-serial transports are bit-identical; the
+    scatter dim must divide by the axis size (ValueError otherwise).""")
 
 
 allreduce_g = _compressed_collective(
@@ -392,7 +473,12 @@ allreduce_g = _compressed_collective(
     bwd=lambda ct, axis_name, fc, bc: ct,
     n_static=3,
     doc="""Megatron "g": forward compressed two-shot AllReduce, backward
-    identity. Use at row-parallel outputs (non-SP TP mode / decode).""")
+    identity. Use at row-parallel outputs (non-SP TP mode / decode).
+
+    Wire/parity contract: lowers to ReduceScatter ∘ AllGather over the
+    flattened tensor — both hops inherit the full transport matrix
+    (packing, ring schedules, bit-identity) of the underlying
+    collectives; identity codecs lower to native ``lax.psum``.""")
 
 
 copy_f = _compressed_collective(
@@ -401,7 +487,12 @@ copy_f = _compressed_collective(
     bwd=lambda ct, axis_name, fc, bc: _ar_impl(ct, axis_name, bc),
     n_static=3,
     doc="""Megatron "f": forward identity, backward compressed AllReduce.
-    Use at column-parallel inputs (non-SP TP mode).""")
+    Use at column-parallel inputs (non-SP TP mode).
+
+    Wire/parity contract: the forward emits NO collective; the backward
+    AllReduce uses the BACKWARD codec (cotangent compression is
+    straight-through, as in the paper) and inherits ``allreduce_g``'s
+    transport contract.""")
 
 
 ppermute_c = _compressed_collective(
@@ -412,7 +503,12 @@ ppermute_c = _compressed_collective(
     n_static=4,
     doc="""Compressed point-to-point send (pipeline boundaries; TahQuant
     compression site). ``perm`` is a tuple of (src, dst) pairs, as
-    lax.ppermute; backward routes through the inverted permutation.""")
+    lax.ppermute; backward routes through the inverted permutation.
+
+    Wire/parity contract: exactly ONE ``lax.ppermute`` moving the packed
+    wire buffer per hop — ``chunks=`` is ignored (a point-to-point send
+    has nothing to ring over) and telemetry counts granule-only
+    padding.""")
 
 
 all_to_all_c = _compressed_collective(
@@ -423,7 +519,12 @@ all_to_all_c = _compressed_collective(
         all_to_all_c(ct, axis_name, concat_dim, split_dim, bc, fc),
     n_static=5,
     doc="""Compressed all-to-all (MoE expert-parallel dispatch; the paper's
-    compressed AlltoAll). Backward swaps split/concat dims and codecs.""")
+    compressed AlltoAll). Backward swaps split/concat dims and codecs.
+
+    Wire/parity contract: ONE ``lax.all_to_all`` moving the packed wire
+    buffer; output reproduces the tiled native layout bit-for-bit;
+    requires ``split_dim == concat_dim`` and a split dim divisible by
+    the axis size (ValueError otherwise); ``chunks=`` ignored.""")
 
 
 def psum_exact(x, axis_name):

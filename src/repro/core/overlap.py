@@ -1,0 +1,162 @@
+"""Software-pipelined stage scheduler for the chunked ring transport.
+
+The chunked ring collectives (``repro.core.collectives._ag_one_ring`` /
+``_rs_one_ring``) decompose one compressed all-gather / reduce-scatter
+into ``chunks`` independent streams, each a three-stage chain::
+
+    encode[c]    raw chunk c      -> packed uint8 wire buffer
+    transfer[c]  wire buffer      -> peer-ordered arrival stack
+                                     (P-1 ppermute ring steps)
+    decode[c]    arrival stack    -> decoded / peer-summed output chunk
+
+Chunk streams carry no data dependencies on each other, so stage ops of
+*different* chunks may run concurrently — that is the whole point of
+chunking (TACO §4.4 "efficient overlap with communication"; Flash
+Communication makes the same argument).  But a plain per-chunk loop gives
+the compiler no reason to interleave them: XLA is free to hoist every
+encode above the first ring step and serialize the streams back into
+exactly the monolithic schedule, which is what the synchronous CPU
+backend does.
+
+:func:`run_ring` makes the overlap structural instead of accidental.
+Under ``schedule="pipelined"`` it emits the classic double-buffered
+software pipeline over ticks ``t``::
+
+    tick t:   encode[t]  |  transfer[t-1]  |  decode[t-2]
+
+with a prologue (ticks 0..1) and epilogue (the last two ticks) — while
+chunk ``t-1`` occupies the wire, chunk ``t``'s encode and chunk
+``t-2``'s decode have compute to run, and the three ops inside one tick
+are mutually data-independent.  Every tick boundary is fenced with ONE
+``optimization_barrier`` (via :mod:`repro.compat`) across all live
+buffers, so the compiler cannot re-hoist encodes across ticks or
+re-serialize the streams: the lowered HLO provably interleaves encode
+ops between the ppermute ring steps (asserted in
+``tests/multidev/check_parity.py``).
+
+``schedule="serial"`` keeps the hoisted ordering — all encodes, then all
+transfers, then all decodes, no fences — as the parity/benchmark
+baseline the pipelined schedule is compared against.
+
+Both schedules run the SAME pure stage ops on the same operands, only in
+a different emission order with identity fences, so results are
+**bit-identical** to each other and to the monolithic single-collective
+path for every registered codec (property-tested in
+``tests/test_overlap.py`` and the 8-device ``check_parity`` matrix).
+
+The schedule is carried on the codec (``schedule`` field, spec token
+``schedule=pipelined|serial``, default pipelined) exactly like
+``chunks`` — see ``repro.core.registry``.
+"""
+from __future__ import annotations
+
+from repro.compat import optimization_barrier
+
+__all__ = [
+    "PIPELINED", "SERIAL", "SCHEDULES", "validate_schedule",
+    "ring_schedule", "run_ring",
+]
+
+PIPELINED = "pipelined"
+SERIAL = "serial"
+#: Valid values of the ``schedule=`` spec token / codec field.
+SCHEDULES = (PIPELINED, SERIAL)
+
+
+def validate_schedule(value: str) -> str:
+    """Return ``value`` if it names a known ring schedule, else raise
+    ``ValueError`` (the registry wraps it as ``CommSpecError``)."""
+    if value not in SCHEDULES:
+        raise ValueError(
+            f"unknown ring schedule {value!r}; valid: {'/'.join(SCHEDULES)}")
+    return value
+
+
+def ring_schedule(codec) -> str:
+    """The validated ring schedule a codec requests (``schedule`` field;
+    codecs without one — e.g. ``IdentityCodec`` — default to pipelined,
+    which is moot since they never route through the ring)."""
+    return validate_schedule(getattr(codec, "schedule", PIPELINED))
+
+
+def _fence(*stages):
+    """One ``optimization_barrier`` across every live buffer of every
+    pipeline stage, returned re-grouped.
+
+    A single shared barrier (rather than one per stage) is what makes
+    the tick boundary a real fence: every op of tick ``t`` must complete
+    before any op of tick ``t+1`` starts, while ops *inside* a tick stay
+    mutually unordered (they touch different chunks) and free to overlap.
+    Semantically the identity — bit-parity is untouched.
+    """
+    flat = [buf for stage in stages for buf in stage]
+    if not flat:
+        return stages
+    flat = list(optimization_barrier(tuple(flat)))
+    out, i = [], 0
+    for stage in stages:
+        out.append(flat[i:i + len(stage)])
+        i += len(stage)
+    return tuple(out)
+
+
+def _serial(segs, encode, transfer, decode):
+    """Hoisted stage ordering: all encodes, then all ring transfers, then
+    all decodes, no fences — today's chunked-ring emission order, kept as
+    the baseline the pipelined schedule is parity-tested and benchmarked
+    against.  On a synchronous backend this is also what the pipelined
+    schedule degenerates to performance-wise."""
+    wires = [encode(seg) for seg in segs]
+    stacks = [transfer(wire) for wire in wires]
+    return [decode(stack) for stack in stacks]
+
+
+def _pipelined(segs, encode, transfer, decode):
+    """Double-buffered 3-stage software pipeline with barrier-fenced
+    ticks; see the module docstring for the schedule diagram.
+
+    Each stage queue holds at most one in-flight buffer (double
+    buffering: one chunk on the wire, one being encoded, one being
+    decoded), outputs are appended in chunk order (FIFO), and every live
+    buffer — including raw not-yet-encoded chunks and already-decoded
+    outputs — crosses each tick's single fence so no stage op can drift
+    across a tick boundary in either direction.
+    """
+    pending = list(segs)            # raw chunks awaiting encode
+    enc: list = []                  # encoded wires awaiting transfer
+    tx: list = []                   # arrival stacks awaiting decode
+    outs: list = []                 # decoded chunks, in chunk order
+    for _ in range(len(segs) + 2):  # prologue + steady state + epilogue
+        pending, enc, tx, outs = _fence(pending, enc, tx, outs)
+        # pop every stage's input BEFORE pushing results: a buffer
+        # produced in tick t enters its next stage no earlier than t+1
+        e_in = pending.pop(0) if pending else None
+        t_in = enc.pop(0) if enc else None
+        d_in = tx.pop(0) if tx else None
+        if e_in is not None:
+            enc.append(encode(e_in))
+        if t_in is not None:
+            tx.append(transfer(t_in))
+        if d_in is not None:
+            outs.append(decode(d_in))
+    return outs
+
+
+def run_ring(segs, *, encode, transfer, decode, schedule=PIPELINED):
+    """Run the 3-stage ring chain over chunk ``segs`` under ``schedule``.
+
+    ``encode(seg)`` -> wire buffer, ``transfer(wire)`` -> peer-ordered
+    arrival stack (the P-1 ppermute ring steps), ``decode(stack)`` ->
+    output chunk.  Returns the decoded chunks in input order.  The stage
+    callables must be pure and per-chunk independent (no chunk's stage
+    may read another chunk's buffers) — the schedules reorder emission
+    freely under exactly that contract, which is what keeps
+    ``pipelined`` and ``serial`` bit-identical.
+    """
+    validate_schedule(schedule)
+    if not segs:
+        return []
+    if schedule == SERIAL or len(segs) == 1:
+        # one chunk has nothing to pipeline with; skip the fence noise
+        return _serial(segs, encode, transfer, decode)
+    return _pipelined(segs, encode, transfer, decode)

@@ -28,16 +28,22 @@ Codec args (all optional; normalized output only emits non-defaults):
               dual|folded, ash|hadamard|notransform, blockscale|tensorscale,
               auto|jnp|pallas|pallas_interpret, cd<dtype> (compute dtype),
               tau<float>, eps<float>, seps<float> (scale floor), disabled,
-              chunks=<N>
-    sdp4bit   b<N> (block), norot, chunks=<N>
-    tahquant  g<N> (group), chunks=<N>
-    int8      g<N> (group), chunks=<N>
+              chunks=<N>, schedule=pipelined|serial
+    sdp4bit   b<N> (block), norot, chunks=<N>, schedule=pipelined|serial
+    tahquant  g<N> (group), chunks=<N>, schedule=pipelined|serial
+    int8      g<N> (group), chunks=<N>, schedule=pipelined|serial
     none      no args ("identity" is a whole-spec alias, not a codec name)
 
 ``chunks=N`` (N >= 1) selects the chunked ring-overlap transport for the
 codec's all-gather / reduce-scatter hops (N double-buffered wire slices;
 see ``repro.core.collectives``).  It is only valid for codecs that
 publish a wire layout — ``none:chunks=4`` raises :class:`CommSpecError`.
+``schedule=`` picks the ring's stage emission order
+(``repro.core.overlap``): ``pipelined`` (default) is the barrier-fenced
+software-pipelined tick schedule whose encode/transfer/decode stages
+interleave across chunks, ``serial`` the hoisted all-encodes-first
+baseline kept for parity testing.  Both are bit-identical; the token is
+a no-op at ``chunks=1``.
 
 Examples::
 
@@ -52,6 +58,7 @@ from typing import Callable, Protocol, runtime_checkable
 
 from repro.core.codecs import (IdentityCodec, Int8Codec, Sdp4BitCodec,
                                TacoCodec, TahQuantCodec)
+from repro.core.overlap import PIPELINED, SCHEDULES
 from repro.core.parallel import PATHS, CommPlan
 from repro.core.taco import TacoConfig
 
@@ -139,6 +146,8 @@ def register_codec(name: str, cls: type, parse: Callable,
 
 
 def get_codec(name: str) -> CodecEntry:
+    """Look up a registered codec's :class:`CodecEntry` by name
+    (``CommSpecError`` naming the registered set when unknown)."""
     try:
         return _CODECS[name]
     except KeyError:
@@ -147,6 +156,8 @@ def get_codec(name: str) -> CodecEntry:
 
 
 def list_codecs() -> list[str]:
+    """Sorted names of every registered codec (the valid ``codec`` heads
+    of the spec grammar)."""
     return sorted(_CODECS)
 
 
@@ -156,11 +167,18 @@ def register_alias(name: str, spec: str) -> None:
 
 
 def list_aliases() -> dict[str, str]:
+    """Copy of the whole-spec alias table (alias -> spec it expands to)."""
     return dict(_ALIASES)
 
 
 def codec_from_spec(spec: str):
-    """``"taco:e4m3:b256"`` -> codec instance."""
+    """``"taco:e4m3:b256"`` -> codec instance.
+
+    Parses one colon-separated codec spec through the registered parser,
+    wrapping any parse failure as :class:`CommSpecError`, and enforces
+    the transport-level invariant that ``chunks=N > 1`` is only legal on
+    codecs publishing a wire layout (the chunked ring slices the packed
+    wire buffer — there is nothing to slice on raw-tensor codecs)."""
     parts = spec.strip().split(":")
     name, args = parts[0], tuple(parts[1:])
     entry = get_codec(name)
@@ -234,6 +252,15 @@ def _chunks_val(tok):
     return n
 
 
+def _schedule_val(tok):
+    """``schedule=<name>`` codec arg -> validated ring-schedule name."""
+    val = tok[len("schedule="):]
+    if val not in SCHEDULES:
+        raise CommSpecError(
+            f"arg {tok!r}: schedule must be one of {'/'.join(SCHEDULES)}")
+    return val
+
+
 def _parse_taco(args):
     kw = {}
     codec_kw = {}
@@ -247,6 +274,8 @@ def _parse_taco(args):
     for tok in args:
         if tok.startswith("chunks="):
             put("chunks", _chunks_val(tok), tok, into=codec_kw)
+        elif tok.startswith("schedule="):
+            put("schedule", _schedule_val(tok), tok, into=codec_kw)
         elif tok in _TACO_FMT:
             put("fmt", tok, tok)
         elif tok in _TACO_META:
@@ -308,6 +337,8 @@ def _unparse_taco(codec):
         out.append(f"seps{cfg.scale_eps!r}")
     if codec.chunks != 1:
         out.append(f"chunks={codec.chunks}")
+    if codec.schedule != PIPELINED:
+        out.append(f"schedule={codec.schedule}")
     return tuple(out)
 
 
@@ -316,6 +347,8 @@ def _parse_sdp4bit(args):
     for tok in args:
         if tok.startswith("chunks="):
             kw["chunks"] = _chunks_val(tok)
+        elif tok.startswith("schedule="):
+            kw["schedule"] = _schedule_val(tok)
         elif tok.startswith("b") and tok[1:].isdigit():
             kw["block"] = _pos_int(tok, "b")
         elif tok == "norot":
@@ -333,6 +366,8 @@ def _unparse_sdp4bit(codec):
         out.append("norot")
     if codec.chunks != 1:
         out.append(f"chunks={codec.chunks}")
+    if codec.schedule != PIPELINED:
+        out.append(f"schedule={codec.schedule}")
     return tuple(out)
 
 
@@ -342,6 +377,8 @@ def _make_group_codec(cls, name):
         for tok in args:
             if tok.startswith("chunks="):
                 kw["chunks"] = _chunks_val(tok)
+            elif tok.startswith("schedule="):
+                kw["schedule"] = _schedule_val(tok)
             elif tok.startswith("g") and tok[1:].isdigit():
                 kw["group"] = _pos_int(tok, "g")
             else:
@@ -354,6 +391,8 @@ def _make_group_codec(cls, name):
             out.append(f"g{codec.group}")
         if codec.chunks != 1:
             out.append(f"chunks={codec.chunks}")
+        if codec.schedule != PIPELINED:
+            out.append(f"schedule={codec.schedule}")
         return tuple(out)
 
     return parse, unparse

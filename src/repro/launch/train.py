@@ -36,7 +36,9 @@ def main():
                     help="compression plan spec or alias, e.g. "
                          "'tp=taco:folded:chunks=4,grad_rs=sdp4bit,"
                          "skip_first=2' — 'chunks=N' selects the chunked "
-                         "ring-overlap transport (see docs/COMPRESSION.md)")
+                         "ring-overlap transport, 'schedule=serial' its "
+                         "hoisted stage order for A/B runs (default "
+                         "pipelined; see docs/COMPRESSION.md)")
     ap.add_argument("--policy", default="taco",
                     help="deprecated alias for --comm-spec")
     ap.add_argument("--lr", type=float, default=3e-4)

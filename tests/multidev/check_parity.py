@@ -3,7 +3,7 @@
 Run in a subprocess with XLA_FLAGS=--xla_force_host_platform_device_count=8
 (see tests/test_overlap.py). Exits nonzero on any failure.
 
-Three contracts, for EVERY registered compressing codec (taco dual/folded,
+Four contracts, for EVERY registered compressing codec (taco dual/folded,
 sdp4bit, tahquant, int8):
 
   1. packed single-buffer transport is BIT-IDENTICAL to the multi-buffer
@@ -11,11 +11,19 @@ sdp4bit, tahquant, int8):
   2. chunked ring transport (chunks=N) is BIT-IDENTICAL to the monolithic
      single-collective transport (contributions are compressed once; peer
      sums run at the destination in peer-index order) — including ragged
-     trailing sizes that force different internal padding;
+     trailing sizes that force different internal padding, and under BOTH
+     ring stage schedules (schedule=pipelined / schedule=serial);
   3. lowered HLO: every packed compressed hop issues exactly ONE lax
      collective (all-gather / all-to-all / collective-permute), the
      multi-buffer layout issues one per wire component, and the ring
-     issues exactly chunks*(P-1) collective-permutes.
+     issues exactly chunks*(P-1) collective-permutes under either
+     schedule;
+  4. lowered HLO structure of the ring schedules: the pipelined schedule
+     provably interleaves encode ops between the ppermute ring steps and
+     fences its ticks with optimization_barriers, the serial schedule
+     hoists every encode above the first ppermute with no fences, and the
+     ring reduce-scatter's hoisted per-peer send gather leaves ZERO
+     dynamic-slices of the wire matrix in the step loop.
 """
 import dataclasses
 import os
@@ -29,7 +37,7 @@ import jax.numpy as jnp
 import numpy as np
 from jax.sharding import PartitionSpec as P
 
-from repro.compat import shard_map
+from repro.compat import HAS_OPTIMIZATION_BARRIER, shard_map
 from repro.core import collectives as cc
 from repro.core.codecs import (IdentityCodec, Int8Codec, Sdp4BitCodec,
                                TacoCodec, TahQuantCodec)
@@ -77,13 +85,23 @@ def check_counts(name, counter, want):
         FAILURES.append(name)
 
 
+def check_true(name, ok, detail):
+    print(f"{'PASS' if ok else 'FAIL'} {name}: {detail}")
+    if not ok:
+        FAILURES.append(name)
+
+
 def jit_sm(fn, in_spec, out_spec):
     return jax.jit(shard_map(fn, mesh=mesh, in_specs=in_spec,
                              out_specs=out_spec, check_vma=False))
 
 
+def lowered_text(fn, x, in_spec, out_spec):
+    return jit_sm(fn, in_spec, out_spec).lower(x).as_text()
+
+
 def collectives_of(fn, x, in_spec, out_spec):
-    txt = jit_sm(fn, in_spec, out_spec).lower(x).as_text()
+    txt = lowered_text(fn, x, in_spec, out_spec)
     return Counter(m.group(1) for m in _COLLECTIVE.finditer(txt))
 
 
@@ -103,6 +121,8 @@ PERM = tuple((i, (i + 1) % TP) for i in range(TP))
 
 for name, codec in CODECS.items():
     ring = dataclasses.replace(codec, chunks=CHUNKS)
+    ring_serial = dataclasses.replace(codec, chunks=CHUNKS,
+                                      schedule="serial")
 
     def ag(v, c=codec):
         return cc.all_gather_c(v, "model", 0, c, ID)
@@ -110,10 +130,16 @@ for name, codec in CODECS.items():
     def ag_ring(v, c=ring):
         return cc.all_gather_c(v, "model", 0, c, ID)
 
+    def ag_ring_serial(v, c=ring_serial):
+        return cc.all_gather_c(v, "model", 0, c, ID)
+
     def rs(v, c=codec):
         return cc.psum_scatter_c(v, "model", 0, c, ID)
 
     def rs_ring(v, c=ring):
+        return cc.psum_scatter_c(v, "model", 0, c, ID)
+
+    def rs_ring_serial(v, c=ring_serial):
         return cc.psum_scatter_c(v, "model", 0, c, ID)
 
     def ar(v, c=codec):
@@ -139,6 +165,8 @@ for name, codec in CODECS.items():
                     packed_ag, run(ag, x_ag, *ag_specs))
     check_equal(f"{name}/ag_ring_vs_monolithic",
                 packed_ag, run(ag_ring, x_ag, *ag_specs))
+    check_equal(f"{name}/ag_ring_serial_schedule_vs_monolithic",
+                packed_ag, run(ag_ring_serial, x_ag, *ag_specs))
     check_equal(f"{name}/ag_ring_vs_monolithic_ragged",
                 run(ag, x_ragged, *ag_specs),
                 run(ag_ring, x_ragged, *ag_specs))
@@ -149,6 +177,8 @@ for name, codec in CODECS.items():
                     packed_rs, run(rs, x_rs, *rs_specs))
     check_equal(f"{name}/rs_ring_vs_monolithic",
                 packed_rs, run(rs_ring, x_rs, *rs_specs))
+    check_equal(f"{name}/rs_ring_serial_schedule_vs_monolithic",
+                packed_rs, run(rs_ring_serial, x_rs, *rs_specs))
     check_equal(f"{name}/rs_ring_vs_monolithic_ragged",
                 run(rs, x_ragged, *rs_specs),
                 run(rs_ring, x_ragged, *rs_specs))
@@ -168,6 +198,8 @@ for name, codec in CODECS.items():
 # ------------------------------------------------- gradients through rings
 TACO = CODECS["taco"]
 TACO_RING = dataclasses.replace(TACO, chunks=CHUNKS)
+TACO_RING_SERIAL = dataclasses.replace(TACO, chunks=CHUNKS,
+                                       schedule="serial")
 w = jnp.asarray(rng.normal(0, 0.1, (512, 64)).astype(np.float32))
 
 
@@ -179,7 +211,10 @@ def grad_of(codec):
                P(("data", "model")), P(("data", "model")))
 
 
-check_equal("grad/ag_ring_vs_monolithic", grad_of(TACO), grad_of(TACO_RING))
+grad_mono = grad_of(TACO)
+check_equal("grad/ag_ring_vs_monolithic", grad_mono, grad_of(TACO_RING))
+check_equal("grad/ag_ring_serial_schedule_vs_monolithic",
+            grad_mono, grad_of(TACO_RING_SERIAL))
 
 # --------------------------------------------------------- HLO inspection
 # taco dual metadata has THREE wire components — the strongest fusion case
@@ -217,11 +252,76 @@ check_counts("hlo/ag_ring_chunked_permutes",
                  lambda v: cc.all_gather_c(v, "model", 0, TACO_RING, ID),
                  x_ag, *ag_specs),
              {"collective_permute": CHUNKS * (TP - 1)})
+check_counts("hlo/ag_ring_serial_schedule_chunked_permutes",
+             collectives_of(
+                 lambda v: cc.all_gather_c(v, "model", 0, TACO_RING_SERIAL,
+                                           ID),
+                 x_ag, *ag_specs),
+             {"collective_permute": CHUNKS * (TP - 1)})
 check_counts("hlo/rs_ring_chunked_permutes",
              collectives_of(
                  lambda v: cc.psum_scatter_c(v, "model", 0, TACO_RING, ID),
                  x_rs, *rs_specs),
              {"collective_permute": CHUNKS * (TP - 1)})
+
+# ------------------------------------- HLO structure of the ring schedules
+# Lowered StableHLO preserves emission order, so textual positions show
+# which stage ordering was emitted; the optimization_barrier fences are
+# what then FORBID the compiler from re-serializing it.  Encode marker:
+# every taco encode computes per-block amax scales -> stablehlo.reduce
+# (the AG decode path has none, so reduces between ppermutes can only
+# come from interleaved encodes).
+
+
+def _positions(txt, token):
+    return [m.start() for m in re.finditer(re.escape(token), txt)]
+
+
+def _between(positions, lo, hi):
+    return sum(1 for pos in positions if lo < pos < hi)
+
+
+txt_pipe = lowered_text(
+    lambda v: cc.all_gather_c(v, "model", 0, TACO_RING, ID), x_ag, *ag_specs)
+txt_ser = lowered_text(
+    lambda v: cc.all_gather_c(v, "model", 0, TACO_RING_SERIAL, ID),
+    x_ag, *ag_specs)
+for sched, txt in (("pipelined", txt_pipe), ("serial", txt_ser)):
+    perm = _positions(txt, "stablehlo.collective_permute")
+    bar = _positions(txt, "stablehlo.optimization_barrier")
+    enc = _positions(txt, "stablehlo.reduce")
+    enc_mid = _between(enc, perm[0], perm[-1])
+    bar_mid = _between(bar, perm[0], perm[-1])
+    if sched == "pipelined":
+        # at least the steady-state encodes (chunks 2..N-1) land between
+        # ring steps, every tick is fenced, and fences sit between steps
+        # (on builds without lax.optimization_barrier the compat fence is
+        # the identity: interleaved emission order still holds, barriers
+        # are absent by design)
+        want_bar = CHUNKS + 2 if HAS_OPTIMIZATION_BARRIER else 0
+        check_true("hlo/ag_ring_pipelined_interleaves_encodes",
+                   enc_mid >= CHUNKS - 2 and len(bar) == want_bar
+                   and (bar_mid >= 1 or not HAS_OPTIMIZATION_BARRIER),
+                   f"encodes_between_permutes={enc_mid} "
+                   f"barriers={len(bar)} (want {want_bar}) "
+                   f"barriers_between_permutes={bar_mid}")
+    else:
+        check_true("hlo/ag_ring_serial_hoists_encodes",
+                   enc_mid == 0 and not bar,
+                   f"encodes_between_permutes={enc_mid} (want 0) "
+                   f"barriers={len(bar)} (want 0)")
+
+# the ring reduce-scatter gathers its per-peer sends ONCE per chunk
+# before the step loop (static row slices inside it): zero dynamic-slices
+# of the wire matrix re-materialized per step, under either schedule
+for sched, codec in (("pipelined", TACO_RING), ("serial",
+                                                TACO_RING_SERIAL)):
+    txt = lowered_text(
+        lambda v: cc.psum_scatter_c(v, "model", 0, codec, ID),
+        x_rs, *rs_specs)
+    n_dyn = len(_positions(txt, "stablehlo.dynamic_slice"))
+    check_true(f"hlo/rs_ring_{sched}_hoisted_sends_no_dynamic_slice",
+               n_dyn == 0, f"dynamic_slices={n_dyn} (want 0)")
 # multibuffer_wire() restores the FULL pre-packing engine: chunked codecs
 # fall back to the monolithic multi-buffer transport, no ring permutes
 with cc.multibuffer_wire():

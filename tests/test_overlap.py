@@ -20,8 +20,9 @@ import numpy as np
 import pytest
 from jax.sharding import PartitionSpec as P
 
-from repro.compat import shard_map
+from repro.compat import HAS_OPTIMIZATION_BARRIER, shard_map
 from repro.core import collectives as cc
+from repro.core import overlap
 from repro.core.codecs import IdentityCodec, TacoCodec
 from repro.core.registry import (CommSpecError, codec_from_spec, from_spec,
                                  to_spec)
@@ -168,6 +169,39 @@ def test_bad_chunks_specs_rejected(bad):
         from_spec(bad)
 
 
+@pytest.mark.parametrize("spec", [
+    "tp=taco:chunks=4:schedule=serial",
+    "tp=taco:schedule=serial",                  # no-op at chunks=1, kept
+    "grad_rs=sdp4bit:chunks=2:schedule=serial",
+    "pp=tahquant:schedule=serial",
+    "weight_ag=int8:g64:chunks=2:schedule=serial",
+])
+def test_schedule_spec_roundtrip(spec):
+    plan = from_spec(spec)
+    assert to_spec(plan) == spec
+    assert from_spec(to_spec(plan)) == plan
+
+
+def test_schedule_pipelined_is_the_default_and_not_emitted():
+    assert to_spec(from_spec("tp=taco:chunks=4:schedule=pipelined")) == \
+        "tp=taco:chunks=4"
+    assert from_spec("tp=taco:chunks=4:schedule=pipelined") == \
+        from_spec("tp=taco:chunks=4")
+
+
+@pytest.mark.parametrize("bad", [
+    "tp=taco:schedule=async",
+    "tp=taco:schedule=",
+    "tp=taco:schedule=Serial",
+    "tp=none:schedule=serial",           # identity takes no args
+    "grad_rs=sdp4bit:schedule=eager",
+    "pp=tahquant:schedule=2",
+])
+def test_bad_schedule_specs_rejected(bad):
+    with pytest.raises(CommSpecError):
+        from_spec(bad)
+
+
 def test_chunks_threads_through_plan_telemetry():
     plan = from_spec("tp=taco:chunks=4,grad_rs=sdp4bit:chunks=2")
     assert plan.wire_chunks() == {"tp_fwd": 4, "tp_bwd": 4, "grad_rs": 2,
@@ -181,22 +215,134 @@ def test_chunks_threads_through_plan_telemetry():
 # --------------------------------------------------------------------------
 
 def _three_path_parity(x, chunks=4):
-    """Monolithic packed, chunked ring, and multi-buffer transports must
-    agree bit-for-bit on ``x`` for both AG and RS."""
+    """Monolithic packed, chunked ring (BOTH stage schedules), and
+    multi-buffer transports must agree bit-for-bit on ``x`` for both AG
+    and RS."""
     ring = codec_from_spec(f"taco:jnp:chunks={chunks}")
+    serial = codec_from_spec(f"taco:jnp:chunks={chunks}:schedule=serial")
     for make in [lambda c: (lambda v: cc.all_gather_c(v, "model", 0, c, ID)),
                  lambda c: (lambda v: cc.psum_scatter_c(v, "model", 0, c, ID))]:
         packed = run1(make(TACO), x)
         with cc.multibuffer_wire():
             multi = run1(make(TACO), x)
         chunked = run1(make(ring), x)
+        chunked_serial = run1(make(serial), x)
         np.testing.assert_array_equal(np.asarray(packed), np.asarray(multi))
         np.testing.assert_array_equal(np.asarray(packed), np.asarray(chunked))
+        np.testing.assert_array_equal(np.asarray(packed),
+                                      np.asarray(chunked_serial))
 
 
 def test_single_device_packed_and_ring_parity(rng):
     _three_path_parity(jnp.asarray(
         rng.normal(0, 0.02, (8, 500)).astype(np.float32)))
+
+
+# --------------------------------------------------------------------------
+# the software-pipelined ring scheduler (repro.core.overlap)
+# --------------------------------------------------------------------------
+
+def _logged_stages(log):
+    """Stub encode/transfer/decode that record (stage, chunk) call order.
+
+    encode maps chunk value c -> 10c, transfer -> 10c+1, so each stage
+    can recover which chunk it was handed even after the buffers cross
+    the scheduler's optimization-barrier fences."""
+    def enc(s):
+        log.append(("E", int(s)))
+        return s * 10
+    def tx(w):
+        log.append(("T", int(w) // 10))
+        return w + 1
+    def dec(a):
+        log.append(("D", (int(a) - 1) // 10))
+        return a
+    return enc, tx, dec
+
+
+def test_run_ring_pipelined_emits_the_stage_tick_schedule():
+    """Pipelined emission order is exactly the double-buffered
+    (encode[t], transfer[t-1], decode[t-2]) tick schedule with prologue
+    and epilogue, and outputs come back in chunk (FIFO) order."""
+    log = []
+    enc, tx, dec = _logged_stages(log)
+    segs = [jnp.float32(c) for c in range(4)]
+    outs = overlap.run_ring(segs, encode=enc, transfer=tx, decode=dec,
+                            schedule=overlap.PIPELINED)
+    assert [int(o) for o in outs] == [1, 11, 21, 31]
+    assert log == [
+        ("E", 0),                        # tick 0: prologue
+        ("E", 1), ("T", 0),              # tick 1: prologue
+        ("E", 2), ("T", 1), ("D", 0),    # tick 2: steady state
+        ("E", 3), ("T", 2), ("D", 1),    # tick 3: steady state
+        ("T", 3), ("D", 2),              # tick 4: epilogue
+        ("D", 3),                        # tick 5: epilogue
+    ]
+
+
+def test_run_ring_serial_hoists_stages():
+    """Serial emission is the hoisted baseline: all encodes, then all
+    transfers, then all decodes."""
+    log = []
+    enc, tx, dec = _logged_stages(log)
+    segs = [jnp.float32(c) for c in range(3)]
+    outs = overlap.run_ring(segs, encode=enc, transfer=tx, decode=dec,
+                            schedule=overlap.SERIAL)
+    assert [int(o) for o in outs] == [1, 11, 21]
+    assert log == [("E", 0), ("E", 1), ("E", 2),
+                   ("T", 0), ("T", 1), ("T", 2),
+                   ("D", 0), ("D", 1), ("D", 2)]
+
+
+def test_run_ring_single_chunk_degenerates_to_serial():
+    """One chunk has nothing to pipeline with — no fence noise."""
+    log = []
+    enc, tx, dec = _logged_stages(log)
+    outs = overlap.run_ring([jnp.float32(0)], encode=enc, transfer=tx,
+                            decode=dec, schedule=overlap.PIPELINED)
+    assert [int(o) for o in outs] == [1]
+    assert log == [("E", 0), ("T", 0), ("D", 0)]
+
+
+def test_run_ring_empty_and_bad_schedule():
+    assert overlap.run_ring([], encode=None, transfer=None, decode=None) == []
+    with pytest.raises(ValueError, match="unknown ring schedule"):
+        overlap.run_ring([jnp.float32(0)], encode=None, transfer=None,
+                         decode=None, schedule="eager")
+
+
+def test_ring_schedule_reads_the_codec_knob():
+    import dataclasses
+    assert overlap.ring_schedule(TACO) == overlap.PIPELINED
+    assert overlap.ring_schedule(
+        dataclasses.replace(TACO, schedule="serial")) == overlap.SERIAL
+    assert overlap.ring_schedule(ID) == overlap.PIPELINED  # no knob: default
+    with pytest.raises(ValueError, match="unknown ring schedule"):
+        overlap.ring_schedule(dataclasses.replace(TACO, schedule="bogus"))
+
+
+@pytest.mark.skipif(
+    not HAS_OPTIMIZATION_BARRIER,
+    reason="no lax.optimization_barrier: compat fence is the identity")
+def test_hlo_pipelined_ring_fences_serial_ring_does_not(rng):
+    """The pipelined schedule emits one optimization_barrier per tick
+    (chunks + 2 of them); the serial schedule emits none.  (The encode/
+    ppermute interleave itself needs P > 1 and is asserted on the
+    8-device mesh in tests/multidev/check_parity.py.)"""
+    x = jnp.asarray(rng.normal(0, 0.02, (8, 512)).astype(np.float32))
+    mesh = one_dev_mesh()
+
+    def lowered(codec):
+        return jax.jit(shard_map(
+            lambda v: cc.all_gather_c(v, "model", 0, codec, ID),
+            mesh=mesh, in_specs=P(), out_specs=P(),
+            check_vma=False)).lower(x).as_text()
+
+    chunks = 4
+    pipe = codec_from_spec(f"taco:jnp:chunks={chunks}")
+    ser = codec_from_spec(f"taco:jnp:chunks={chunks}:schedule=serial")
+    assert lowered(pipe).count("stablehlo.optimization_barrier") == chunks + 2
+    assert lowered(ser).count("stablehlo.optimization_barrier") == 0
 
 
 # --------------------------------------------------------------------------
