@@ -6,6 +6,16 @@ paper's GPT models at TP in {2,4,8,16} under each compression scheme
 the HLO-parsed collective bytes of the dry-run for the assigned archs),
 and converts the saving into the roofline collective-term reduction. The
 paper's measured end-to-end speedups are quoted alongside for reference.
+
+A second row family, ``comm_volume/achieved/...``, measures the
+DATA-DEPENDENT compression of the hybrid lossless stacks (``taco+zle``;
+repro.core.lossless) on near-zero-payload workloads: batches whose
+trailing token rows are exact zeros, as sequence padding produces.  Each
+row reports the static slot ratio (what the lax collective moves — the
+bound), the achieved ratio (length-header bytes — what a ragged-aware
+fabric would move), and the order-0 byte entropy of the shipped wire
+(the remaining headroom an entropy-coder tier could claim).  These rows
+are gated by scripts/check_bench_regression.py like any other.
 """
 from __future__ import annotations
 
@@ -35,6 +45,47 @@ def tp_bytes_per_step(cfg, tp: int, seq: int, batch_local: int, codec):
     return cfg.n_layers * per_layer + io
 
 
+def achieved_rows(quick=False):
+    """Emit achieved-vs-slot ratio rows for the hybrid taco+zle stack on
+    padded-batch workloads (pad<pct> = that percentage of token rows
+    exactly zero).  Deterministic data (fixed seed) and a quick-agnostic
+    workload size, so the ratio values are bit-stable across --quick and
+    full runs and scripts/check_bench_regression.py can gate them
+    exactly; achieved bytes come from the wire length headers via
+    ``collectives.achieved_slot_bytes``."""
+    import jax.numpy as jnp
+
+    from repro.core import collectives as cc
+    from repro.core.lossless import byte_entropy_bits
+
+    del quick              # cheap either way; keep rows gate-comparable
+    rows = 128
+    d_model = 1024                      # multiple of the 256-elem block
+    rng = np.random.default_rng(0)
+    base = rng.standard_normal((rows, d_model)).astype(np.float32)
+    specs = {
+        "taco_zle": "taco+zle:jnp",
+        "taco_zle_folded": "taco+zle:jnp:folded",
+    }
+    for pct in (0, 50, 94):
+        x = base.copy()
+        k = rows * pct // 100
+        if k:
+            x[rows - k:] = 0.0          # trailing padding tokens
+        flat = jnp.asarray(x, jnp.bfloat16).reshape(1, -1)
+        raw = flat.size * 2             # bf16 bytes
+        for name, spec in specs.items():
+            codec = codec_from_spec(spec)
+            slot = cc.wire_slot_bytes(codec, flat.shape[-1])
+            ach = float(np.asarray(
+                cc.achieved_slot_bytes(codec, flat))[0])
+            ent = float(byte_entropy_bits(codec.encode_wire(flat)))
+            emit(f"comm_volume/achieved/pad{pct}/{name}", None,
+                 f"slot_ratio={raw / slot:.2f}x;"
+                 f"achieved_ratio={raw / ach:.2f}x;"
+                 f"entropy_bits_per_byte={ent:.2f}")
+
+
 def run(out_dir="results/bench", quick=False):
     codecs = {
         "baseline_bf16": codec_from_spec("none"),
@@ -60,3 +111,4 @@ def run(out_dir="results/bench", quick=False):
                 emit(f"comm_volume/{arch}/tp{tp}/{name}", None,
                      f"wire_GB_per_step={by/1e9:.2f};vs_bf16={ratio:.2f}x;"
                      f"ici_ms={ici_ms:.1f}{extra}")
+    achieved_rows(quick=quick)

@@ -5,7 +5,9 @@
   fusion         Fig 16 (fused vs unfused operator; rotated-domain reduce)
   overlap        single-buffer vs multi-buffer wire packing + chunked ring
                  vs monolithic transport (8-device CPU subprocess)
-  comm_volume    Fig 15 / §5.4 (TP wire bytes per step vs TP degree)
+  comm_volume    Fig 15 / §5.4 (TP wire bytes per step vs TP degree) +
+                 achieved-vs-slot ratios of the hybrid taco+zle stack on
+                 near-zero-payload (padded-batch) workloads
   roofline_table deliverable (g) presentation from dry-run artifacts
   threed         Table 3 (3D-parallel throughput model; needs PP results)
 

@@ -1,17 +1,25 @@
-"""Lowered-HLO collective-count regression gate.
+"""Structural benchmark regression gate.
 
 Compares a fresh ``benchmarks.run --json`` output against the committed
-``BENCH_collectives.json`` baseline: every row whose ``derived`` column
-records a ``collectives=N`` count (the fusion/overlap transport tables)
-must lower to AT MOST as many lax collectives as the baseline recorded.
-A count regression means a transport change silently split a fused wire
-buffer back into multiple collectives — exactly the class of bug the
-single-buffer engine's HLO-count tests exist to catch, enforced here at
-the benchmark level too (scripts/ci.sh runs this after the quick
-fusion+overlap re-run).
+``BENCH_collectives.json`` baseline on three structural axes:
 
-Timings are NOT compared (CI machines are noisy); only the structural
-collective counts gate.
+  1. COLLECTIVE COUNTS — every row whose ``derived`` column records a
+     ``collectives=N`` count (the fusion/overlap transport tables) must
+     lower to AT MOST as many lax collectives as the baseline recorded.
+     A count regression means a transport change silently split a fused
+     wire buffer back into multiple collectives.
+  2. ROW PRESENCE — EVERY baseline row whose table (the first ``/``
+     segment of its name) was re-run must reappear in the fresh output,
+     not just the ``collectives=`` ones.  A silently dropped row used to
+     pass the gate; now it fails it.  Tables absent from the fresh run
+     (a narrower ``--only``) are not charged as missing.
+  3. ACHIEVED RATIOS — rows carrying an ``achieved_ratio=<X>x`` value
+     (the data-dependent compression of the hybrid lossless stacks,
+     ``comm_volume/achieved/...``) must stay within 2% of the baseline:
+     those workloads are deterministic, so a drop means the codec got
+     structurally worse at harvesting zeros.
+
+Timings are NOT compared (CI machines are noisy); only structure gates.
 
 Usage: python scripts/check_bench_regression.py NEW.json [BASELINE.json]
 """
@@ -23,15 +31,32 @@ import sys
 from pathlib import Path
 
 _COUNT = re.compile(r"(?:^|;)collectives=(\d+)(?:;|$)")
+_RATIO = re.compile(r"(?:^|;)achieved_ratio=([0-9.]+)x(?:;|$)")
+
+RATIO_TOLERANCE = 0.98   # new achieved_ratio must be >= 98% of baseline
+
+
+def _rows(payload: dict) -> dict:
+    """name -> derived string for every emitted row."""
+    return {row["name"]: row.get("derived") or ""
+            for row in payload.get("rows", [])}
+
+
+def _extract(rows: dict, pattern: re.Pattern, cast) -> dict:
+    out = {}
+    for name, derived in rows.items():
+        m = pattern.search(derived)
+        if m:
+            out[name] = cast(m.group(1))
+    return out
 
 
 def collective_counts(payload: dict) -> dict:
-    out = {}
-    for row in payload.get("rows", []):
-        m = _COUNT.search(row.get("derived") or "")
-        if m:
-            out[row["name"]] = int(m.group(1))
-    return out
+    return _extract(_rows(payload), _COUNT, int)
+
+
+def achieved_ratios(payload: dict) -> dict:
+    return _extract(_rows(payload), _RATIO, float)
 
 
 def main(argv: list[str]) -> int:
@@ -41,8 +66,10 @@ def main(argv: list[str]) -> int:
     new_path = Path(argv[1])
     base_path = Path(argv[2]) if len(argv) == 3 else \
         Path(__file__).resolve().parents[1] / "BENCH_collectives.json"
-    new = collective_counts(json.loads(new_path.read_text()))
-    base = collective_counts(json.loads(base_path.read_text()))
+    new_rows = _rows(json.loads(new_path.read_text()))
+    base_rows = _rows(json.loads(base_path.read_text()))
+    new = _extract(new_rows, _COUNT, int)
+    base = _extract(base_rows, _COUNT, int)
     if not new:
         print(f"FAIL: {new_path} has no collectives= rows (benchmark "
               "broke or emitted nothing)")
@@ -53,18 +80,23 @@ def main(argv: list[str]) -> int:
         if want is not None and count > want:
             regressions.append(f"  {name}: {want} -> {count}")
     checked = sum(1 for n in new if n in base)
-    missing = sorted(set(base) - set(new))
     if checked == 0:
         # zero overlap means the row names were renamed without updating
         # the committed baseline — the gate would pass vacuously forever
         print(f"FAIL: no row of {new_path} matches a {base_path.name} "
               "baseline row; regenerate the baseline "
-              "(python -m benchmarks.run --only fusion,overlap --json)")
+              "(python -m benchmarks.run "
+              "--only fusion,overlap,comm_volume --json)")
         return 1
+    # row-presence gate over ALL rows of every re-run table: a baseline
+    # row disappearing — with or without a collectives= count — is a
+    # coverage loss, either intentional (regenerate the baseline) or a
+    # benchmark silently losing a measured path
+    new_tables = {name.split("/", 1)[0] for name in new_rows}
+    missing = sorted(name for name in base_rows
+                     if name.split("/", 1)[0] in new_tables
+                     and name not in new_rows)
     if missing:
-        # a baseline-pinned transport path stopped being measured: either
-        # the path was removed on purpose (regenerate the baseline) or
-        # the benchmark silently lost coverage
         print(f"FAIL: {base_path.name} baseline rows absent from "
               f"{new_path}:")
         print("\n".join(f"  {name}" for name in missing))
@@ -74,8 +106,23 @@ def main(argv: list[str]) -> int:
               f"{base_path.name}:")
         print("\n".join(regressions))
         return 1
+    new_ratio = _extract(new_rows, _RATIO, float)
+    base_ratio = _extract(base_rows, _RATIO, float)
+    ratio_regr = []
+    for name, ratio in sorted(new_ratio.items()):
+        want = base_ratio.get(name)
+        if want is not None and ratio < want * RATIO_TOLERANCE:
+            ratio_regr.append(f"  {name}: {want}x -> {ratio}x")
+    if ratio_regr:
+        print("FAIL: achieved compression ratio regressed vs "
+              f"{base_path.name}:")
+        print("\n".join(ratio_regr))
+        return 1
+    gated_ratios = sum(1 for n in new_ratio if n in base_ratio)
     print(f"PASS: {checked} collective-count rows at or below the "
-          f"{base_path.name} baseline ({len(new) - checked} new rows)")
+          f"{base_path.name} baseline, {gated_ratios} achieved-ratio "
+          f"rows within tolerance, no dropped rows "
+          f"({len(new_rows) - len(set(new_rows) & set(base_rows))} new)")
     return 0
 
 

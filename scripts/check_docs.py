@@ -19,7 +19,10 @@ checks over README.md, ROADMAP.md, and every docs/*.md:
      letters mark grammar placeholders like ``tp=X`` and are skipped),
      every ``--comm-spec "…"`` / ``--comm-spec <alias>`` occurrence,
      and every ``from_spec("…")`` literal — fenced code blocks
-     included for the latter two.
+     included for the latter two.  Bare codec-STACK spans
+     (``taco+zle:folded``: a ``+``-joined head whose base is a
+     registered codec name) validate through ``codec_from_spec``, so
+     the hybrid-stack examples in docs/COMPRESSION.md stay parseable.
 
 Exits nonzero listing every violation.  Run directly:
 
@@ -45,6 +48,11 @@ _SPEC_KEYS = ("tp", "tp_fwd", "tp_bwd", "grad_rs", "weight_ag", "pp",
               "skip_first", "skip_last", "warmup")
 _SPEC_SPAN = re.compile(
     r"^(?:%s)=[^\s`]+$" % "|".join(_SPEC_KEYS))
+# bare codec-stack spans (`taco+zle:folded:chunks=4`): a '+'-joined head
+# whose base is a registered codec name — validated through the codec
+# grammar; '+' spans with unregistered heads ("lossy+lossless" prose)
+# are left alone
+_STACK_SPAN = re.compile(r"^[a-z0-9_]+(?:\+[a-z0-9_]+)+(?::[^\s`]+)*$")
 _COMM_SPEC = re.compile(r"--comm-spec\s+(?:\"([^\"]+)\"|([^\s\"']+))")
 _FROM_SPEC = re.compile(r"from_spec\(\"([^\"]+)\"\)")
 
@@ -69,6 +77,8 @@ def check_links(path: Path, prose: str, errors: list[str]) -> None:
 def _path_candidate(span: str) -> bool:
     if not _PATHISH.fullmatch(span):
         return False
+    if span.startswith("/"):        # absolute = outside the repo tree
+        return False                # (environment paths; not ours to lint)
     return span.endswith(_SUFFIXES) or ("/" in span and span.endswith("/"))
 
 
@@ -82,12 +92,18 @@ def check_paths(path: Path, prose: str, errors: list[str]) -> None:
 
 
 def check_specs(path: Path, prose: str, raw: str, errors: list[str]) -> None:
-    from repro.core.registry import CommSpecError, from_spec
+    from repro.core.registry import (CommSpecError, codec_from_spec,
+                                     from_spec, list_codecs)
     specs = []
+    codec_specs = []
+    codec_names = set(list_codecs())
     for span in _SPAN.findall(prose):
         # uppercase = grammar placeholder (tp=X, skip_first=N), not a spec
         if _SPEC_SPAN.match(span) and span == span.lower():
             specs.append(span)
+        elif _STACK_SPAN.match(span) and \
+                span.split("+", 1)[0] in codec_names:
+            codec_specs.append(span)
     for quoted, bare in _COMM_SPEC.findall(raw):
         specs.append(quoted or bare)
     specs += _FROM_SPEC.findall(raw)
@@ -96,6 +112,12 @@ def check_specs(path: Path, prose: str, raw: str, errors: list[str]) -> None:
             from_spec(spec)
         except CommSpecError as e:
             errors.append(f"{path.name}: spec does not parse -> "
+                          f"{spec!r} ({e})")
+    for spec in codec_specs:
+        try:
+            codec_from_spec(spec)
+        except CommSpecError as e:
+            errors.append(f"{path.name}: codec stack does not parse -> "
                           f"{spec!r} ({e})")
 
 

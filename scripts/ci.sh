@@ -40,13 +40,17 @@ python scripts/check_docs.py
 
 # Collective-transport regression gate: re-run the fusion+overlap tables
 # (8-device subprocess: packed vs multi-buffer vs fused-wire vs chunked
-# ring) and fail if any lowered-HLO collective count regressed versus the
-# committed BENCH_collectives.json baseline.  Timings are recorded but
-# not gated (CI machines are noisy); the structural counts are exact.
+# ring) plus comm_volume's achieved-ratio rows (data-dependent hybrid
+# taco+zle compression on padded workloads), and fail if any lowered-HLO
+# collective count regressed, any baseline row disappeared, or any
+# achieved compression ratio dropped versus the committed
+# BENCH_collectives.json baseline.  Timings are recorded but not gated
+# (CI machines are noisy); counts, row presence, and the deterministic
+# achieved ratios are exact.
 BENCH_GATE_JSON="$(mktemp /tmp/bench_gate.XXXXXX.json)"
 trap 'rm -f "$BENCH_GATE_JSON"' EXIT
-python -m benchmarks.run --only fusion,overlap --json "$BENCH_GATE_JSON" \
-    --quick
+python -m benchmarks.run --only fusion,overlap,comm_volume \
+    --json "$BENCH_GATE_JSON" --quick
 python scripts/check_bench_regression.py "$BENCH_GATE_JSON"
 
 # pytest aborts before running anything and exits 2 on collection errors,

@@ -14,7 +14,7 @@ returns a tuple of arrays that the collective layer transports; ``decode``
 inverts; ``decode_sum`` reduces a stacked peer axis during ReduceScatter
 (fused, rotated-domain where applicable).
 
-Every compressing codec also publishes a static :class:`WireLayout` via
+Every compressing codec also publishes a :class:`WireLayout` via
 ``wire_layout(n)`` — the byte offsets/dtypes of its encoded components per
 slot — which lets the collective layer move all components as ONE
 contiguous uint8 wire buffer per hop (one lax collective instead of 2–3),
@@ -22,6 +22,14 @@ and a ``chunks`` knob selecting the chunked ring-overlap transport
 (``chunks=N`` double-buffered wire slices; see
 ``repro.core.collectives``).  ``IdentityCodec.wire_layout`` returns None:
 the baseline transports the raw tensor and has nothing to pack.
+
+Slots may be *bounded-but-ragged*: a layout with ``variable=True``
+(lossless/hybrid stacks, ``repro.core.lossless``) still moves a
+static-width buffer of ``total_bytes`` — the worst-case bound — but only
+a data-dependent prefix carries information, recorded in a uint32 length
+header at static byte offset 0 (:func:`achieved_wire_bytes` reads it
+back).  The fixed-width layouts of the lossy codecs below are the
+degenerate case where achieved == slot bytes.
 
 Chunked codecs additionally carry a ``schedule`` knob (spec token
 ``schedule=pipelined|serial``, default ``pipelined``) choosing how the
@@ -59,6 +67,7 @@ __all__ = [
     "IdentityCodec", "TacoCodec", "Sdp4BitCodec", "TahQuantCodec",
     "Int8Codec", "wire_bytes_per_element", "WireComponent", "WireLayout",
     "make_wire_layout", "pack_wire", "unpack_wire", "WireFastPath",
+    "achieved_wire_bytes",
 ]
 
 
@@ -88,10 +97,21 @@ class WireComponent:
 
 @dataclasses.dataclass(frozen=True)
 class WireLayout:
-    """Static per-slot wire format: components in ``encode`` output order,
-    densely packed (offset_i+1 == offset_i + nbytes_i)."""
+    """Per-slot wire format: components in ``encode`` output order,
+    densely packed (offset_i+1 == offset_i + nbytes_i).
+
+    ``total_bytes`` is always the STATIC slot width — the size of the
+    uint8 buffer the collective layer actually moves.  A layout with
+    ``variable=True`` declares a *bounded-but-ragged* slot: the buffer is
+    still ``total_bytes`` wide (lax collectives need static shapes and
+    the bound is what a real transport must reserve), but only a
+    data-dependent prefix of it carries information, and the slot's FIRST
+    component must be a one-element ``uint32`` length header at byte
+    offset 0 recording the achieved bytes.  :func:`achieved_wire_bytes`
+    reads it back; padding bytes past the achieved length are zero."""
 
     components: tuple
+    variable: bool = False
 
     @property
     def total_bytes(self) -> int:
@@ -100,16 +120,41 @@ class WireLayout:
         last = self.components[-1]
         return last.offset + last.nbytes
 
+    def __post_init__(self):
+        if self.variable:
+            c0 = self.components[0] if self.components else None
+            if c0 is None or c0.offset != 0 or c0.dtype != "uint32" \
+                    or c0.size != 1:
+                raise ValueError(
+                    "variable WireLayout requires a 1-element uint32 "
+                    "length header as its first component (offset 0)")
 
-def make_wire_layout(*comps) -> WireLayout:
+
+def make_wire_layout(*comps, variable: bool = False) -> WireLayout:
     """Build a dense :class:`WireLayout` from ``(name, dtype, size)``
-    triples, computing byte offsets."""
+    triples, computing byte offsets.  ``variable=True`` marks a
+    bounded-but-ragged slot (first component must then be the uint32
+    length header — see :class:`WireLayout`)."""
     out, off = [], 0
     for name, dtype, size in comps:
         c = WireComponent(name, np.dtype(dtype).name, int(size), off)
         out.append(c)
         off += c.nbytes
-    return WireLayout(tuple(out))
+    return WireLayout(tuple(out), variable=variable)
+
+
+def achieved_wire_bytes(wire, layout):
+    """Per-slot ACHIEVED (data-dependent) bytes of a packed wire buffer.
+
+    For a ``variable`` layout this reads the uint32 length header at byte
+    offset 0 of every slot; for a static layout every slot achieves its
+    full ``total_bytes`` (the two notions coincide — the degenerate
+    fixed-length case).  ``wire`` is ``(..., total_bytes)`` uint8 with any
+    number of leading slot/peer axes; returns a ``(...,)`` uint32 array."""
+    if not layout.variable:
+        return jnp.full(wire.shape[:-1], layout.total_bytes, jnp.uint32)
+    hdr = _from_bytes(wire[..., 0:4], "uint32", 1)
+    return hdr[..., 0]
 
 
 # --------------------------------------------------------------------------

@@ -34,6 +34,16 @@ bytes straight from the fused kernels — no concat-and-slice copies
 between compression and the collective.  ``multibuffer_wire()`` restores
 the per-component transport for parity tests and benchmarks.
 
+Bounded-but-ragged slots: hybrid stacks (``taco+zle`` — see
+``repro.core.lossless``) publish VARIABLE wire layouts, where the slot
+width is a static worst-case bound and a uint32 length header records
+the achieved (data-dependent) bytes.  The transport is agnostic — the
+lax collective moves the bound, still exactly one collective per hop —
+while the byte telemetry splits: ``wire_slot_bytes`` reports the bound
+the fabric carries today, ``achieved_slot_bytes`` (and the ``sample=``
+arg of the per-collective byte counters) the data-dependent payload a
+ragged-aware fabric would carry.
+
 Chunked ring overlap (Flash-Communication-style): codecs with
 ``chunks=N > 1`` route their all-gather / reduce-scatter through ring
 variants built from ``ppermute`` steps over N wire slices.  Chunk
@@ -61,6 +71,7 @@ stage, cf. MegaScale).
 from __future__ import annotations
 
 import contextlib
+import contextvars
 import functools
 
 import jax
@@ -69,7 +80,7 @@ import jax.numpy as jnp
 from repro.compat import axis_size
 from repro.core import overlap
 from repro.core.codecs import (IdentityCodec,  # noqa: F401 — re-exported
-                               pack_wire, unpack_wire)
+                               achieved_wire_bytes, pack_wire, unpack_wire)
 
 Identity = IdentityCodec()
 
@@ -91,7 +102,8 @@ def _pad_to(x, mult):
 # single-buffer wire packing
 # --------------------------------------------------------------------------
 
-_WIRE_PACKING = True
+_WIRE_PACKING: contextvars.ContextVar[bool] = contextvars.ContextVar(
+    "repro_wire_packing", default=True)
 
 
 @contextlib.contextmanager
@@ -101,13 +113,18 @@ def multibuffer_wire():
     back to the monolithic transport (the ring exists to slice the packed
     buffer).  Affects TRACING: only use around fresh jit/lower calls
     (parity tests and benchmarks) — already-compiled functions keep
-    whatever layout they were traced with."""
-    global _WIRE_PACKING
-    prev, _WIRE_PACKING = _WIRE_PACKING, False
+    whatever layout they were traced with.
+
+    The toggle is a :mod:`contextvars` value, not a module global: nested
+    uses restore the exact enclosing state on exit (token-based reset),
+    and concurrent contexts — threaded test runners, async drivers —
+    each see their own value, so one test's multibuffer window can never
+    leak transport mode into another."""
+    token = _WIRE_PACKING.set(False)
     try:
         yield
     finally:
-        _WIRE_PACKING = prev
+        _WIRE_PACKING.reset(token)
 
 
 def _wire_layout(codec, n):
@@ -126,7 +143,7 @@ def _transport(x2d, codec, move, *, reduce=False, dtype):
     per encoded component."""
     padded, n = _pad_to(x2d, codec.granule)
     pn = padded.shape[-1]
-    layout = _wire_layout(codec, pn) if _WIRE_PACKING else None
+    layout = _wire_layout(codec, pn) if _WIRE_PACKING.get() else None
     if layout is None:
         enc = tuple(move(a) for a in codec.encode(padded))
         if reduce:
@@ -302,7 +319,7 @@ def _ag_one(x, ax, dim, codec):
     bit-identical (check_parity matrix)."""
     if isinstance(codec, IdentityCodec):
         return jax.lax.all_gather(x, ax, axis=dim, tiled=True)
-    if _WIRE_PACKING and _ring_chunks(codec) > 1 \
+    if _WIRE_PACKING.get() and _ring_chunks(codec) > 1 \
             and _wire_layout(codec, codec.granule):
         return _ag_one_ring(x, ax, dim, codec)
     p = axis_size(ax)
@@ -333,7 +350,7 @@ def _rs_one(x, ax, dim, codec):
     requantization."""
     if isinstance(codec, IdentityCodec):
         return jax.lax.psum_scatter(x, ax, scatter_dimension=dim, tiled=True)
-    if _WIRE_PACKING and _ring_chunks(codec) > 1 \
+    if _WIRE_PACKING.get() and _ring_chunks(codec) > 1 \
             and _wire_layout(codec, codec.granule):
         return _rs_one_ring(x, ax, dim, codec)
     p = axis_size(ax)
@@ -550,7 +567,12 @@ def wire_slot_bytes(codec, n: int, *, chunks: int | None = None):
     count (the AG/RS transports); pass ``chunks=1`` for hops that never
     chunk (ppermute / all-to-all route chunked codecs through the
     monolithic transport).  Returns None for layout-less codecs
-    (identity: raw dtype bytes, no padding)."""
+    (identity: raw dtype bytes, no padding).
+
+    For variable (bounded-but-ragged) layouts this is the SLOT bound —
+    the static buffer size the lax collective actually moves.  The
+    data-dependent achieved bytes of a concrete tensor are
+    :func:`achieved_slot_bytes`."""
     chunks = _ring_chunks(codec) if chunks is None else max(1, int(chunks))
     mult = chunks * codec.granule
     padded = ((int(n) + mult - 1) // mult) * mult
@@ -560,25 +582,99 @@ def wire_slot_bytes(codec, n: int, *, chunks: int | None = None):
     return chunks * layout.total_bytes
 
 
-def gather_wire_bytes(local_shape, dtype, p, codec) -> float:
+def achieved_slot_bytes(codec, x2d, *, chunks: int | None = None):
+    """ACHIEVED (data-dependent) wire bytes per slot row of ``x2d``.
+
+    Mirrors the transport exactly: the trailing dim is padded to
+    ``chunks * granule`` (as ``_chunk_slices``), each chunk slice is
+    encoded through ``encode_wire``, and the per-slot achieved widths
+    (:func:`repro.core.codecs.achieved_wire_bytes` — length headers on
+    variable layouts, the full slot width on static ones) are summed
+    over chunks.  Returns a ``(slots,)`` uint32-ish array, or None for
+    layout-less codecs.  For static layouts every entry equals
+    ``wire_slot_bytes(codec, n, chunks=chunks)``; for variable layouts
+    entries are <= that bound — the gap is what a ragged-aware fabric
+    (or the achieved-ratio benchmark rows) gets to claim.
+
+    Runs the codec's encode on device — telemetry/benchmark use, not a
+    free static lookup like :func:`wire_slot_bytes`."""
+    chunks = _ring_chunks(codec) if chunks is None else max(1, int(chunks))
+    mult = chunks * codec.granule
+    padded, _ = _pad_to(x2d, mult)
+    csz = padded.shape[-1] // chunks
+    layout = _wire_layout(codec, csz)
+    if layout is None:
+        return None
+    total = None
+    for c in range(chunks):
+        wire = codec.encode_wire(padded[:, c * csz:(c + 1) * csz])
+        ach = achieved_wire_bytes(wire, layout)
+        total = ach if total is None else total + ach
+    return total
+
+
+def _achieved_total(codec, sample, chunks=None):
+    """Summed achieved bytes of ``sample``'s slot rows, or None when the
+    codec has no layout (callers then fall back to the static bound)."""
+    ach = achieved_slot_bytes(codec, sample, chunks=chunks)
+    return None if ach is None else float(jnp.sum(ach))
+
+
+def gather_wire_bytes(local_shape, dtype, p, codec, *, sample=None) -> float:
     """Exact bytes put on the wire per device by one all_gather (the
     local slot's packed wire buffer, including chunk padding, replicated
-    to the other p-1 peers)."""
+    to the other p-1 peers).
+
+    With ``sample`` (a local tensor of ``local_shape``) the ACHIEVED
+    bytes of that data are reported instead of the slot bound — equal
+    for static layouts, <= for variable ones."""
     import numpy as np
     n = int(np.prod(local_shape))
+    if sample is not None:
+        ach = _achieved_total(codec, sample.reshape(1, -1))
+        if ach is not None:
+            return ach * (p - 1)
     slot = wire_slot_bytes(codec, n)
     if slot is None:
         slot = n * np.dtype(dtype).itemsize
     return float(slot) * (p - 1)
 
 
-def scatter_wire_bytes(local_shape, dtype, p, codec) -> float:
+def scatter_wire_bytes(local_shape, dtype, p, codec, *, sample=None) -> float:
     """Exact bytes put on the wire per device by one reduce-scatter:
     p-1 of the p destination slots (each ``n/p`` elements, padded and
-    packed) leave the device."""
+    packed) leave the device.
+
+    With ``sample`` the ACHIEVED bytes are reported: the sample's rows
+    are split into the p destination slots exactly as the transport does
+    and the per-slot achieved widths summed, scaled by (p-1)/p (which of
+    the p slots stays home is device-dependent; the scale is exact for
+    static layouts and the peer-average for ragged ones)."""
     import numpy as np
     n = int(np.prod(local_shape))
+    if sample is not None and n % p == 0:
+        ach = _achieved_total(codec, sample.reshape(p, -1))
+        if ach is not None:
+            return ach * (p - 1) / p
     slot = wire_slot_bytes(codec, n // p)
+    if slot is None:
+        slot = (n // p) * np.dtype(dtype).itemsize
+    return float(slot) * (p - 1)
+
+
+def a2a_wire_bytes(local_shape, dtype, p, codec, *, sample=None) -> float:
+    """Exact bytes put on the wire per device by one all-to-all: p-1 of
+    the p split slots (each ``n/p`` elements, padded and packed,
+    ``chunks=1`` — the a2a transport never rings) leave the device.
+    ``sample`` reports achieved bytes, scaled (p-1)/p as for
+    :func:`scatter_wire_bytes`."""
+    import numpy as np
+    n = int(np.prod(local_shape))
+    if sample is not None and n % p == 0:
+        ach = _achieved_total(codec, sample.reshape(p, -1), chunks=1)
+        if ach is not None:
+            return ach * (p - 1) / p
+    slot = wire_slot_bytes(codec, n // p, chunks=1)
     if slot is None:
         slot = (n // p) * np.dtype(dtype).itemsize
     return float(slot) * (p - 1)

@@ -1,0 +1,233 @@
+"""Lossless wire stages: jit-compatible zero-run compaction (+ entropy
+accounting) over a base codec's packed wire buffer.
+
+TACO's dual-scale FP8 payloads are near-zero-heavy on real workloads —
+sequence-padding regions, ReLU-sparse activations, and zero-initialized
+tensors quantize whole 256-element blocks to the 0x00 payload byte — and
+the lossless CCL family (ZipCCL; the OSU hybrid lossy+lossless stack,
+PAPERS.md) exists to harvest exactly that redundancy *after* the lossy
+stage.  This module supplies the first lossless tier:
+
+``zle`` — zero-length encoding.  The inner codec's wire row (payload +
+scales + alpha, ``W`` bytes) is viewed as ``G = ceil(W/16)`` groups of
+16 bytes; a ``G``-bit occupancy bitmap marks the nonzero groups, and the
+nonzero groups are stably compacted to the front of a max-size data
+region.  The slot is **bounded-but-ragged** (``codecs.WireLayout`` with
+``variable=True``)::
+
+    byte offset   component                     semantics
+    0             length   uint32 x 1           achieved slot bytes
+    4             bitmap   uint8  x ceil(G/8)   nonzero-group occupancy
+    4+ceil(G/8)   data     uint8  x 16*G        compacted nonzero groups,
+                                                zero-padded to the bound
+
+The static slot width (the bound a transport must reserve, and what the
+lax collective moves) is ``4 + ceil(G/8) + 16*G`` bytes; the ACHIEVED
+width is ``4 + ceil(G/8) + 16*nnz`` — data-dependent, recorded in the
+header, and reported by the byte telemetry
+(``collectives.achieved_slot_bytes``) and the achieved-ratio benchmark
+rows (``benchmarks/comm_volume.py``).  Encode and decode are pure
+jnp/static-shape (argsort compaction, cumsum gather) so they trace under
+jit, vmap over any leading slot/peer axes, and ride inside shard_map —
+the transport treats a hybrid stack exactly like any other codec.
+
+:class:`ZleCodec` stacks the stage over ANY codec that publishes a wire
+layout (spec grammar ``base+zle``, e.g. ``taco+zle:folded:chunks=4`` —
+see ``repro.core.registry``).  It composes through the inner codec's
+wire-native fast paths, so TACO's fused Pallas wire kernels still emit
+and consume the inner buffer directly; the stage is a byte-level
+transform on top.  Decode ignores the length header (the bitmap fully
+determines the layout), so bit-parity across transports never depends on
+header handling.
+
+``byte_entropy_bits`` is the accounting half of the entropy tier: the
+order-0 Shannon bound (bits/byte) of a wire buffer, i.e. what an ideal
+range coder would achieve on top of ZLE.  A jit-compatible range coder
+is future work (ROADMAP); the benchmark rows report the bound alongside
+the achieved ZLE ratio so the headroom is pinned, not guessed.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.codecs import WireFastPath, make_wire_layout
+from repro.core.overlap import PIPELINED
+
+__all__ = [
+    "GROUP_BYTES", "zle_wire_layout", "zle_encode", "zle_decode",
+    "zle_slot_bytes", "byte_entropy_bits", "ZleCodec",
+]
+
+#: Bytes per zero-run group: the compaction granularity.  16 bytes keeps
+#: the bitmap overhead at 1/128 of the inner stream while still folding
+#: away sub-block zero runs (one fp8 payload byte per element -> a
+#: 16-element zero run compacts).
+GROUP_BYTES = 16
+
+
+def _geometry(inner_bytes: int) -> tuple[int, int]:
+    """(groups, bitmap_bytes) for an inner wire row of ``inner_bytes``."""
+    if inner_bytes <= 0:
+        raise ValueError(f"inner wire width must be >= 1, got {inner_bytes}")
+    groups = -(-inner_bytes // GROUP_BYTES)
+    return groups, -(-groups // 8)
+
+
+def zle_wire_layout(inner_bytes: int):
+    """The variable :class:`~repro.core.codecs.WireLayout` of one ZLE slot
+    over an ``inner_bytes``-wide inner wire row (see module docstring for
+    the byte table)."""
+    groups, bitmap = _geometry(inner_bytes)
+    return make_wire_layout(("length", "uint32", 1),
+                            ("bitmap", "uint8", bitmap),
+                            ("data", "uint8", groups * GROUP_BYTES),
+                            variable=True)
+
+
+def zle_slot_bytes(inner_bytes: int) -> int:
+    """Static slot (worst-case) bytes of the ZLE stage over an
+    ``inner_bytes`` inner row: header + bitmap + group-padded data."""
+    return zle_wire_layout(inner_bytes).total_bytes
+
+
+_BIT_WEIGHTS = tuple(1 << k for k in range(8))   # LSB-first bit packing
+
+
+def zle_encode(wire):
+    """Inner wire rows -> ZLE component tuple.
+
+    ``wire`` is ``(..., W)`` uint8; returns ``(length, bitmap, data)``
+    with shapes ``(..., 1)`` uint32 / ``(..., B)`` uint8 /
+    ``(..., 16*G)`` uint8 matching :func:`zle_wire_layout`.  Nonzero
+    groups keep their relative order (stable compaction via distinct
+    integer sort keys), padding groups are zeroed, and the header records
+    the achieved slot bytes ``4 + B + 16*nnz``."""
+    lead, w = wire.shape[:-1], wire.shape[-1]
+    groups, bitmap_bytes = _geometry(w)
+    pad = groups * GROUP_BYTES - w
+    if pad:
+        wire = jnp.pad(wire, [(0, 0)] * len(lead) + [(0, pad)])
+    g = wire.reshape(*lead, groups, GROUP_BYTES)
+    nz = jnp.any(g != 0, axis=-1)                            # (..., G)
+    # occupancy bitmap, LSB-first within each byte
+    bits = nz
+    if bitmap_bytes * 8 != groups:
+        bits = jnp.pad(bits, [(0, 0)] * len(lead)
+                       + [(0, bitmap_bytes * 8 - groups)])
+    weights = jnp.asarray(_BIT_WEIGHTS, jnp.int32)
+    bitmap = jnp.sum(bits.reshape(*lead, bitmap_bytes, 8) * weights,
+                     axis=-1).astype(jnp.uint8)
+    # stable front-compaction without relying on argsort stability:
+    # nonzero groups get distinct ascending keys < G, zero groups >= G
+    idx = jnp.arange(groups)
+    order = jnp.argsort(jnp.where(nz, idx, groups + idx), axis=-1)
+    data = jnp.take_along_axis(g, order[..., None], axis=-2)
+    nnz = jnp.sum(nz, axis=-1)                               # (...,)
+    valid = idx < nnz[..., None]
+    data = jnp.where(valid[..., None], data, jnp.uint8(0))
+    length = (4 + bitmap_bytes
+              + nnz * GROUP_BYTES).astype(jnp.uint32)[..., None]
+    return length, bitmap, data.reshape(*lead, groups * GROUP_BYTES)
+
+
+def zle_decode(bitmap, data, inner_bytes: int):
+    """Inverse of :func:`zle_encode`: ``(..., W)`` uint8 inner wire rows.
+
+    Only the bitmap and compacted data are consumed — the length header
+    is redundant telemetry (``nnz`` is the bitmap's popcount), so decode
+    correctness can never hinge on header handling."""
+    lead = bitmap.shape[:-1]
+    groups, bitmap_bytes = _geometry(inner_bytes)
+    shifts = jnp.arange(8, dtype=jnp.uint8)
+    bits = (bitmap[..., None] >> shifts) & jnp.uint8(1)      # (..., B, 8)
+    nz = bits.reshape(*lead, bitmap_bytes * 8)[..., :groups].astype(bool)
+    src = jnp.clip(jnp.cumsum(nz, axis=-1) - 1, 0, groups - 1)
+    g = jnp.take_along_axis(data.reshape(*lead, groups, GROUP_BYTES),
+                            src[..., None], axis=-2)
+    g = jnp.where(nz[..., None], g, jnp.uint8(0))
+    return g.reshape(*lead, groups * GROUP_BYTES)[..., :inner_bytes]
+
+
+def byte_entropy_bits(wire) -> jnp.ndarray:
+    """Order-0 Shannon entropy (bits/byte) of a uint8 buffer — the ideal
+    range-coder bound for the entropy tier on top of ZLE (accounting
+    only; see module docstring)."""
+    flat = wire.reshape(-1)
+    counts = jnp.zeros(256, jnp.float32).at[flat.astype(jnp.int32)].add(1.0)
+    p = counts / flat.size
+    return -jnp.sum(jnp.where(p > 0, p * jnp.log2(jnp.where(p > 0, p, 1.0)),
+                              0.0))
+
+
+@dataclasses.dataclass(frozen=True)
+class ZleCodec(WireFastPath):
+    """Hybrid stack: ``inner`` lossy codec + lossless ZLE wire stage.
+
+    The encoded component tuple is ``(length, bitmap, data)`` over the
+    inner codec's PACKED wire row (produced via ``inner.encode_wire``, so
+    fused Pallas emission still applies), and decode reconstructs the
+    inner row and hands it to the inner wire-native decoders.  Transport
+    knobs (``granule``, ``chunks``, ``schedule``) delegate to the inner
+    codec — a stack rides the exact transport its base codec would."""
+
+    inner: object
+
+    @property
+    def granule(self) -> int:
+        return self.inner.granule
+
+    @property
+    def chunks(self) -> int:
+        return int(getattr(self.inner, "chunks", 1))
+
+    @property
+    def schedule(self) -> str:
+        return getattr(self.inner, "schedule", PIPELINED)
+
+    def _inner_bytes(self, n: int) -> int:
+        return self.inner.wire_layout(n).total_bytes
+
+    def wire_layout(self, n):
+        return zle_wire_layout(self._inner_bytes(n))
+
+    def encode(self, x):
+        return zle_encode(self.inner.encode_wire(x))
+
+    def decode(self, enc, n, dtype):
+        length, bitmap, data = enc
+        inner_wire = zle_decode(bitmap, data, self._inner_bytes(n))
+        return self.inner.decode_wire(inner_wire, n, dtype)
+
+    def decode_sum(self, enc, n, dtype):
+        length, bitmap, data = enc
+        inner_wire = zle_decode(bitmap, data, self._inner_bytes(n))
+        return self.inner.decode_sum_wire(inner_wire, n, dtype)
+
+    def bytes_per_element(self, in_dtype=jnp.bfloat16) -> float:
+        # the asymptotic SLOT bound: inner bytes + 1 bitmap bit per group
+        # (+ the group-padding/header constants, which vanish per-element).
+        # Achieved bytes are data-dependent and strictly <= this; see
+        # collectives.achieved_slot_bytes / the comm_volume achieved rows.
+        return float(self.inner.bytes_per_element(in_dtype)) \
+            * (1.0 + 1.0 / (8 * GROUP_BYTES))
+
+    def expansion_bytes(self, n: int) -> int:
+        """Worst-case slot GROWTH over the inner wire row (header + bitmap
+        + group padding) for an ``n``-element slot — what the bound costs
+        when the data has no zero runs at all."""
+        w = self._inner_bytes(n)
+        return zle_slot_bytes(w) - w
+
+
+def _np_reference_zle(row: np.ndarray) -> tuple[int, np.ndarray]:
+    """Tiny numpy oracle for tests: (achieved_bytes, decoded_row)."""
+    w = row.size
+    groups, bitmap_bytes = _geometry(w)
+    padded = np.zeros(groups * GROUP_BYTES, np.uint8)
+    padded[:w] = row
+    g = padded.reshape(groups, GROUP_BYTES)
+    nnz = int(np.sum(np.any(g != 0, axis=-1)))
+    return 4 + bitmap_bytes + nnz * GROUP_BYTES, padded[:w]

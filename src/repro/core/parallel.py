@@ -143,6 +143,23 @@ class CommPlan:
             out[path] = float(codec.bytes_per_element())
         return out
 
+    def wire_variable(self) -> dict:
+        """Per-path flags: does the codec publish a VARIABLE (bounded-but-
+        ragged) wire layout?  True means the per-element numbers from
+        :meth:`wire_bytes_per_element` are the static slot BOUND the lax
+        collective moves, while the achieved bytes are data-dependent
+        (length headers; ``collectives.achieved_slot_bytes``) — the
+        trainer surfaces the flag so ``comm/*`` consumers know which
+        rows have an achieved counterpart."""
+        out = {}
+        for path in PATHS:
+            codec = getattr(self, path)
+            wl = getattr(codec, "wire_layout", None)
+            layout = wl(codec.granule) if wl is not None else None
+            out[path] = bool(layout is not None
+                             and getattr(layout, "variable", False))
+        return out
+
     def wire_chunks(self) -> dict:
         """Per-path ring-overlap chunk counts (1 = monolithic transport).
 

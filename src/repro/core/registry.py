@@ -14,9 +14,16 @@ Grammar::
     item   := path "=" codec | knob "=" int
     path   := "tp" | "tp_fwd" | "tp_bwd" | "grad_rs" | "weight_ag" | "pp"
     knob   := "skip_first" | "skip_last" | "warmup"
-    codec  := name (":" arg)*
+    codec  := base ("+" stage)* (":" arg)*
+    base   := name
+    stage  := registered lossless stage name ("zle")
 
-``tp=X`` assigns both TP directions at once.  Knobs: ``skip_first``/
+``tp=X`` assigns both TP directions at once.  A ``+stage`` suffix on the
+codec head stacks a registered lossless wire stage over the base codec
+(e.g. ``tp=taco+zle:folded:chunks=4`` — the colon args belong to the
+BASE codec; stages take none).  Stages apply left-to-right and each
+requires the codec it wraps to publish a wire layout, so ``none+zle``
+is rejected (there is no packed wire buffer to stack over).  Knobs: ``skip_first``/
 ``skip_last`` keep the first/last N transformer layers TP-uncompressed
 (resolved to a static per-layer span tuple at trace time so jit caches
 stay keyed correctly); ``warmup`` runs the identity plan for the first K
@@ -33,6 +40,8 @@ Codec args (all optional; normalized output only emits non-defaults):
     tahquant  g<N> (group), chunks=<N>, schedule=pipelined|serial
     int8      g<N> (group), chunks=<N>, schedule=pipelined|serial
     none      no args ("identity" is a whole-spec alias, not a codec name)
+    +zle      lossless zero-run wire stage (no args of its own); stacks
+              over any wire-publishing base codec — see repro.core.lossless
 
 ``chunks=N`` (N >= 1) selects the chunked ring-overlap transport for the
 codec's all-gather / reduce-scatter hops (N double-buffered wire slices;
@@ -58,12 +67,14 @@ from typing import Callable, Protocol, runtime_checkable
 
 from repro.core.codecs import (IdentityCodec, Int8Codec, Sdp4BitCodec,
                                TacoCodec, TahQuantCodec)
+from repro.core.lossless import ZleCodec
 from repro.core.overlap import PIPELINED, SCHEDULES
 from repro.core.parallel import PATHS, CommPlan
 from repro.core.taco import TacoConfig
 
 __all__ = [
     "Codec", "CommSpecError", "register_codec", "get_codec", "list_codecs",
+    "register_stage", "list_stages",
     "codec_from_spec", "codec_to_spec", "from_spec", "to_spec",
     "register_alias", "list_aliases",
 ]
@@ -161,6 +172,54 @@ def list_codecs() -> list[str]:
     return sorted(_CODECS)
 
 
+@dataclasses.dataclass(frozen=True)
+class StageEntry:
+    name: str
+    cls: type
+    wrap: Callable          # (inner codec) -> stacked codec instance
+
+
+_STAGES: dict[str, StageEntry] = {}
+_STAGE_NAME_BY_CLS: dict[type, str] = {}
+
+
+def register_stage(name: str, cls: type, wrap: Callable) -> None:
+    """Register a lossless wire stage usable as a ``+name`` head suffix.
+
+    ``wrap(inner)`` stacks the stage over an inner codec instance; the
+    parser validates that ``inner`` publishes a wire layout before
+    wrapping (a stage transforms the packed wire buffer — raw-tensor
+    codecs have none)."""
+    if name in _STAGES:
+        raise ValueError(f"stage {name!r} already registered")
+    if name in _CODECS:
+        raise ValueError(f"stage {name!r} collides with a codec name")
+    _STAGES[name] = StageEntry(name, cls, wrap)
+    _STAGE_NAME_BY_CLS.setdefault(cls, name)
+
+
+def list_stages() -> list[str]:
+    """Sorted names of every registered lossless stage (the valid
+    ``+stage`` head suffixes of the spec grammar)."""
+    return sorted(_STAGES)
+
+
+def _apply_stage(name: str, codec, spec: str):
+    try:
+        entry = _STAGES[name]
+    except KeyError:
+        raise CommSpecError(
+            f"unknown stage {name!r} in {spec!r}; "
+            f"registered stages: {sorted(_STAGES)}") from None
+    wl = getattr(codec, "wire_layout", None)
+    if wl is None or wl(codec.granule) is None:
+        raise CommSpecError(
+            f"stage {name!r} in {spec!r} requires a codec with a wire "
+            "layout to stack over (lossless stages transform the packed "
+            "wire buffer)")
+    return entry.wrap(codec)
+
+
 def register_alias(name: str, spec: str) -> None:
     """Register a whole-spec alias (e.g. ``taco3d``)."""
     _ALIASES[name] = spec
@@ -172,15 +231,20 @@ def list_aliases() -> dict[str, str]:
 
 
 def codec_from_spec(spec: str):
-    """``"taco:e4m3:b256"`` -> codec instance.
+    """``"taco:e4m3:b256"`` / ``"taco+zle:folded"`` -> codec instance.
 
-    Parses one colon-separated codec spec through the registered parser,
-    wrapping any parse failure as :class:`CommSpecError`, and enforces
-    the transport-level invariant that ``chunks=N > 1`` is only legal on
-    codecs publishing a wire layout (the chunked ring slices the packed
-    wire buffer — there is nothing to slice on raw-tensor codecs)."""
+    The head (everything before the first ``:``) is split on ``+`` into
+    a base codec name plus zero or more lossless stage names; the
+    colon-separated args are parsed by the BASE codec's registered
+    parser, then the stages wrap the result left-to-right.  Parse
+    failures surface as :class:`CommSpecError`, and two transport-level
+    invariants are enforced: ``chunks=N > 1`` is only legal on codecs
+    publishing a wire layout (the chunked ring slices the packed wire
+    buffer — there is nothing to slice on raw-tensor codecs), and every
+    ``+stage`` requires the same of the codec it stacks over."""
     parts = spec.strip().split(":")
-    name, args = parts[0], tuple(parts[1:])
+    head, args = parts[0], tuple(parts[1:])
+    name, *stages = head.split("+")
     entry = get_codec(name)
     try:
         codec = entry.parse(args)
@@ -195,12 +259,21 @@ def codec_from_spec(spec: str):
             raise CommSpecError(
                 f"codec {name!r} has no wire layout; 'chunks=' requires "
                 "one (chunked ring transport slices the packed wire buffer)")
+    for stage in stages:
+        codec = _apply_stage(stage, codec, spec)
     return codec
 
 
 def codec_to_spec(codec) -> str:
     """Codec instance -> normalized spec string (inverse of
-    :func:`codec_from_spec`)."""
+    :func:`codec_from_spec`).  Stacked stages unparse recursively: the
+    inner codec's spec gains a ``+stage`` head suffix, keeping the base
+    codec's colon args in place."""
+    stage = _STAGE_NAME_BY_CLS.get(type(codec))
+    if stage is not None:
+        inner = codec_to_spec(codec.inner)
+        head, sep, rest = inner.partition(":")
+        return f"{head}+{stage}{sep}{rest}"
     name = _CODEC_NAME_BY_CLS.get(type(codec))
     if name is None:
         raise CommSpecError(f"codec class {type(codec).__name__} is not "
@@ -405,6 +478,8 @@ register_codec("sdp4bit", Sdp4BitCodec, _parse_sdp4bit, _unparse_sdp4bit)
 register_codec("tahquant", TahQuantCodec,
                *_make_group_codec(TahQuantCodec, "tahquant"))
 register_codec("int8", Int8Codec, *_make_group_codec(Int8Codec, "int8"))
+
+register_stage("zle", ZleCodec, ZleCodec)
 
 register_alias("identity", "baseline")
 register_alias("baseline", "")                  # identity everywhere

@@ -56,6 +56,11 @@ def main():
     comm_plan = from_spec(args.comm_spec if args.comm_spec is not None
                           else args.policy)
     print(f"serving with comm spec: {to_spec(comm_plan)}")
+    ragged = [p for p, v in comm_plan.wire_variable().items() if v]
+    if ragged:
+        print("variable wire layout on: " + ", ".join(ragged)
+              + " (slot bound moved on the wire; achieved bytes are "
+                "data-dependent — see docs/COMPRESSION.md)")
     ctx = ParallelCtx(tp_axis=tp_axis, fsdp_axes=fsdp_axes,
                       plan=comm_plan, tp_mode="allreduce")
 

@@ -4,7 +4,8 @@ Run in a subprocess with XLA_FLAGS=--xla_force_host_platform_device_count=8
 (see tests/test_overlap.py). Exits nonzero on any failure.
 
 Four contracts, for EVERY registered compressing codec (taco dual/folded,
-sdp4bit, tahquant, int8):
+sdp4bit, tahquant, int8) AND the hybrid lossless stacks (taco+zle —
+bounded-but-ragged variable wire layouts, repro.core.lossless):
 
   1. packed single-buffer transport is BIT-IDENTICAL to the multi-buffer
      transport (the packing is pure bitcast/concat plumbing);
@@ -25,7 +26,6 @@ sdp4bit, tahquant, int8):
      ring reduce-scatter's hoisted per-peer send gather leaves ZERO
      dynamic-slices of the wire matrix in the step loop.
 """
-import dataclasses
 import os
 import re
 from collections import Counter
@@ -41,6 +41,8 @@ from repro.compat import HAS_OPTIMIZATION_BARRIER, shard_map
 from repro.core import collectives as cc
 from repro.core.codecs import (IdentityCodec, Int8Codec, Sdp4BitCodec,
                                TacoCodec, TahQuantCodec)
+from repro.core.lossless import ZleCodec
+from repro.core.registry import codec_from_spec, codec_to_spec
 from repro.core.taco import TacoConfig
 
 ID = IdentityCodec()
@@ -57,9 +59,25 @@ CODECS = {
     "sdp4bit": Sdp4BitCodec(),
     "tahquant": TahQuantCodec(),
     "int8": Int8Codec(),
+    # hybrid lossless stacks: VARIABLE wire layouts (length header +
+    # zero-group compaction over the inner packed buffer) riding the
+    # same transports — all parity/HLO contracts must hold unchanged
+    "taco_zle": ZleCodec(TacoCodec(TacoConfig(impl="jnp"))),
+    "taco_zle_folded": ZleCodec(TacoCodec(TacoConfig(impl="jnp",
+                                                     metadata="folded"))),
 }
 CHUNKS = 4
 TP = 4  # model-axis size of the (2, 4) mesh
+
+
+def with_ring(codec, schedule=None):
+    """Derive the chunked-ring variant of ``codec`` through the spec
+    grammar (``dataclasses.replace`` can't set ``chunks`` on the hybrid
+    wrappers — their transport knobs are delegating properties)."""
+    spec = codec_to_spec(codec) + f":chunks={CHUNKS}"
+    if schedule is not None:
+        spec += f":schedule={schedule}"
+    return codec_from_spec(spec)
 
 mesh = jax.make_mesh((2, 4), ("data", "model"))
 rng = np.random.default_rng(3)
@@ -117,12 +135,18 @@ x_ag = jnp.asarray(rng.normal(0, 0.02, (16, 512)).astype(np.float32))
 x_ragged = jnp.asarray(rng.normal(0, 0.02, (16, 500)).astype(np.float32))
 x_rs = jnp.asarray(rng.normal(0, 0.02, (16, 512)).astype(np.float32))
 x_a2a = jnp.asarray(rng.normal(0, 0.02, (32, 256)).astype(np.float32))
+# ragged a2a: 8 rows/peer x 250 = 2000 elements/slot, no granule divides it
+x_a2a_ragged = jnp.asarray(rng.normal(0, 0.02, (32, 250)).astype(np.float32))
 PERM = tuple((i, (i + 1) % TP) for i in range(TP))
 
+
+def _mb(fn, x, in_spec, out_spec):
+    with cc.multibuffer_wire():
+        return run(fn, x, in_spec, out_spec)
+
 for name, codec in CODECS.items():
-    ring = dataclasses.replace(codec, chunks=CHUNKS)
-    ring_serial = dataclasses.replace(codec, chunks=CHUNKS,
-                                      schedule="serial")
+    ring = with_ring(codec)
+    ring_serial = with_ring(codec, schedule="serial")
 
     def ag(v, c=codec):
         return cc.all_gather_c(v, "model", 0, c, ID)
@@ -194,12 +218,25 @@ for name, codec in CODECS.items():
     with cc.multibuffer_wire():
         check_equal(f"{name}/a2a_packed_vs_multibuf",
                     packed_a2a, run(a2a, x_a2a, *pp_specs))
+    # a2a with ragged trailing slots (per-peer slot size not a granule
+    # multiple) and with a chunked codec (chunks= must be IGNORED on the
+    # a2a hop — monolithic transport, identical bytes and results)
+    def a2a_ring(v, c=ring):
+        return cc.all_to_all_c(v, "model", 0, 0, c, ID)
+
+    check_equal(f"{name}/a2a_ragged_packed_vs_multibuf",
+                run(a2a, x_a2a_ragged, *pp_specs),
+                _mb(a2a, x_a2a_ragged, *pp_specs))
+    check_equal(f"{name}/a2a_chunked_codec_ignores_chunks",
+                packed_a2a, run(a2a_ring, x_a2a, *pp_specs))
 
 # ------------------------------------------------- gradients through rings
 TACO = CODECS["taco"]
-TACO_RING = dataclasses.replace(TACO, chunks=CHUNKS)
-TACO_RING_SERIAL = dataclasses.replace(TACO, chunks=CHUNKS,
-                                       schedule="serial")
+TACO_RING = with_ring(TACO)
+TACO_RING_SERIAL = with_ring(TACO, schedule="serial")
+TACO_ZLE = CODECS["taco_zle"]
+TACO_ZLE_RING = with_ring(TACO_ZLE)
+TACO_ZLE_RING_SERIAL = with_ring(TACO_ZLE, schedule="serial")
 w = jnp.asarray(rng.normal(0, 0.1, (512, 64)).astype(np.float32))
 
 
@@ -215,6 +252,13 @@ grad_mono = grad_of(TACO)
 check_equal("grad/ag_ring_vs_monolithic", grad_mono, grad_of(TACO_RING))
 check_equal("grad/ag_ring_serial_schedule_vs_monolithic",
             grad_mono, grad_of(TACO_RING_SERIAL))
+# the lossless stage is exact: hybrid grads must equal BARE taco grads
+# bit-for-bit, through every transport
+check_equal("grad/hybrid_zle_vs_bare_taco", grad_mono, grad_of(TACO_ZLE))
+check_equal("grad/hybrid_zle_ring_vs_bare_taco",
+            grad_mono, grad_of(TACO_ZLE_RING))
+check_equal("grad/hybrid_zle_ring_serial_vs_bare_taco",
+            grad_mono, grad_of(TACO_ZLE_RING_SERIAL))
 
 # --------------------------------------------------------- HLO inspection
 # taco dual metadata has THREE wire components — the strongest fusion case
@@ -262,6 +306,41 @@ check_counts("hlo/rs_ring_chunked_permutes",
              collectives_of(
                  lambda v: cc.psum_scatter_c(v, "model", 0, TACO_RING, ID),
                  x_rs, *rs_specs),
+             {"collective_permute": CHUNKS * (TP - 1)})
+
+# hybrid variable-layout hops: STILL exactly one lax collective moving
+# the (bounded) packed buffer; multibuffer moves length+bitmap+data
+check_counts("hlo/hybrid_zle_ag_packed_one_collective",
+             collectives_of(
+                 lambda v: cc.all_gather_c(v, "model", 0, TACO_ZLE, ID),
+                 x_ag, *ag_specs),
+             {"all_gather": 1})
+check_counts("hlo/hybrid_zle_rs_packed_one_collective",
+             collectives_of(
+                 lambda v: cc.psum_scatter_c(v, "model", 0, TACO_ZLE, ID),
+                 x_rs, *rs_specs),
+             {"all_to_all": 1})
+check_counts("hlo/hybrid_zle_a2a_packed_one_collective",
+             collectives_of(
+                 lambda v: cc.all_to_all_c(v, "model", 0, 0, TACO_ZLE, ID),
+                 x_a2a, *pp_specs),
+             {"all_to_all": 1})
+check_counts("hlo/hybrid_zle_a2a_chunked_codec_still_one_collective",
+             collectives_of(
+                 lambda v: cc.all_to_all_c(v, "model", 0, 0, TACO_ZLE_RING,
+                                           ID),
+                 x_a2a, *pp_specs),
+             {"all_to_all": 1})
+with cc.multibuffer_wire():
+    check_counts("hlo/hybrid_zle_ag_multibuf_three_collectives",
+                 collectives_of(
+                     lambda v: cc.all_gather_c(v, "model", 0, TACO_ZLE, ID),
+                     x_ag, *ag_specs),
+                 {"all_gather": 3})   # length + bitmap + data
+check_counts("hlo/hybrid_zle_ag_ring_chunked_permutes",
+             collectives_of(
+                 lambda v: cc.all_gather_c(v, "model", 0, TACO_ZLE_RING, ID),
+                 x_ag, *ag_specs),
              {"collective_permute": CHUNKS * (TP - 1)})
 
 # ------------------------------------- HLO structure of the ring schedules

@@ -1,0 +1,180 @@
+"""Lossless zero-run (ZLE) wire stage: encode/decode round-trips against
+the numpy oracle, variable-layout invariants, hybrid ZleCodec bit-parity
+with its inner codec, entropy estimator sanity, and the achieved-floor
+trainer probe (repro.core.lossless + the registry stack grammar)."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import lossless as L
+from repro.core.codecs import (WireLayout, achieved_wire_bytes,
+                               make_wire_layout, pack_wire)
+from repro.core.registry import (CommSpecError, codec_from_spec,
+                                 codec_to_spec, list_stages)
+
+
+def _sparse_rows(rng, shape, zero_frac=0.5):
+    """uint8 rows with ``zero_frac`` of the 16-byte groups zeroed."""
+    x = rng.integers(1, 256, shape, dtype=np.uint8)
+    w = shape[-1]
+    groups = -(-w // L.GROUP_BYTES)
+    flatgrp = rng.random(shape[:-1] + (groups,)) < zero_frac
+    for g in range(groups):
+        lo, hi = g * L.GROUP_BYTES, min((g + 1) * L.GROUP_BYTES, w)
+        x[..., lo:hi] = np.where(flatgrp[..., g:g + 1], 0, x[..., lo:hi])
+    return x
+
+
+# --------------------------------------------------------------------------
+# zle_encode / zle_decode
+# --------------------------------------------------------------------------
+
+@pytest.mark.parametrize("shape", [(1, 16), (3, 100), (2, 4, 333), (5, 256)])
+def test_zle_roundtrip_and_oracle_lengths(shape, rng):
+    x = _sparse_rows(rng, shape)
+    length, bitmap, data = jax.jit(L.zle_encode)(jnp.asarray(x))
+    dec = jax.jit(lambda b, d: L.zle_decode(b, d, shape[-1]))(bitmap, data)
+    np.testing.assert_array_equal(np.asarray(dec), x)
+    lens = np.asarray(length)[..., 0]
+    for idx in np.ndindex(*shape[:-1]):
+        want, _ = L._np_reference_zle(x[idx])
+        assert lens[idx] == want, (idx, lens[idx], want)
+
+
+def test_zle_all_zero_and_all_nonzero_extremes(rng):
+    w = 160                                  # 10 groups, 2 bitmap bytes
+    zeros = np.zeros((2, w), np.uint8)
+    length, bitmap, data = L.zle_encode(jnp.asarray(zeros))
+    assert np.asarray(length).tolist() == [[4 + 2], [4 + 2]]
+    assert not np.asarray(bitmap).any() and not np.asarray(data).any()
+    dense = rng.integers(1, 256, (2, w), dtype=np.uint8)
+    length, bitmap, data = L.zle_encode(jnp.asarray(dense))
+    assert (np.asarray(length)[..., 0] == 4 + 2 + 10 * 16).all()
+    np.testing.assert_array_equal(
+        np.asarray(L.zle_decode(bitmap, data, w)), dense)
+
+
+def test_zle_compaction_is_stable_and_tail_zeroed():
+    """Nonzero groups keep their relative order at the FRONT of the data
+    region; the tail is zero-padded (deterministic wire bytes)."""
+    w = 64                                   # 4 groups
+    x = np.zeros((1, w), np.uint8)
+    x[0, 16:32] = 7                          # group 1
+    x[0, 48:64] = 9                          # group 3
+    length, bitmap, data = L.zle_encode(jnp.asarray(x))
+    d = np.asarray(data)[0]
+    assert (d[:16] == 7).all() and (d[16:32] == 9).all()
+    assert not d[32:].any()
+    assert np.asarray(bitmap)[0, 0] == 0b1010      # LSB-first groups 1, 3
+    assert int(np.asarray(length)[0, 0]) == 4 + 1 + 2 * 16
+
+
+def test_zle_layout_is_variable_with_length_header():
+    lay = L.zle_wire_layout(100)             # 7 groups -> 1 bitmap byte
+    assert lay.variable
+    names = [c.name for c in lay.components]
+    assert names == ["length", "bitmap", "data"]
+    assert lay.components[0].dtype == "uint32" and \
+        lay.components[0].offset == 0
+    assert lay.total_bytes == 4 + 1 + 7 * 16 == L.zle_slot_bytes(100)
+    with pytest.raises(ValueError):
+        L.zle_wire_layout(0)
+
+
+def test_variable_layout_requires_uint32_header_first():
+    with pytest.raises(ValueError, match="length header"):
+        make_wire_layout(("data", "uint8", 16), variable=True)
+    with pytest.raises(ValueError, match="length header"):
+        WireLayout((), variable=True)
+    # static layouts are unconstrained (the degenerate case)
+    make_wire_layout(("data", "uint8", 16))
+
+
+def test_achieved_wire_bytes_reads_headers_variable_only(rng):
+    w = 100
+    x = _sparse_rows(rng, (4, w))
+    lay = L.zle_wire_layout(w)
+    wire = pack_wire(L.zle_encode(jnp.asarray(x)), lay)
+    got = np.asarray(achieved_wire_bytes(wire, lay))
+    want = [L._np_reference_zle(row)[0] for row in x]
+    np.testing.assert_array_equal(got, want)
+    # static layout: every slot reports the full (constant) width
+    stat = make_wire_layout(("data", "uint8", 32))
+    got = achieved_wire_bytes(jnp.zeros((3, 32), jnp.uint8), stat)
+    np.testing.assert_array_equal(np.asarray(got), [32] * 3)
+
+
+# --------------------------------------------------------------------------
+# entropy estimator
+# --------------------------------------------------------------------------
+
+def test_byte_entropy_bits_bounds(rng):
+    assert float(L.byte_entropy_bits(jnp.zeros((4, 64), jnp.uint8))) == 0.0
+    uniform = jnp.asarray(np.tile(np.arange(256, dtype=np.uint8), 64))
+    assert float(L.byte_entropy_bits(uniform)) == pytest.approx(8.0)
+    mixed = jnp.asarray(rng.integers(0, 4, (256,), dtype=np.uint8))
+    assert 0.0 < float(L.byte_entropy_bits(mixed)) <= 2.0 + 1e-6
+
+
+# --------------------------------------------------------------------------
+# ZleCodec: hybrid stack over any wire-publishing codec
+# --------------------------------------------------------------------------
+
+@pytest.mark.parametrize("base", ["taco:jnp", "taco:jnp:folded", "sdp4bit",
+                                  "tahquant", "int8:g64"])
+def test_zlecodec_bit_parity_with_inner(base, rng):
+    """The lossless stage is exact: decode and decode_sum through the
+    hybrid stack equal the bare inner codec bit-for-bit."""
+    head, sep, rest = base.partition(":")
+    hybrid = codec_from_spec(f"{head}+zle{sep}{rest}")
+    inner = hybrid.inner
+    assert codec_to_spec(hybrid).startswith(f"{head}+zle")
+    n = 4 * hybrid.granule
+    x = jnp.asarray(rng.normal(0, 0.02, (3, n)).astype(np.float32))
+    d_h = hybrid.decode(hybrid.encode(x), n, jnp.float32)
+    d_i = inner.decode(inner.encode(x), n, jnp.float32)
+    np.testing.assert_array_equal(np.asarray(d_h), np.asarray(d_i))
+    # wire fast paths + peer-stacked decode_sum (ring/RS shapes)
+    wire_h = hybrid.encode_wire(x)
+    s_h = hybrid.decode_sum_wire(wire_h, n, jnp.float32)
+    s_i = inner.decode_sum_wire(inner.encode_wire(x), n, jnp.float32)
+    np.testing.assert_array_equal(np.asarray(s_h), np.asarray(s_i))
+
+
+def test_zlecodec_wire_smaller_payload_on_zeros(rng):
+    hybrid = codec_from_spec("taco+zle:jnp")
+    n = 4 * hybrid.granule
+    lay = hybrid.wire_layout(n)
+    zeros = jnp.zeros((1, n), jnp.float32)
+    ach = np.asarray(achieved_wire_bytes(hybrid.encode_wire(zeros), lay))
+    assert ach[0] < lay.total_bytes
+    # the slot bound costs a bounded expansion over the inner wire
+    inner_bytes = hybrid.inner.wire_layout(n).total_bytes
+    assert lay.total_bytes == inner_bytes + hybrid.expansion_bytes(n)
+    assert hybrid.bytes_per_element() > hybrid.inner.bytes_per_element()
+
+
+def test_zlecodec_is_frozen_and_hashable():
+    a = codec_from_spec("taco+zle:jnp")
+    b = codec_from_spec("taco+zle:jnp")
+    assert a == b and hash(a) == hash(b)
+    assert len({a, b}) == 1
+    with pytest.raises(dataclasses.FrozenInstanceError):
+        a.inner = None
+
+
+def test_stage_registry_lists_zle():
+    assert "zle" in list_stages()
+    with pytest.raises(CommSpecError):
+        codec_from_spec("none+zle")
+
+
+def test_trainer_achieved_floor_probe():
+    from repro.train.trainer import _achieved_probe_ratio
+    hybrid = codec_from_spec("taco+zle:jnp")
+    r = _achieved_probe_ratio(hybrid)
+    assert 0.0 < r < 1.0                      # zeros compact below the bound
+    assert _achieved_probe_ratio(hybrid) == r  # cached (same codec key)

@@ -37,9 +37,13 @@ _COLLECTIVE = re.compile(
     r"|collective_permute|collective_broadcast)\b")
 
 # every registered compressing codec, plus arg'd variants with distinct
-# component shapes (dual vs folded metadata, quant groups)
+# component shapes (dual vs folded metadata, quant groups), plus hybrid
+# lossless stacks (variable wire layouts: length header + zero-group
+# compaction — repro.core.lossless)
 LAYOUT_SPECS = ["taco:jnp", "taco:jnp:folded", "taco:jnp:g64",
-                "sdp4bit", "sdp4bit:b256", "tahquant", "int8", "int8:g64"]
+                "sdp4bit", "sdp4bit:b256", "tahquant", "int8", "int8:g64",
+                "taco+zle:jnp", "taco+zle:jnp:folded", "sdp4bit+zle",
+                "int8+zle:g64"]
 
 
 def one_dev_mesh():
@@ -211,20 +215,104 @@ def test_chunks_threads_through_plan_telemetry():
 
 
 # --------------------------------------------------------------------------
+# codec-stack (+zle) spec grammar
+# --------------------------------------------------------------------------
+
+@pytest.mark.parametrize("spec", [
+    "tp=taco+zle",
+    "tp=taco+zle:folded:chunks=4",
+    "tp=taco+zle:b128:jnp:chunks=2:schedule=serial",
+    "grad_rs=sdp4bit+zle:chunks=2",
+    "weight_ag=int8+zle:g64",
+    "pp=tahquant+zle",
+])
+def test_stack_spec_roundtrip(spec):
+    plan = from_spec(spec)
+    assert to_spec(plan) == spec
+    assert from_spec(to_spec(plan)) == plan
+
+
+def test_stack_codec_spec_roundtrip():
+    from repro.core.registry import codec_to_spec
+    c = codec_from_spec("taco+zle:folded:chunks=4")
+    assert codec_to_spec(c) == "taco+zle:folded:chunks=4"
+    assert codec_from_spec(codec_to_spec(c)) == c
+
+
+def test_stack_transport_knobs_delegate_to_base():
+    c = codec_from_spec("taco+zle:folded:chunks=4:schedule=serial")
+    assert c.chunks == 4 and c.schedule == "serial"
+    assert c.granule == c.inner.granule == 256
+
+
+@pytest.mark.parametrize("bad", [
+    "tp=none+zle",               # no wire layout to stack over
+    "tp=taco+bogus",             # unregistered stage
+    "tp=+zle",                   # empty base
+    "tp=zle",                    # a stage is not a codec head
+    "grad_rs=none+zle:chunks=2",
+])
+def test_bad_stack_specs_rejected(bad):
+    with pytest.raises(CommSpecError):
+        from_spec(bad)
+
+
+# --------------------------------------------------------------------------
+# multibuffer_wire is a contextvar: nesting restores the enclosing state
+# --------------------------------------------------------------------------
+
+def test_multibuffer_wire_nesting_restores_enclosing_state():
+    """Regression for the module-global toggle: nested contexts must
+    restore the EXACT enclosing value on exit (token-based contextvar
+    reset), so a nested parity helper cannot flip an outer test back to
+    packed mode early — and the default survives an exception."""
+    assert cc._WIRE_PACKING.get() is True
+    with cc.multibuffer_wire():
+        assert cc._WIRE_PACKING.get() is False
+        with cc.multibuffer_wire():
+            assert cc._WIRE_PACKING.get() is False
+        # inner exit must NOT restore packed mode — outer is still open
+        assert cc._WIRE_PACKING.get() is False
+    assert cc._WIRE_PACKING.get() is True
+    with pytest.raises(RuntimeError):
+        with cc.multibuffer_wire():
+            raise RuntimeError("boom")
+    assert cc._WIRE_PACKING.get() is True
+
+
+def test_multibuffer_wire_isolated_per_context():
+    """Concurrent contexts each see their own toggle value (the leak the
+    module global allowed)."""
+    import contextvars
+
+    def probe_inside():
+        with cc.multibuffer_wire():
+            return cc._WIRE_PACKING.get()
+
+    ctx = contextvars.copy_context()
+    assert ctx.run(probe_inside) is False
+    # the other context's window never touched THIS context's value
+    assert cc._WIRE_PACKING.get() is True
+
+
+# --------------------------------------------------------------------------
 # single-device parity (degenerate P=1 ring; full matrix is multi-device)
 # --------------------------------------------------------------------------
 
-def _three_path_parity(x, chunks=4):
+def _three_path_parity(x, chunks=4, base="taco:jnp"):
     """Monolithic packed, chunked ring (BOTH stage schedules), and
     multi-buffer transports must agree bit-for-bit on ``x`` for both AG
-    and RS."""
-    ring = codec_from_spec(f"taco:jnp:chunks={chunks}")
-    serial = codec_from_spec(f"taco:jnp:chunks={chunks}:schedule=serial")
+    and RS.  ``base`` is the codec spec HEAD (args included) the ring
+    variants are derived from by appending transport args — works for
+    plain codecs and for hybrid ``+zle`` stacks alike."""
+    mono = codec_from_spec(base)
+    ring = codec_from_spec(f"{base}:chunks={chunks}")
+    serial = codec_from_spec(f"{base}:chunks={chunks}:schedule=serial")
     for make in [lambda c: (lambda v: cc.all_gather_c(v, "model", 0, c, ID)),
                  lambda c: (lambda v: cc.psum_scatter_c(v, "model", 0, c, ID))]:
-        packed = run1(make(TACO), x)
+        packed = run1(make(mono), x)
         with cc.multibuffer_wire():
-            multi = run1(make(TACO), x)
+            multi = run1(make(mono), x)
         chunked = run1(make(ring), x)
         chunked_serial = run1(make(serial), x)
         np.testing.assert_array_equal(np.asarray(packed), np.asarray(multi))
@@ -236,6 +324,20 @@ def _three_path_parity(x, chunks=4):
 def test_single_device_packed_and_ring_parity(rng):
     _three_path_parity(jnp.asarray(
         rng.normal(0, 0.02, (8, 500)).astype(np.float32)))
+
+
+def test_single_device_hybrid_zle_parity(rng):
+    """The hybrid taco+zle stack holds the same four-way transport parity
+    as its base codec, AND decodes bit-identically to BARE taco (the
+    lossless stage is exact)."""
+    x = jnp.asarray(rng.normal(0, 0.02, (8, 500)).astype(np.float32))
+    _three_path_parity(x, base="taco+zle:jnp")
+    hybrid = codec_from_spec("taco+zle:jnp")
+    for make in [lambda c: (lambda v: cc.all_gather_c(v, "model", 0, c, ID)),
+                 lambda c: (lambda v: cc.psum_scatter_c(v, "model", 0, c,
+                                                        ID))]:
+        np.testing.assert_array_equal(np.asarray(run1(make(TACO), x)),
+                                      np.asarray(run1(make(hybrid), x)))
 
 
 # --------------------------------------------------------------------------
@@ -496,6 +598,148 @@ def test_pp_path_telemetry_never_chunk_pads(rng):
     assert got < cc.wire_slot_bytes(plan4.pp, n) / n   # ring padding bigger
     assert plan.wire_bytes_per_element(64)["pp"] == \
         cc.wire_slot_bytes(plan.pp, 64, chunks=1) / 64
+
+
+# --------------------------------------------------------------------------
+# all-to-all: degenerate/ragged shapes + telemetry (the monolithic-only
+# transport — chunks= must be ignored, not break it)
+# --------------------------------------------------------------------------
+
+def _a2a1(codec, x):
+    return run1(lambda v: cc.all_to_all_c(v, "model", 0, 0, codec, ID), x)
+
+
+def test_a2a_sub_granule_slot_all_transports_agree(rng):
+    """Per-peer slot smaller than the codec granule: packed, multibuffer,
+    and chunked-codec (chunks ignored) a2a all agree bit-for-bit."""
+    x = jnp.asarray(rng.normal(0, 0.02, (1, 100)).astype(np.float32))
+    ring = codec_from_spec("taco:jnp:chunks=8")   # chunks > blocks too
+    packed = _a2a1(TACO, x)
+    with cc.multibuffer_wire():
+        multi = _a2a1(TACO, x)
+    np.testing.assert_array_equal(np.asarray(packed), np.asarray(multi))
+    np.testing.assert_array_equal(np.asarray(packed),
+                                  np.asarray(_a2a1(ring, x)))
+
+
+def test_a2a_chunked_codec_never_rings(rng):
+    """chunks=N never rings the a2a hop: no collective_permute in the
+    lowering (a 1-device all_to_all itself optimizes away; the exact
+    one-collective count is asserted on the 8-device mesh in
+    check_parity.py)."""
+    x = jnp.asarray(rng.normal(0, 0.02, (8, 512)).astype(np.float32))
+    ring = codec_from_spec("taco:jnp:chunks=4")
+    got = lowered_collectives(
+        lambda v: cc.all_to_all_c(v, "model", 0, 0, ring, ID), x)
+    assert "collective_permute" not in got, got
+
+
+def test_a2a_hybrid_zle_parity_and_vs_bare(rng):
+    x = jnp.asarray(rng.normal(0, 0.02, (4, 250)).astype(np.float32))
+    hybrid = codec_from_spec("taco+zle:jnp")
+    packed = _a2a1(hybrid, x)
+    with cc.multibuffer_wire():
+        multi = _a2a1(hybrid, x)
+    np.testing.assert_array_equal(np.asarray(packed), np.asarray(multi))
+    np.testing.assert_array_equal(np.asarray(packed),
+                                  np.asarray(_a2a1(TACO, x)))
+
+
+def test_a2a_wire_bytes_telemetry(rng):
+    """a2a telemetry: per-peer slots, chunks ignored (chunks=1 slot
+    size), achieved sample path <= the static bound."""
+    p, n = 8, 500 * 8
+    ring = codec_from_spec("taco:jnp:chunks=4")
+    # chunked codec: a2a slots are chunks=1 (monolithic), NOT ring-padded
+    assert cc.a2a_wire_bytes((n,), jnp.float32, p, ring) == \
+        cc.wire_slot_bytes(ring, n // p, chunks=1) * (p - 1)
+    assert cc.a2a_wire_bytes((n,), jnp.float32, p, ID) == \
+        (n // p) * 4 * (p - 1)
+    hybrid = codec_from_spec("taco+zle:jnp")
+    bound = cc.a2a_wire_bytes((n,), jnp.float32, p, hybrid)
+    zeros = jnp.zeros((n,), jnp.float32)
+    achieved = cc.a2a_wire_bytes((n,), jnp.float32, p, hybrid, sample=zeros)
+    assert achieved < bound
+    # static layout: sample path must equal the bound exactly
+    taco = codec_from_spec("taco:jnp")
+    assert cc.a2a_wire_bytes((n,), jnp.float32, p, taco, sample=zeros) == \
+        cc.a2a_wire_bytes((n,), jnp.float32, p, taco)
+
+
+# --------------------------------------------------------------------------
+# achieved (data-dependent) byte telemetry for variable wire layouts
+# --------------------------------------------------------------------------
+
+def test_achieved_slot_bytes_static_layout_equals_bound(rng):
+    codec = codec_from_spec("taco:jnp:chunks=4")
+    x = jnp.asarray(rng.normal(0, 0.02, (3, 500)).astype(np.float32))
+    ach = cc.achieved_slot_bytes(codec, x)
+    want = cc.wire_slot_bytes(codec, 500)
+    np.testing.assert_array_equal(np.asarray(ach), [want] * 3)
+    assert cc.achieved_slot_bytes(ID, x) is None
+
+
+def test_achieved_slot_bytes_variable_layout_tracks_data(rng):
+    """Hybrid zle: achieved bytes equal the summed length headers, stay
+    <= the slot bound, and drop when the payload zeroes out."""
+    codec = codec_from_spec("taco+zle:jnp:chunks=4")
+    n = 2048
+    dense = jnp.asarray(rng.normal(0, 0.02, (2, n)).astype(np.float32))
+    sparse = dense.at[:, n // 4:].set(0.0)
+    bound = cc.wire_slot_bytes(codec, n)
+    a_dense = np.asarray(cc.achieved_slot_bytes(codec, dense))
+    a_sparse = np.asarray(cc.achieved_slot_bytes(codec, sparse))
+    assert (a_dense <= bound).all() and (a_sparse <= bound).all()
+    assert (a_sparse < a_dense).all()
+    # mirror the transport's chunk slicing by hand: headers must match
+    segs, _, csz = cc._chunk_slices(sparse, codec)
+    layout = codec.wire_layout(csz)
+    assert layout.variable
+    want = sum(np.asarray(cc.achieved_wire_bytes(codec.encode_wire(s),
+                                                 layout)) for s in segs)
+    np.testing.assert_array_equal(a_sparse, want)
+
+
+def test_gather_scatter_wire_bytes_sample_path(rng):
+    p, n = 8, 1024
+    hybrid = codec_from_spec("taco+zle:jnp")
+    zeros = jnp.zeros((n,), jnp.float32)
+    dense = jnp.asarray(rng.normal(0, 0.02, (n,)).astype(np.float32))
+    g_bound = cc.gather_wire_bytes((n,), jnp.float32, p, hybrid)
+    assert cc.gather_wire_bytes((n,), jnp.float32, p, hybrid,
+                                sample=zeros) < g_bound
+    s_bound = cc.scatter_wire_bytes((p * n,), jnp.float32, p, hybrid)
+    assert cc.scatter_wire_bytes((p * n,), jnp.float32, p, hybrid,
+                                 sample=jnp.zeros((p * n,), jnp.float32)) \
+        < s_bound
+    # static layouts: sample changes nothing
+    taco = codec_from_spec("taco:jnp")
+    assert cc.gather_wire_bytes((n,), jnp.float32, p, taco, sample=dense) \
+        == cc.gather_wire_bytes((n,), jnp.float32, p, taco)
+    # identity: no layout, sample ignored, raw bytes
+    assert cc.gather_wire_bytes((n,), jnp.float32, p, ID, sample=zeros) \
+        == n * 4 * (p - 1)
+
+
+def test_commplan_wire_variable_flags():
+    plan = from_spec("tp=taco+zle,grad_rs=sdp4bit")
+    assert plan.wire_variable() == {
+        "tp_fwd": True, "tp_bwd": True, "grad_rs": False,
+        "weight_ag": False, "pp": False}
+    assert from_spec("baseline").wire_variable() == \
+        {p: False for p in plan.wire_variable()}
+
+
+def test_hlo_hybrid_zle_packed_one_collective_multibuf_three(rng):
+    x = jnp.asarray(rng.normal(0, 0.02, (8, 512)).astype(np.float32))
+    hybrid = codec_from_spec("taco+zle:jnp")
+    got = lowered_collectives(
+        lambda v: cc.all_gather_c(v, "model", 0, hybrid, ID), x)
+    assert dict(got) == {"all_gather": 1}, got
+    with cc.multibuffer_wire():
+        got = lowered_collectives(
+            lambda v: cc.all_gather_c(v, "model", 0, hybrid, ID), x)
+    assert dict(got) == {"all_gather": 3}, got   # length + bitmap + data
 
 
 # --------------------------------------------------------------------------
