@@ -8,6 +8,8 @@
   comm_volume    Fig 15 / §5.4 (TP wire bytes per step vs TP degree) +
                  achieved-vs-slot ratios of the hybrid taco+zle stack on
                  near-zero-payload (padded-batch) workloads
+  serve_latency  continuous-batching decode latency/throughput per codec
+                 spec (p50/p99 ms per token; recompiles gated to zero)
   roofline_table deliverable (g) presentation from dry-run artifacts
   threed         Table 3 (3D-parallel throughput model; needs PP results)
 
@@ -39,12 +41,13 @@ def main() -> None:
     args = ap.parse_args()
 
     from benchmarks import (accuracy, blocksize, comm_volume, fusion,
-                            overlap, roofline_table)
+                            overlap, roofline_table, serve_latency)
     tables = {
         "blocksize": blocksize.run,
         "fusion": fusion.run,
         "overlap": overlap.run,
         "comm_volume": comm_volume.run,
+        "serve_latency": serve_latency.run,
         "roofline_table": roofline_table.run,
         "accuracy": accuracy.run,
     }

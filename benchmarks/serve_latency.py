@@ -1,0 +1,101 @@
+"""Serving latency under compressed decode transport (§5.4 analog for
+inference): the continuous-batching engine (repro.serve.engine) serves a
+fixed request mix per codec spec and reports per-request decode latency
+percentiles and throughput.
+
+Every decode token crosses the TP AllReduce once per block plus once for
+the logits (the two-shot compressed collective — seq==1 cannot be
+sequence-sharded), so the codec sits directly on the token latency path;
+these rows track how the serving engine behaves under each wire format.
+
+Row family: ``serve/<codec>`` with derived
+``p50_ms=..;p99_ms=..;tok_per_s=..;recompiles=N;requests=N;wire_bytes_per_tok=..``.
+
+Gate semantics (scripts/check_bench_regression.py): the row SET and the
+``recompiles=0`` field are exact — a retrace under request churn is a
+structural regression of the slot-table design, not noise.  p50 is gated
+only against CATASTROPHIC regression (>5x the committed baseline):
+absolute CPU timings are noisy, a 5x blowup is a lost compiled path.
+The workload is identical under --quick and full runs so the rows stay
+gate-comparable (same philosophy as comm_volume's achieved rows).
+"""
+from __future__ import annotations
+
+import time
+
+import jax
+import numpy as np
+
+from benchmarks.common import emit
+from repro.configs import get_config, make_plan, smoke_config
+from repro.core import telemetry
+from repro.core.parallel import ParallelCtx
+from repro.core.registry import from_spec
+from repro.launch.mesh import make_mesh
+from repro.models.model import Model
+from repro.serve.engine import ServeEngine
+
+SPECS = {
+    "baseline": "baseline",
+    "taco": "tp=taco:jnp",
+    "taco_ring_c4": "tp=taco:jnp:chunks=4",
+    "taco_zle": "tp=taco+zle:jnp",
+}
+
+# deterministic request mix: 6 requests through 3 slots -> at least two
+# waves of retirement/admission churn per codec
+PROMPT_LENS = (5, 3, 9, 6, 4, 7)
+MAX_NEW = 5
+MAX_BATCH = 3
+BUCKETS = (4, 8)
+
+
+def _serve_one(model, params, mesh, spec: str) -> dict:
+    ctx = ParallelCtx(plan=from_spec(spec), tp_mode="allreduce")
+    eng = ServeEngine(model, mesh, ctx, params, max_batch=MAX_BATCH,
+                      max_len=32, prefill_buckets=BUCKETS)
+    rng = np.random.default_rng(0)
+    # warmup wave: compiles the decode step and every prefill bucket so
+    # the measured waves run reused executables only
+    for n in BUCKETS:
+        eng.submit(rng.integers(0, model.cfg.vocab_size, n)
+                   .astype(np.int32), max_new=2)
+    eng.run_until_drained()
+    warm_traces = eng._decode_traces
+    eng.reporter.drain()
+
+    t0 = time.perf_counter()
+    for n in PROMPT_LENS:
+        eng.submit(rng.integers(0, model.cfg.vocab_size, n)
+                   .astype(np.int32), max_new=MAX_NEW)
+    eng.run_until_drained()
+    wall = time.perf_counter() - t0
+
+    rows = eng.reporter.of_kind("serve/request")
+    per_tok = [r["decode_s_per_tok"] for r in rows
+               if r["decode_s_per_tok"] is not None]
+    tokens = sum(r["new_tokens"] for r in rows)
+    return {
+        "p50_ms": telemetry.percentile(per_tok, 50) * 1e3,
+        "p99_ms": telemetry.percentile(per_tok, 99) * 1e3,
+        "tok_per_s": tokens / wall,
+        "recompiles": eng._decode_traces - warm_traces,
+        "requests": len(rows),
+        "wire_bytes_per_tok": rows[0]["wire_bytes_per_tok"],
+    }
+
+
+def run(quick=False):
+    del quick              # identical workload; rows stay gate-comparable
+    mesh = make_mesh((1, 1, 1), ("pod", "data", "model"))
+    cfg = smoke_config(get_config("qwen2-0.5b"))
+    plan = make_plan(cfg, 1, 1, remat=False)
+    model = Model(cfg, plan)
+    params = model.init(jax.random.PRNGKey(0))
+    for name, spec in SPECS.items():
+        m = _serve_one(model, params, mesh, spec)
+        emit(f"serve/{name}", m["p50_ms"] * 1e3,
+             f"p50_ms={m['p50_ms']:.3f};p99_ms={m['p99_ms']:.3f};"
+             f"tok_per_s={m['tok_per_s']:.1f};"
+             f"recompiles={m['recompiles']};requests={m['requests']};"
+             f"wire_bytes_per_tok={m['wire_bytes_per_tok']:.0f}")

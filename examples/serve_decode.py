@@ -1,6 +1,10 @@
-"""Batched-request serving example: greedy decode with a KV cache and
-TACO-compressed TP AllReduce (the decode path uses the two-shot compressed
-AllReduce since seq==1 cannot be sequence-sharded).
+"""Continuous-batching serving example: the engine admits a handful of
+requests with different prompt lengths into one fixed slot table,
+prefills them in bucketed chunks, and greedy-decodes every in-flight
+row per tick through the TACO-compressed TP AllReduce (the decode path
+uses the two-shot compressed AllReduce since seq==1 cannot be
+sequence-sharded).  Per-request latency lines come straight from the
+engine's telemetry reporter.
 
     PYTHONPATH=src python examples/serve_decode.py --arch qwen2-0.5b
 """
@@ -8,25 +12,23 @@ import argparse
 import time
 
 import jax
-import jax.numpy as jnp
 import numpy as np
-from repro.compat import shard_map
-from jax.sharding import PartitionSpec as P
 
 from repro.configs import get_config, make_plan, smoke_config
 from repro.core.parallel import ParallelCtx
 from repro.core.registry import from_spec
 from repro.launch.mesh import make_mesh
 from repro.models.model import Model
-from repro.serve import serve_step as ss
+from repro.serve.engine import ServeEngine
 
 
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default="qwen2-0.5b")
-    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--requests", type=int, default=4)
     ap.add_argument("--prompt-len", type=int, default=16)
     ap.add_argument("--gen", type=int, default=32)
+    ap.add_argument("--max-batch", type=int, default=4, dest="max_batch")
     ap.add_argument("--comm-spec", dest="comm_spec", default="tp=taco:jnp",
                     help="compression plan spec (docs/COMPRESSION.md)")
     ap.add_argument("--no-compress", action="store_true",
@@ -41,40 +43,34 @@ def main():
     comm_plan = from_spec("baseline" if args.no_compress else args.comm_spec)
     ctx = ParallelCtx(plan=comm_plan, tp_mode="allreduce")
 
-    max_len = args.prompt_len + args.gen
-    cache = ss.init_cache(model, args.batch, max_len=max(64, max_len))
-
-    def step(p, c, t, pos):
-        return ss.decode_forward(p, t, c, pos, model, ctx)
-
-    cspecs = jax.tree.map(lambda _: P(), cache)
-    fn = jax.jit(shard_map(
-        step, mesh=mesh,
-        in_specs=(jax.tree.map(lambda _: P(), params), cspecs, P(), P()),
-        out_specs=(P(), cspecs), check_vma=False))
-
+    eng = ServeEngine(model, mesh, ctx, params,
+                      max_batch=args.max_batch,
+                      max_len=max(64, args.prompt_len + args.gen + 1),
+                      prefill_buckets=(8, max(8, args.prompt_len)))
     rng = np.random.default_rng(0)
-    prompt = jnp.asarray(
-        rng.integers(0, cfg.vocab_size, (args.batch, args.prompt_len)),
-        jnp.int32)
+    for i in range(args.requests):
+        # staggered prompt lengths: requests finish at different ticks,
+        # so retirement/admission churn exercises continuous batching
+        n = max(1, args.prompt_len - 3 * i)
+        eng.submit(rng.integers(0, cfg.vocab_size, n).astype(np.int32),
+                   max_new=args.gen)
 
-    # prefill by stepping the prompt (simple serving loop)
     t0 = time.time()
-    nxt = None
-    for t in range(args.prompt_len):
-        nxt, cache = fn(params, cache, prompt[:, t:t + 1], t)
-    generated = [nxt]
-    for t in range(args.prompt_len, max_len - 1):
-        nxt, cache = fn(params, cache, nxt, t)
-        generated.append(nxt)
-    toks = jnp.concatenate(generated, axis=1)
+    done = eng.run_until_drained()
     dt = time.time() - t0
-    total_tokens = args.batch * (max_len - 1)
-    print(f"arch={cfg.name} batch={args.batch} generated {toks.shape[1]} "
-          f"tokens/request")
-    print(f"throughput {total_tokens/dt:.1f} tok/s on CPU "
-          f"({'baseline' if args.no_compress else 'TACO-compressed'} TP)")
-    print("sample token ids:", np.asarray(toks[0, :16]))
+
+    for row in (r.latency_row() for r in done):
+        print("request rid={rid}: prompt={prompt_len} new={new_tokens} "
+              "ttft={ttft_s:.3f}s decode={ms:.2f}ms/tok total={total_s:.3f}s"
+              .format(ms=(row["decode_s_per_tok"] or 0.0) * 1e3, **row))
+    s = eng.summary()
+    total = s.get("total_new_tokens", 0)
+    print(f"arch={cfg.name} served {s['requests']} requests, "
+          f"{total} generated tokens")
+    print(f"throughput {total/dt:.1f} tok/s on CPU "
+          f"({'baseline' if args.no_compress else 'TACO-compressed'} TP), "
+          f"recompiles after warmup: {s['recompiles']}")
+    print("sample token ids:", np.asarray(done[0].tokens[:16]))
 
 
 if __name__ == "__main__":

@@ -18,8 +18,15 @@ Compares a fresh ``benchmarks.run --json`` output against the committed
      ``comm_volume/achieved/...``) must stay within 2% of the baseline:
      those workloads are deterministic, so a drop means the codec got
      structurally worse at harvesting zeros.
+  4. SERVING ROWS — every fresh ``serve/*`` row must carry a parseable
+     ``p50_ms=`` value and ``recompiles=0`` (a decode-step retrace under
+     request churn means the fixed-shape slot table broke — structure,
+     not noise), and its p50 may not exceed 5x the committed baseline
+     (absolute CPU timings are noisy; a 5x blowup is a lost compiled
+     path).  Missing serve rows fail via the row-presence gate above.
 
-Timings are NOT compared (CI machines are noisy); only structure gates.
+Timings are otherwise NOT compared (CI machines are noisy); only
+structure gates.
 
 Usage: python scripts/check_bench_regression.py NEW.json [BASELINE.json]
 """
@@ -32,8 +39,11 @@ from pathlib import Path
 
 _COUNT = re.compile(r"(?:^|;)collectives=(\d+)(?:;|$)")
 _RATIO = re.compile(r"(?:^|;)achieved_ratio=([0-9.]+)x(?:;|$)")
+_P50 = re.compile(r"(?:^|;)p50_ms=([0-9.]+)(?:;|$)")
+_RECOMPILES = re.compile(r"(?:^|;)recompiles=(\d+)(?:;|$)")
 
 RATIO_TOLERANCE = 0.98   # new achieved_ratio must be >= 98% of baseline
+P50_BLOWUP = 5.0         # serve p50 gated only against catastrophe
 
 
 def _rows(payload: dict) -> dict:
@@ -118,10 +128,38 @@ def main(argv: list[str]) -> int:
               f"{base_path.name}:")
         print("\n".join(ratio_regr))
         return 1
+    # serving rows: recompiles must be exactly zero, p50 must exist and
+    # stay within the catastrophic-blowup bound of the baseline
+    serve_fail = []
+    base_p50 = {n: d for n, d in base_rows.items() if n.startswith("serve/")}
+    gated_serve = 0
+    for name, derived in sorted(new_rows.items()):
+        if not name.startswith("serve/"):
+            continue
+        gated_serve += 1
+        p50 = _P50.search(derived)
+        rec = _RECOMPILES.search(derived)
+        if p50 is None:
+            serve_fail.append(f"  {name}: no p50_ms= field")
+            continue
+        if rec is None or int(rec.group(1)) != 0:
+            serve_fail.append(
+                f"  {name}: recompiles="
+                f"{rec.group(1) if rec else '<missing>'} (want 0 — the "
+                "decode step retraced under request churn)")
+        want = _P50.search(base_p50.get(name, ""))
+        if want and float(p50.group(1)) > float(want.group(1)) * P50_BLOWUP:
+            serve_fail.append(f"  {name}: p50 {want.group(1)}ms -> "
+                              f"{p50.group(1)}ms (>{P50_BLOWUP:.0f}x)")
+    if serve_fail:
+        print(f"FAIL: serving latency rows regressed vs {base_path.name}:")
+        print("\n".join(serve_fail))
+        return 1
     gated_ratios = sum(1 for n in new_ratio if n in base_ratio)
     print(f"PASS: {checked} collective-count rows at or below the "
           f"{base_path.name} baseline, {gated_ratios} achieved-ratio "
-          f"rows within tolerance, no dropped rows "
+          f"rows within tolerance, {gated_serve} serving rows clean, "
+          f"no dropped rows "
           f"({len(new_rows) - len(set(new_rows) & set(base_rows))} new)")
     return 0
 

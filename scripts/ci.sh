@@ -41,15 +41,18 @@ python scripts/check_docs.py
 # Collective-transport regression gate: re-run the fusion+overlap tables
 # (8-device subprocess: packed vs multi-buffer vs fused-wire vs chunked
 # ring) plus comm_volume's achieved-ratio rows (data-dependent hybrid
-# taco+zle compression on padded workloads), and fail if any lowered-HLO
-# collective count regressed, any baseline row disappeared, or any
-# achieved compression ratio dropped versus the committed
+# taco+zle compression on padded workloads) plus the serve_latency
+# continuous-batching rows (p50/p99 per codec spec; the recompiles=0
+# field is exact — a decode retrace under churn is structural), and fail
+# if any lowered-HLO collective count regressed, any baseline row
+# disappeared, any achieved compression ratio dropped, or any serving
+# row lost its p50/retrace guarantee versus the committed
 # BENCH_collectives.json baseline.  Timings are recorded but not gated
-# (CI machines are noisy); counts, row presence, and the deterministic
-# achieved ratios are exact.
+# (CI machines are noisy); counts, row presence, the deterministic
+# achieved ratios, and the serve recompile counts are exact.
 BENCH_GATE_JSON="$(mktemp /tmp/bench_gate.XXXXXX.json)"
 trap 'rm -f "$BENCH_GATE_JSON"' EXIT
-python -m benchmarks.run --only fusion,overlap,comm_volume \
+python -m benchmarks.run --only fusion,overlap,comm_volume,serve_latency \
     --json "$BENCH_GATE_JSON" --quick
 python scripts/check_bench_regression.py "$BENCH_GATE_JSON"
 

@@ -1,0 +1,119 @@
+"""Shared observability layer for the trainer and the serving engine.
+
+One reporter abstraction feeds both consumers (the ROADMAP's adaptive
+compression controller wants a single stats stream to train its policy
+on):
+
+  * the TRAINER merges :func:`comm_metrics` — the static per-path wire
+    accounting of the plan that actually ran a step — into its metrics
+    dict every step (``comm/*`` keys);
+  * the SERVING ENGINE emits per-request latency rows (``serve/request``
+    events: queue wait, prefill time, per-token decode time, achieved
+    wire bytes) and engine counters through a :class:`Reporter`.
+
+Everything here is host-side Python on static plan data — the only
+device work is the one cached probe encode behind
+:func:`achieved_probe_ratio`.
+"""
+from __future__ import annotations
+
+import logging
+import time
+
+
+# --------------------------------------------------------------------------
+# plan-level wire accounting (the trainer's comm/* block)
+# --------------------------------------------------------------------------
+
+_PROBE_RATIO_CACHE: dict = {}
+
+
+def achieved_probe_ratio(codec) -> float:
+    """Achieved/slot byte fraction of ``codec`` on an all-zero probe slot
+    — the near-zero-payload FLOOR of its variable wire layout (what the
+    achieved telemetry converges to as padding dominates a batch).  Runs
+    one encode on device, so results are cached per codec; only
+    meaningful for variable layouts (callers gate on
+    ``CommPlan.wire_variable``)."""
+    cached = _PROBE_RATIO_CACHE.get(codec)
+    if cached is None:
+        import jax.numpy as jnp
+
+        from repro.core import collectives as cc
+        n = 4 * codec.granule
+        probe = jnp.zeros((1, n), jnp.bfloat16)
+        ach = cc.achieved_slot_bytes(codec, probe)
+        slot = cc.wire_slot_bytes(codec, n)
+        cached = float(ach[0]) / float(slot)
+        _PROBE_RATIO_CACHE[codec] = cached
+    return cached
+
+
+def comm_metrics(plan, *, spec: str | None = None,
+                 warmup_active: bool | None = None) -> dict:
+    """Per-path wire telemetry for the plan that ran (static — no device
+    work beyond the cached variable-layout probe).  Key set is shared by
+    the trainer's step metrics and the serving engine's run summary."""
+    m: dict = {}
+    if spec is not None:
+        m["comm/spec"] = spec
+    if warmup_active is not None:
+        m["comm/warmup_active"] = 1.0 if warmup_active else 0.0
+    for path, bpe in plan.wire_bytes_per_element().items():
+        m[f"comm/{path}_bytes_per_elem"] = bpe
+    for path, nc in plan.wire_chunks().items():
+        if nc != 1:   # chunked ring transport active on path
+            m[f"comm/{path}_chunks"] = nc
+    for path, var in plan.wire_variable().items():
+        if var:   # bounded-but-ragged wire layout on path: bytes_per_elem
+            # above is the slot BOUND; surface the flag plus the
+            # all-zero achieved floor (cached — one probe per codec)
+            m[f"comm/{path}_wire_variable"] = 1.0
+            m[f"comm/{path}_achieved_floor_ratio"] = \
+                achieved_probe_ratio(getattr(plan, path))
+    return m
+
+
+# --------------------------------------------------------------------------
+# event reporter (the serving engine's per-request stream)
+# --------------------------------------------------------------------------
+
+class Reporter:
+    """Append-only event/counter sink.
+
+    ``event(kind, **fields)`` records one row; rows are plain dicts so
+    consumers (launch CLIs, benchmarks, the future adaptive controller)
+    aggregate without schema machinery.  An optional logger mirrors each
+    event at DEBUG and counters at the caller's discretion."""
+
+    def __init__(self, log: logging.Logger | None = None):
+        self.rows: list[dict] = []
+        self.counters: dict[str, float] = {}
+        self._log = log
+
+    def event(self, kind: str, **fields) -> dict:
+        row = {"kind": kind, "t": time.monotonic(), **fields}
+        self.rows.append(row)
+        if self._log is not None:
+            self._log.debug("%s %s", kind, fields)
+        return row
+
+    def count(self, name: str, n: float = 1) -> None:
+        self.counters[name] = self.counters.get(name, 0) + n
+
+    def of_kind(self, kind: str) -> list[dict]:
+        return [r for r in self.rows if r["kind"] == kind]
+
+    def drain(self) -> list[dict]:
+        rows, self.rows = self.rows, []
+        return rows
+
+
+def percentile(values, q: float) -> float:
+    """Nearest-rank percentile (q in [0,100]) of a non-empty sequence."""
+    import math
+    xs = sorted(values)
+    if not xs:
+        raise ValueError("percentile of empty sequence")
+    rank = max(1, math.ceil(len(xs) * q / 100.0))
+    return float(xs[min(rank, len(xs)) - 1])

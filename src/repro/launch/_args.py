@@ -1,0 +1,36 @@
+"""Shared launcher argparse plumbing.
+
+Both launch CLIs (``repro.launch.train``, ``repro.launch.serve``) take
+the compression plan as ``--comm-spec`` with ``--policy`` as a
+deprecated alias.  The alias is resolved in exactly one place so the
+deprecation surface stays consistent: a DeprecationWarning fires only
+when ``--policy`` was EXPLICITLY passed (its argparse default must be
+None), and an explicit ``--comm-spec`` always wins over the alias.
+"""
+from __future__ import annotations
+
+import warnings
+
+DEFAULT_SPEC = "taco"
+
+
+def add_policy_alias(ap) -> None:
+    """Register the deprecated ``--policy`` alias (default None so that
+    :func:`resolve_comm_spec` can tell 'passed' from 'defaulted')."""
+    ap.add_argument("--policy", default=None,
+                    help="deprecated alias for --comm-spec")
+
+
+def resolve_comm_spec(args, default: str = DEFAULT_SPEC) -> str:
+    """The effective comm spec string from parsed launcher args.
+
+    Precedence: explicit ``--comm-spec`` > explicit ``--policy``
+    (with a DeprecationWarning) > ``default``.
+    """
+    if getattr(args, "policy", None) is not None:
+        warnings.warn(
+            "--policy is deprecated; use --comm-spec",
+            DeprecationWarning, stacklevel=2)
+        if args.comm_spec is None:
+            return args.policy
+    return args.comm_spec if args.comm_spec is not None else default

@@ -16,6 +16,7 @@ from repro.configs import get_config, make_plan, smoke_config
 from repro.core.parallel import ParallelCtx
 from repro.core.registry import from_spec, to_spec
 from repro.data.pipeline import DataConfig, SyntheticLM
+from repro.launch._args import add_policy_alias, resolve_comm_spec
 from repro.launch.mesh import make_mesh, mesh_axis_info
 from repro.models.model import Model
 from repro.optim.adamw import OptConfig
@@ -39,8 +40,7 @@ def main():
                          "ring-overlap transport, 'schedule=serial' its "
                          "hoisted stage order for A/B runs (default "
                          "pipelined; see docs/COMPRESSION.md)")
-    ap.add_argument("--policy", default="taco",
-                    help="deprecated alias for --comm-spec")
+    add_policy_alias(ap)
     ap.add_argument("--lr", type=float, default=3e-4)
     ap.add_argument("--ckpt", default="/tmp/repro_train_ckpt")
     ap.add_argument("--resume", action="store_true", default=True)
@@ -57,8 +57,7 @@ def main():
         cfg = smoke_config(cfg)
     plan = make_plan(cfg, tp, fsdp)
     model = Model(cfg, plan, fsdp_axes=fsdp_axes, tp_axis=tp_axis)
-    comm_plan = from_spec(args.comm_spec if args.comm_spec is not None
-                          else args.policy)
+    comm_plan = from_spec(resolve_comm_spec(args))
     ctx = ParallelCtx(tp_axis=tp_axis, fsdp_axes=fsdp_axes, plan=comm_plan)
 
     seq = args.seq or (64 if args.smoke else 4096)

@@ -251,19 +251,35 @@ def attention_apply(x_full, p, cfg, plan, ctx, *, causal=True,
 def attention_decode(x, p, cfg, plan, ctx, cache, pos):
     """x (B, 1, D) full-D; cache dict {k,v}: (B, S_cache, kv_local, hd).
     Returns (partial_out (B,1,D), new_cache). SWA uses a ring buffer of
-    width ``window`` (cache S_cache == window)."""
+    width ``window`` (cache S_cache == window).
+
+    ``pos`` is either a scalar (every sequence at the same position — the
+    classic fixed-batch loop) or a (B,) vector of per-slot positions (the
+    continuous-batching engine, where in-flight requests sit at different
+    depths).  Both paths compute bit-identical per-row results: the
+    vector path's masked cache write selects exactly the values the
+    scalar path's dynamic_update_slice stores."""
     b = x.shape[0]
     hd = cfg.hd
-    q, k_new, v_new = qkv_project(x, p, cfg, plan, ctx,
-                                  positions=jnp.full((1,), pos))
+    per_slot = jnp.ndim(pos) == 1
+    q, k_new, v_new = qkv_project(
+        x, p, cfg, plan, ctx,
+        positions=pos[:, None] if per_slot else jnp.full((1,), pos))
     s_cache = cache["k"].shape[1]
     slot = pos % s_cache if cfg.window is not None else pos
-    k = jax.lax.dynamic_update_slice_in_dim(cache["k"],
-                                            k_new.astype(cache["k"].dtype),
-                                            slot, axis=1)
-    v = jax.lax.dynamic_update_slice_in_dim(cache["v"],
-                                            v_new.astype(cache["v"].dtype),
-                                            slot, axis=1)
+    if per_slot:
+        # each batch row writes its own cache position: masked write over
+        # the length axis (O(S) select, value-identical to the slice
+        # update the scalar path performs)
+        hit = jnp.arange(s_cache)[None, :] == slot[:, None]   # (B, S)
+        wr = hit[:, :, None, None]
+        k = jnp.where(wr, k_new.astype(cache["k"].dtype), cache["k"])
+        v = jnp.where(wr, v_new.astype(cache["v"].dtype), cache["v"])
+    else:
+        k = jax.lax.dynamic_update_slice_in_dim(
+            cache["k"], k_new.astype(cache["k"].dtype), slot, axis=1)
+        v = jax.lax.dynamic_update_slice_in_dim(
+            cache["v"], v_new.astype(cache["v"].dtype), slot, axis=1)
     new_cache = {"k": k, "v": v}
     ke = _expand_kv(k, plan, ctx, cfg)
     ve = _expand_kv(v, plan, ctx, cfg)
@@ -275,15 +291,17 @@ def attention_decode(x, p, cfg, plan, ctx, cache, pos):
     qf = q.astype(acc_t) * scale                           # (B,1,H,hd)
     scores = jnp.einsum("bqhd,bshd->bhqs", qf,
                         ke.astype(acc_t)).astype(jnp.float32)
-    kv_pos = jnp.arange(s_cache)
+    kv_pos = jnp.arange(s_cache)[None, :]                  # (1, S)
+    pos_c = pos[:, None] if per_slot else \
+        jnp.reshape(jnp.asarray(pos), (1, 1))              # (B|1, 1)
     if cfg.window is not None:
         # ring buffer: slot j holds position pos - ((pos - j) mod W);
         # valid iff that position has been written (>= 0)
-        age = jnp.mod(pos - kv_pos, s_cache)
-        valid = age <= pos
+        age = jnp.mod(pos_c - kv_pos, s_cache)
+        valid = age <= pos_c
     else:
-        valid = kv_pos <= pos
-    scores = jnp.where(valid[None, None, None, :], scores, NEG_INF)
+        valid = kv_pos <= pos_c
+    scores = jnp.where(valid[:, None, None, :], scores, NEG_INF)
     probs = jax.nn.softmax(scores, axis=-1)
     out = jnp.einsum("bhqs,bshd->bqhd", probs.astype(acc_t),
                      ve.astype(acc_t))

@@ -1,0 +1,343 @@
+"""Continuous-batching serving engine with prefill/decode disaggregation.
+
+The engine turns the single-step decode path (``serve_step.py``) into a
+request-serving system on THREE compiled functions, all traced once and
+reused across arbitrary request churn:
+
+  * **decode step** — the full fixed-shape slot table (``max_batch``
+    rows) advances one token per tick with a PER-SLOT position vector
+    (each in-flight request sits at its own depth; inactive rows run
+    masked garbage).  Every TP hop goes through the compressed
+    collectives on ``ctx`` (``tp_g`` — the two-shot AllReduce the paper
+    measures), so the codec spec is on the decode hot path where Flash
+    Communication shows the latency lives.
+  * **prefill steps** — one compiled scan per BUCKET length processes a
+    prompt chunk for a single request on a private one-row cache.  Long
+    prompts advance one chunk per engine tick, interleaved with decode
+    ticks, so a long arrival never stalls the in-flight batch
+    (prefill/decode disaggregation).  Invalid (padding) scan steps are
+    masked to a cache no-op, keeping the written KV bit-identical to
+    stepwise decode.
+  * **install** — a finished prefill's one-row cache is spliced into the
+    slot table row (``dynamic_update_slice`` on the batch axis), after
+    which the slot joins the next decode tick.
+
+Retirement, admission (via the :class:`~repro.serve.kv_pager.KVPager`),
+and prefill advancement all happen on the host BETWEEN jit'd steps —
+shapes never change, so after warmup each compiled step is traced
+exactly once (asserted by tests/test_serve_engine.py and gated by the
+``recompiles=`` field of the ``serve/*`` bench rows).
+
+Telemetry: per-request rows (queue wait, prefill s, per-token decode s,
+achieved wire bytes) flow through the same ``repro.core.telemetry``
+reporter layer the trainer uses — one observability stream for the
+future adaptive-compression controller.
+
+The engine is a single-controller design: one process drives the mesh
+(TP sharding is fine; run one engine per data replica for DP serving).
+"""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import NamedSharding
+from jax.sharding import PartitionSpec as P
+
+from repro import compat
+from repro.compat import shard_map
+from repro.core import telemetry
+from repro.serve import serve_step as ss
+from repro.serve.kv_pager import KVPager
+from repro.serve.scheduler import DECODE, PREFILL, Request, Scheduler
+
+DEFAULT_BUCKETS = (8, 32)
+
+
+def _tp_hops_per_token(cfg) -> int:
+    """Compressed tp_g AllReduce hops one decode token crosses (embed +
+    per-layer block outputs; see serve_step._decode_block)."""
+    per_layer = 3 if cfg.family == "encdec" else 2
+    return cfg.n_layers * per_layer + 1
+
+
+class ServeEngine:
+    """Continuous-batching engine over a fixed-shape slot table."""
+
+    def __init__(self, model, mesh, ctx, params, *, max_batch: int = 4,
+                 max_len: int = 64, block: int = 16,
+                 total_blocks: int | None = None,
+                 prefill_buckets=DEFAULT_BUCKETS,
+                 collect_logits: bool = False, reporter=None):
+        self.model, self.mesh, self.ctx = model, mesh, ctx
+        self.params = params
+        self.max_batch, self.max_len = int(max_batch), int(max_len)
+        self.buckets = tuple(sorted(set(int(b) for b in prefill_buckets)))
+        if not self.buckets:
+            raise ValueError("need at least one prefill bucket length")
+        self.collect_logits = collect_logits
+        self.reporter = reporter if reporter is not None \
+            else telemetry.Reporter()
+
+        self.pager = KVPager(self.max_batch, self.max_len, block=block,
+                             total_blocks=total_blocks)
+        self.sched = Scheduler(self.pager)
+
+        self._pspecs = model.partition_specs()
+        dp = model.fsdp_axes if len(model.fsdp_axes) > 1 else \
+            (model.fsdp_axes[0] if model.fsdp_axes else None)
+        self._dp = dp
+        self.cache = self._place_cache(
+            ss.init_cache(model, self.max_batch, self.max_len))
+
+        # host-side slot table: current token + per-slot position
+        self.slot_tok = np.zeros((self.max_batch, 1), np.int32)
+        self.slot_pos = np.zeros((self.max_batch,), np.int32)
+
+        self._decode_traces = 0
+        self._decode_fn = self._build_decode_step()
+        self._prefill_fns: dict[int, object] = {}
+        self._install_fn = self._build_install()
+        self._extract_fn = self._build_extract()
+        self.ticks = 0
+        self.decode_steps = 0
+        self._t0 = time.monotonic()
+
+    # ---- compiled pieces ---------------------------------------------------
+    def _place_cache(self, cache):
+        return compat.tree_map(
+            lambda x, s: jax.device_put(x, NamedSharding(self.mesh, s)),
+            cache, ss.cache_pspecs(self.model))
+
+    def _build_decode_step(self):
+        model, ctx, dp = self.model, self.ctx, self._dp
+        cspecs = ss.cache_pspecs(model)
+        collect = self.collect_logits
+
+        def step(params, cache, token, pos):
+            return ss.decode_forward(params, token, cache, pos, model, ctx,
+                                     return_logits=collect)
+
+        out_specs = (P(dp), cspecs)
+        if collect:
+            out_specs += (P(dp, None, ctx.tp_axis),)
+        sharded = shard_map(
+            step, mesh=self.mesh,
+            in_specs=(self._pspecs, cspecs, P(dp), P(dp)),
+            out_specs=out_specs, check_vma=False)
+
+        def counted(params, cache, token, pos):
+            # trace-time side effect: this Python body runs once per jit
+            # (re)trace, so _decode_traces is the ground-truth compile
+            # count (the C++ signature cache can grow an entry for a mere
+            # committed-ness difference while reusing the executable)
+            self._decode_traces += 1
+            return sharded(params, cache, token, pos)
+        return jax.jit(counted, donate_argnums=(1,))
+
+    def _build_prefill_step(self, bucket: int):
+        model, ctx = self.model, self.ctx
+        cspecs = ss.cache_pspecs(model)
+
+        def pre(params, cache, tokens, start, valid_len):
+            """tokens (1, bucket) padded prompt chunk; start = absolute
+            position of tokens[:, 0]; steps with t >= valid_len are
+            masked to a cache no-op (padding never pollutes the KV)."""
+            last0 = jnp.zeros((1, 1), jnp.int32)
+
+            def body(carry, t):
+                cache, last = carry
+                tok = jax.lax.dynamic_slice_in_dim(tokens, t, 1, axis=1)
+                nxt, nc = ss.decode_forward(params, tok, cache, start + t,
+                                            model, ctx)
+                ok = t < valid_len
+                cache = compat.tree_map(
+                    lambda n, o: jnp.where(ok, n, o), nc, cache)
+                last = jnp.where(t == valid_len - 1, nxt, last)
+                return (cache, last), None
+
+            (cache, last), _ = jax.lax.scan(body, (cache, last0),
+                                            jnp.arange(bucket))
+            return cache, last
+
+        sharded = shard_map(
+            pre, mesh=self.mesh,
+            in_specs=(self._pspecs, cspecs, P(), P(), P()),
+            out_specs=(cspecs, P()), check_vma=False)
+        return jax.jit(sharded, donate_argnums=(1,))
+
+    def _prefill_fn(self, bucket: int):
+        fn = self._prefill_fns.get(bucket)
+        if fn is None:
+            fn = self._prefill_fns[bucket] = self._build_prefill_step(bucket)
+        return fn
+
+    def _build_install(self):
+        # out_shardings pinned to the slot-table specs: the spliced cache
+        # must keep the EXACT sharding the decode step was traced with,
+        # or the first install would force a decode retrace
+        cshard = compat.tree_map(
+            lambda s: NamedSharding(self.mesh, s),
+            ss.cache_pspecs(self.model))
+
+        def install(cache, sub, slot):
+            return compat.tree_map(
+                lambda big, small: jax.lax.dynamic_update_slice_in_dim(
+                    big, small.astype(big.dtype), slot, axis=1),
+                cache, sub)
+        return jax.jit(install, donate_argnums=(0,), out_shardings=cshard)
+
+    def _build_extract(self):
+        def extract(cache, slot):
+            return compat.tree_map(
+                lambda big: jax.lax.dynamic_slice_in_dim(
+                    big, slot, 1, axis=1), cache)
+        return jax.jit(extract)
+
+    def extract_slot(self, slot: int):
+        """One-row view of a slot's paged cache (tests / prefix reuse)."""
+        return self._extract_fn(self.cache, jnp.asarray(slot, jnp.int32))
+
+    # ---- request API -------------------------------------------------------
+    def submit(self, prompt, max_new: int = 16, eos: int | None = None,
+               now: float | None = None) -> Request:
+        return self.sched.submit(prompt, max_new=max_new, eos=eos,
+                                 arrival=self._now(now))
+
+    def _now(self, now: float | None) -> float:
+        return time.monotonic() - self._t0 if now is None else float(now)
+
+    # ---- prefill advancement ----------------------------------------------
+    def _bucket_for(self, n: int) -> int:
+        for b in self.buckets:
+            if b >= n:
+                return b
+        return self.buckets[-1]
+
+    def _advance_prefill(self, req: Request, now: float | None) -> None:
+        """Advance ``req`` by one prefill chunk.  ``now`` None means the
+        engine runs on its real clock — the first-token stamp is then
+        taken AFTER the device work so prefill_s includes it."""
+        if not hasattr(req, "_pcache"):
+            req._pcache = self._place_cache(
+                ss.init_cache(self.model, 1, self.max_len))
+        remaining = req.prompt_len - req.prefill_done
+        bucket = self._bucket_for(remaining)
+        chunk = min(remaining, bucket)
+        toks = np.zeros((1, bucket), np.int32)
+        toks[0, :chunk] = req.prompt[req.prefill_done:
+                                     req.prefill_done + chunk]
+        fn = self._prefill_fn(bucket)
+        req._pcache, last = fn(self.params, req._pcache,
+                               jnp.asarray(toks),
+                               jnp.asarray(req.prefill_done, jnp.int32),
+                               jnp.asarray(chunk, jnp.int32))
+        req.prefill_done += chunk
+        if req.prefill_done >= req.prompt_len:
+            # splice the prefilled row into the slot table; the slot
+            # joins THIS tick's decode step
+            self.cache = self._install_fn(self.cache, req._pcache,
+                                          jnp.asarray(req.slot, jnp.int32))
+            del req._pcache
+            first = int(np.asarray(last)[0, 0])
+            req.tokens.append(first)
+            req.t_first_token = self._now(now)
+            req.state = DECODE
+            self.slot_tok[req.slot, 0] = first
+            self.slot_pos[req.slot] = req.prompt_len
+
+    # ---- decode tick -------------------------------------------------------
+    def _decode_tick(self, now: float) -> None:
+        tok = jnp.asarray(self.slot_tok)
+        pos = jnp.asarray(self.slot_pos)
+        t0 = time.perf_counter()
+        out = self._decode_fn(self.params, self.cache, tok, pos)
+        nxt, self.cache = out[0], out[1]
+        nxt = np.asarray(jax.block_until_ready(nxt))
+        dt = time.perf_counter() - t0
+        logits = np.asarray(out[2]) if self.collect_logits else None
+        self.decode_steps += 1
+        for req in self.sched.decoding():
+            s = req.slot
+            tok_id = int(nxt[s, 0])
+            req.tokens.append(tok_id)
+            req.decode_ticks.append(dt)
+            if logits is not None:
+                req.logit_rows = getattr(req, "logit_rows", [])
+                req.logit_rows.append(logits[s])
+            self.slot_tok[s, 0] = tok_id
+            # this tick wrote kv at position pos: the row now holds
+            # pos+1 tokens; the NEXT tick needs position pos+1 < max_len
+            used = int(self.slot_pos[s]) + 1
+            if self.pager.extend(s, used) and used < self.max_len:
+                self.slot_pos[s] += 1
+            else:                                 # out of cache: truncate
+                req.max_new = len(req.tokens)
+        self.reporter.count("serve/decode_ticks")
+
+    # ---- the engine loop ---------------------------------------------------
+    def tick(self, now: float | None = None) -> bool:
+        """One scheduling round: retire -> admit -> prefill -> decode.
+        Returns False when there was nothing to do (engine idle)."""
+        explicit = now is not None
+        now = self._now(now)
+        self.ticks += 1
+        for req in self.sched.retire_finished(now=now):
+            self._emit_request_row(req)
+        self.sched.admit(now=now)
+        for req in self.sched.prefilling():
+            self._advance_prefill(req, now if explicit else None)
+        for req in self.sched.retire_finished(now=now):
+            self._emit_request_row(req)    # max_new == 1: done at prefill
+        if self.sched.decoding():
+            self._decode_tick(now)
+            return True
+        return bool(self.sched.prefilling() or self.sched.queue)
+
+    def run_until_drained(self, max_ticks: int = 100_000) -> list[Request]:
+        """Drive ticks until queue + slot table are empty; returns the
+        retired requests in completion order."""
+        for _ in range(max_ticks):
+            if self.sched.idle():
+                break
+            self.tick()
+        else:
+            raise RuntimeError("engine failed to drain "
+                               f"within {max_ticks} ticks")
+        return self.sched.done
+
+    # ---- telemetry ---------------------------------------------------------
+    def _emit_request_row(self, req: Request) -> None:
+        row = req.latency_row()
+        bpe = self.ctx.plan.wire_bytes_per_element().get("tp_fwd", 2.0)
+        hops = _tp_hops_per_token(self.model.cfg)
+        row["wire_bytes_per_tok"] = bpe * self.model.cfg.d_model * hops
+        row["wire_bytes"] = row["wire_bytes_per_tok"] * row["new_tokens"]
+        self.reporter.event("serve/request", **row)
+
+    def recompiles_after_warmup(self) -> int:
+        """Decode-step traces beyond the single warmup trace (0 = the
+        slot table held its shape across all churn and the compiled step
+        was reused every tick)."""
+        return max(0, self._decode_traces - 1)
+
+    def summary(self) -> dict:
+        rows = self.reporter.of_kind("serve/request")
+        out = dict(self.sched.stats(), ticks=self.ticks,
+                   decode_steps=self.decode_steps,
+                   recompiles=self.recompiles_after_warmup(),
+                   requests=len(rows))
+        out.update(telemetry.comm_metrics(
+            self.ctx.plan, spec=None))
+        if rows:
+            per_tok = [r["decode_s_per_tok"] for r in rows
+                       if r["decode_s_per_tok"] is not None]
+            if per_tok:
+                out["decode_ms_per_tok_p50"] = \
+                    telemetry.percentile(per_tok, 50) * 1e3
+                out["decode_ms_per_tok_p99"] = \
+                    telemetry.percentile(per_tok, 99) * 1e3
+            out["total_new_tokens"] = sum(r["new_tokens"] for r in rows)
+        return out

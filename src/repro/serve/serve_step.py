@@ -204,10 +204,15 @@ def _cross_decode(h, p, cache_l, cfg, plan, ctx):
 # the serve step
 # --------------------------------------------------------------------------
 
-def decode_forward(params, token, cache, pos, model, ctx, label=None):
-    """token (B,1) -> (next_token (B,1), new_cache[, nll]). Inside
-    shard_map. ``label``: optional (B,1) ground-truth next token — returns
-    its distributed NLL (prefill-vs-decode consistency tests)."""
+def decode_forward(params, token, cache, pos, model, ctx, label=None,
+                   return_logits=False):
+    """token (B,1) -> (next_token (B,1), new_cache[, nll][, logits]).
+    Inside shard_map. ``pos`` is a scalar position shared by the batch or
+    a (B,) vector of per-slot positions (continuous batching — see
+    serve/engine.py). ``label``: optional (B,1) ground-truth next token —
+    returns its distributed NLL (prefill-vs-decode consistency tests).
+    ``return_logits`` appends the local (B,1,V/tp) logit shard (parity
+    tests; the serving engine never materializes it)."""
     cfg, plan = model.cfg, model.plan
     emb = embed_partial(token, params["embed"]["table"], ctx)
     x = ctx.tp_g(emb)
@@ -243,6 +248,8 @@ def decode_forward(params, token, cache, pos, model, ctx, label=None):
     logits = lm_head_logits(x, head_table(params, cfg), ctx)
     nxt = distributed_argmax(logits, ctx)
     if label is None:
+        if return_logits:
+            return nxt.astype(jnp.int32), new_cache, logits
         return nxt.astype(jnp.int32), new_cache
     from repro.core.collectives import psum_exact
     v_loc = logits.shape[-1]
@@ -256,23 +263,32 @@ def decode_forward(params, token, cache, pos, model, ctx, label=None):
         logits, jnp.clip(shifted, 0, v_loc - 1)[..., None], axis=-1)[..., 0]
     ll = psum_exact(jnp.where(valid, picked, 0.0), ctx.tp_axis)
     nll = jnp.log(z) + m - ll
+    if return_logits:
+        return nxt.astype(jnp.int32), new_cache, nll, logits
     return nxt.astype(jnp.int32), new_cache, nll
 
 
 def _decode_positional(x, params, cfg, ctx, pos):
-    from repro.models.layers import sinusoid_pos
+    """Positional term at decode position(s) ``pos`` — scalar (shared) or
+    (B,) per-slot vector.  Returns x + pe with pe broadcast (1|B, 1, D)."""
+    per_slot = jnp.ndim(pos) == 1
     if cfg.pos == "learned":
         table = ctx.weight_gather(params["pos_embed"], 0)
-        pe = jax.lax.dynamic_slice_in_dim(table, pos, 1, axis=0)
+        if per_slot:
+            pe = jnp.take(table, pos, axis=0)[:, None]       # (B,1,D)
+        else:
+            pe = jax.lax.dynamic_slice_in_dim(table, pos, 1, axis=0)[None]
     else:
         # sinusoid at a traced position: compute directly
         import numpy as np
         d = cfg.d_model
         div = jnp.exp(jnp.arange(0, d, 2) / d * -np.log(10000.0))
-        ang = jnp.asarray(pos, jnp.float32) * div
-        pe = jnp.zeros((1, d), jnp.float32)
-        pe = pe.at[0, 0::2].set(jnp.sin(ang)).at[0, 1::2].set(jnp.cos(ang))
-    return x + pe[None].astype(x.dtype)
+        ang = jnp.asarray(pos, jnp.float32)[..., None] * div  # (B|, d/2)
+        sin, cos = jnp.sin(ang), jnp.cos(ang)
+        pe = jnp.zeros(ang.shape[:-1] + (d,), jnp.float32)
+        pe = pe.at[..., 0::2].set(sin).at[..., 1::2].set(cos)
+        pe = pe[:, None] if per_slot else pe[None, None]      # (B|1,1,D)
+    return x + pe.astype(x.dtype)
 
 
 def build_serve_step(model, mesh, ctx):

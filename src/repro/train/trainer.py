@@ -24,7 +24,7 @@ import numpy as np
 
 from repro import compat
 from repro.ckpt import checkpoint as ckpt
-from repro.core import collectives as cc
+from repro.core import telemetry
 from repro.core.registry import to_spec
 from repro.data.pipeline import DataConfig, SyntheticLM
 from repro.optim import adamw
@@ -33,28 +33,6 @@ from repro.runtime.fault_tolerance import (FailureInjector, RetryPolicy,
 from repro.train.train_step import build_train_step
 
 log = logging.getLogger("repro.trainer")
-
-
-_PROBE_RATIO_CACHE: dict = {}
-
-
-def _achieved_probe_ratio(codec) -> float:
-    """Achieved/slot byte fraction of ``codec`` on an all-zero probe slot
-    — the near-zero-payload FLOOR of its variable wire layout (what the
-    achieved telemetry converges to as padding dominates a batch).  Runs
-    one encode on device, so results are cached per codec; only
-    meaningful for variable layouts (callers gate on
-    ``CommPlan.wire_variable``)."""
-    cached = _PROBE_RATIO_CACHE.get(codec)
-    if cached is None:
-        import jax.numpy as jnp
-        n = 4 * codec.granule
-        probe = jnp.zeros((1, n), jnp.bfloat16)
-        ach = cc.achieved_slot_bytes(codec, probe)
-        slot = cc.wire_slot_bytes(codec, n)
-        cached = float(ach[0]) / float(slot)
-        _PROBE_RATIO_CACHE[codec] = cached
-    return cached
 
 
 @dataclasses.dataclass
@@ -142,23 +120,11 @@ class Trainer:
                 self.watchdog.observe(dt)
                 self.losses.append(loss)
                 # per-path wire-byte telemetry for the plan that actually
-                # ran this step (static — no extra device work)
-                metrics["comm/spec"] = self.comm_spec
-                metrics["comm/warmup_active"] = \
-                    1.0 if plan != self.ctx.plan.steady() else 0.0
-                for path, bpe in plan.wire_bytes_per_element().items():
-                    metrics[f"comm/{path}_bytes_per_elem"] = bpe
-                for path, nc in plan.wire_chunks().items():
-                    if nc != 1:   # chunked ring transport active on path
-                        metrics[f"comm/{path}_chunks"] = nc
-                for path, var in plan.wire_variable().items():
-                    if var:   # bounded-but-ragged wire layout on path:
-                        # bytes_per_elem above is the slot BOUND; surface
-                        # the flag plus the all-zero achieved floor
-                        # (cached — one probe encode per codec)
-                        metrics[f"comm/{path}_wire_variable"] = 1.0
-                        metrics[f"comm/{path}_achieved_floor_ratio"] = \
-                            _achieved_probe_ratio(getattr(plan, path))
+                # ran this step (static — no extra device work); shared
+                # key set with the serving engine's run summary
+                metrics.update(telemetry.comm_metrics(
+                    plan, spec=self.comm_spec,
+                    warmup_active=plan != self.ctx.plan.steady()))
                 if step % self.tc.log_every == 0:
                     log.info("step %d loss %.4f gnorm %.3f lr %.2e (%.2fs) "
                              "tp_wire %.3fB/elem",

@@ -172,9 +172,9 @@ def test_stage_registry_lists_zle():
         codec_from_spec("none+zle")
 
 
-def test_trainer_achieved_floor_probe():
-    from repro.train.trainer import _achieved_probe_ratio
+def test_telemetry_achieved_floor_probe():
+    from repro.core.telemetry import achieved_probe_ratio
     hybrid = codec_from_spec("taco+zle:jnp")
-    r = _achieved_probe_ratio(hybrid)
+    r = achieved_probe_ratio(hybrid)
     assert 0.0 < r < 1.0                      # zeros compact below the bound
-    assert _achieved_probe_ratio(hybrid) == r  # cached (same codec key)
+    assert achieved_probe_ratio(hybrid) == r  # cached (same codec key)

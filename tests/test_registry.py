@@ -278,3 +278,32 @@ def test_identity_plan_hlo_free_of_codec_ops():
     assert "f8e4" not in base and "f8e5" not in base
     taco = _lowered_eval_text("tp=taco:jnp").lower()
     assert "f8e4" in taco                        # fp8 wire payload present
+
+
+def test_launcher_policy_alias_resolver():
+    """Both launch CLIs route the deprecated --policy flag through one
+    resolver: explicit --comm-spec wins, explicit --policy warns, and an
+    untouched default emits no deprecation noise."""
+    import argparse
+    import warnings
+
+    from repro.launch._args import add_policy_alias, resolve_comm_spec
+
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--comm-spec", default=None, dest="comm_spec")
+    add_policy_alias(ap)
+
+    with warnings.catch_warnings():
+        warnings.simplefilter("error")       # any warning -> failure
+        assert resolve_comm_spec(ap.parse_args([])) == "taco"
+        assert resolve_comm_spec(
+            ap.parse_args(["--comm-spec", "tp=taco:chunks=4"])) == \
+            "tp=taco:chunks=4"
+
+    with pytest.warns(DeprecationWarning):
+        assert resolve_comm_spec(
+            ap.parse_args(["--policy", "baseline"])) == "baseline"
+    with pytest.warns(DeprecationWarning):
+        # explicit --comm-spec still wins over the alias
+        assert resolve_comm_spec(ap.parse_args(
+            ["--policy", "baseline", "--comm-spec", "tp=taco"])) == "tp=taco"
