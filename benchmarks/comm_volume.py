@@ -14,8 +14,18 @@ trailing token rows are exact zeros, as sequence padding produces.  Each
 row reports the static slot ratio (what the lax collective moves — the
 bound), the achieved ratio (length-header bytes — what a ragged-aware
 fabric would move), and the order-0 byte entropy of the shipped wire
-(the remaining headroom an entropy-coder tier could claim).  These rows
-are gated by scripts/check_bench_regression.py like any other.
+(the remaining headroom an entropy-coder tier could claim).
+
+A third family, ``comm_volume/moved/...``, measures what the slot
+RENEGOTIATION protocol (``collectives.SlotController``, ``slot=auto``)
+actually puts on the wire for the same workloads: the static slot bound,
+the controller's negotiated moved bytes (watermark x headroom, snapped
+to the 1/32 fraction grid), and the achieved bytes underneath.  The
+``moved_bytes`` field is gated by scripts/check_bench_regression.py
+(moved may not regress above baseline x 1.02), and the pad94 rows back
+the acceptance bound moved <= 0.6x slot.  All three families use
+deterministic fixed-seed data sized quick-agnostically, so the values
+are bit-stable across --quick and full runs.
 """
 from __future__ import annotations
 
@@ -86,6 +96,50 @@ def achieved_rows(quick=False):
                  f"entropy_bits_per_byte={ent:.2f}")
 
 
+def moved_rows(quick=False):
+    """Emit moved-vs-slot-vs-achieved rows for ``slot=auto`` hybrid
+    stacks: a :class:`~repro.core.collectives.SlotController` observes
+    one padded-batch step (``observe_sample`` — the same probe stream
+    the transport emits), renegotiates, and the row reports the bytes a
+    hop under the negotiated plan would move next step.  Deterministic
+    like the achieved rows, so ``moved_bytes`` is gated exactly."""
+    import jax.numpy as jnp
+
+    from repro.core import collectives as cc
+
+    del quick              # cheap either way; keep rows gate-comparable
+    rows = 128
+    d_model = 1024
+    rng = np.random.default_rng(0)
+    base = rng.standard_normal((rows, d_model)).astype(np.float32)
+    specs = {
+        "taco_zle": "taco+zle:jnp:slot=auto",
+        "taco_zle_c4": "taco+zle:jnp:slot=auto:chunks=4",
+    }
+    for pct in (0, 50, 94):
+        x = base.copy()
+        k = rows * pct // 100
+        if k:
+            x[rows - k:] = 0.0          # trailing padding tokens
+        flat = jnp.asarray(x, jnp.bfloat16).reshape(1, -1)
+        n = flat.shape[-1]
+        for name, spec in specs.items():
+            codec = codec_from_spec(spec)
+            ctl = cc.SlotController()
+            ctl.observe_sample(codec, flat)
+            ctl.finish_step()
+            neg = ctl.negotiate(codec)
+            slot = cc.wire_slot_bytes(codec, n)
+            moved = cc.moved_slot_bytes(neg, n)
+            ach = float(np.asarray(
+                cc.achieved_slot_bytes(codec, flat))[0])
+            emit(f"comm_volume/moved/pad{pct}/{name}", None,
+                 f"slot_bytes={slot};moved_bytes={moved};"
+                 f"achieved_bytes={int(ach)};"
+                 f"moved_vs_slot={moved / slot:.4f};"
+                 f"achieved_vs_slot={ach / slot:.4f}")
+
+
 def run(out_dir="results/bench", quick=False):
     codecs = {
         "baseline_bf16": codec_from_spec("none"),
@@ -112,3 +166,4 @@ def run(out_dir="results/bench", quick=False):
                      f"wire_GB_per_step={by/1e9:.2f};vs_bf16={ratio:.2f}x;"
                      f"ici_ms={ici_ms:.1f}{extra}")
     achieved_rows(quick=quick)
+    moved_rows(quick=quick)

@@ -24,6 +24,12 @@ Compares a fresh ``benchmarks.run --json`` output against the committed
      not noise), and its p50 may not exceed 5x the committed baseline
      (absolute CPU timings are noisy; a 5x blowup is a lost compiled
      path).  Missing serve rows fail via the row-presence gate above.
+  5. MOVED BYTES — rows carrying a ``moved_bytes=<N>`` value (the slot
+     renegotiation protocol's negotiated wire bound on the deterministic
+     padded workloads, ``comm_volume/moved/...``) may not regress above
+     baseline x 1.02: the controller's watermark math is deterministic
+     on these rows, so growth means renegotiation got structurally
+     worse at right-sizing the moved slot.
 
 Timings are otherwise NOT compared (CI machines are noisy); only
 structure gates.
@@ -41,9 +47,11 @@ _COUNT = re.compile(r"(?:^|;)collectives=(\d+)(?:;|$)")
 _RATIO = re.compile(r"(?:^|;)achieved_ratio=([0-9.]+)x(?:;|$)")
 _P50 = re.compile(r"(?:^|;)p50_ms=([0-9.]+)(?:;|$)")
 _RECOMPILES = re.compile(r"(?:^|;)recompiles=(\d+)(?:;|$)")
+_MOVED = re.compile(r"(?:^|;)moved_bytes=(\d+)(?:;|$)")
 
 RATIO_TOLERANCE = 0.98   # new achieved_ratio must be >= 98% of baseline
 P50_BLOWUP = 5.0         # serve p50 gated only against catastrophe
+MOVED_TOLERANCE = 1.02   # negotiated moved bytes may not grow beyond 2%
 
 
 def _rows(payload: dict) -> dict:
@@ -128,6 +136,20 @@ def main(argv: list[str]) -> int:
               f"{base_path.name}:")
         print("\n".join(ratio_regr))
         return 1
+    # negotiated moved bytes: the renegotiation workloads are
+    # deterministic, so growth beyond the tolerance is structural
+    new_moved = _extract(new_rows, _MOVED, int)
+    base_moved = _extract(base_rows, _MOVED, int)
+    moved_regr = []
+    for name, moved in sorted(new_moved.items()):
+        want = base_moved.get(name)
+        if want is not None and moved > want * MOVED_TOLERANCE:
+            moved_regr.append(f"  {name}: {want} -> {moved} bytes")
+    if moved_regr:
+        print("FAIL: negotiated moved bytes regressed vs "
+              f"{base_path.name}:")
+        print("\n".join(moved_regr))
+        return 1
     # serving rows: recompiles must be exactly zero, p50 must exist and
     # stay within the catastrophic-blowup bound of the baseline
     serve_fail = []
@@ -156,9 +178,11 @@ def main(argv: list[str]) -> int:
         print("\n".join(serve_fail))
         return 1
     gated_ratios = sum(1 for n in new_ratio if n in base_ratio)
+    gated_moved = sum(1 for n in new_moved if n in base_moved)
     print(f"PASS: {checked} collective-count rows at or below the "
           f"{base_path.name} baseline, {gated_ratios} achieved-ratio "
-          f"rows within tolerance, {gated_serve} serving rows clean, "
+          f"rows within tolerance, {gated_moved} moved-bytes rows "
+          f"within tolerance, {gated_serve} serving rows clean, "
           f"no dropped rows "
           f"({len(new_rows) - len(set(new_rows) & set(base_rows))} new)")
     return 0

@@ -22,7 +22,12 @@ checks over README.md, ROADMAP.md, and every docs/*.md:
      included for the latter two.  Bare codec-STACK spans
      (``taco+zle:folded``: a ``+``-joined head whose base is a
      registered codec name) validate through ``codec_from_spec``, so
-     the hybrid-stack examples in docs/COMPRESSION.md stay parseable.
+     the hybrid-stack examples in docs/COMPRESSION.md stay parseable —
+     as does any registered-head span carrying a stage-claimed
+     renegotiation arg (``:slot=``, ``:headroom=``, ``:g=``), with or
+     without a ``+`` stage in the head, so the slot-renegotiation spec
+     examples are grammar-checked too.  Spans documented AS errors
+     (``none:chunks=4``) match neither shape and stay unlinted.
 
 Exits nonzero listing every violation.  Run directly:
 
@@ -53,6 +58,12 @@ _SPEC_SPAN = re.compile(
 # grammar; '+' spans with unregistered heads ("lossy+lossless" prose)
 # are left alone
 _STACK_SPAN = re.compile(r"^[a-z0-9_]+(?:\+[a-z0-9_]+)+(?::[^\s`]+)*$")
+# registered-head codec spans carrying a stage-claimed renegotiation
+# arg (`taco+zle:jnp:slot=auto`, and stage-less heads that must FAIL
+# to parse are deliberately excluded by requiring a registered head +
+# one of the claimed keys): grammar-checked through codec_from_spec
+_ARG_SPAN = re.compile(r"^[a-z0-9_]+(?:\+[a-z0-9_]+)*(?::[^\s`]+)+$")
+_STAGE_ARG = re.compile(r":(?:slot|headroom|g)=")
 _COMM_SPEC = re.compile(r"--comm-spec\s+(?:\"([^\"]+)\"|([^\s\"']+))")
 _FROM_SPEC = re.compile(r"from_spec\(\"([^\"]+)\"\)")
 
@@ -103,6 +114,9 @@ def check_specs(path: Path, prose: str, raw: str, errors: list[str]) -> None:
             specs.append(span)
         elif _STACK_SPAN.match(span) and \
                 span.split("+", 1)[0] in codec_names:
+            codec_specs.append(span)
+        elif _ARG_SPAN.match(span) and _STAGE_ARG.search(span) and \
+                span.split("+", 1)[0].split(":", 1)[0] in codec_names:
             codec_specs.append(span)
     for quoted, bare in _COMM_SPEC.findall(raw):
         specs.append(quoted or bare)

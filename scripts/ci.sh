@@ -32,6 +32,11 @@ fi
 python -m pytest -x -q tests/test_compat.py tests/test_registry.py \
     -k "not hlo"
 python -m pytest -x -q tests/test_overlap.py
+# Slot-renegotiation unit slice (spec grammar, negotiated-bound math,
+# controller state machine, one deterministic overflow/resync cycle) —
+# the full matrix (property test across transports + trainer
+# integration) is slow-marked and runs in the main invocation
+python -m pytest -x -q tests/test_slots.py -m "not slow"
 
 # Docs linter: every README/ROADMAP/docs link, referenced file path, and
 # embedded compression spec must resolve against the actual tree/grammar

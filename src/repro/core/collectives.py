@@ -37,12 +37,25 @@ the per-component transport for parity tests and benchmarks.
 Bounded-but-ragged slots: hybrid stacks (``taco+zle`` — see
 ``repro.core.lossless``) publish VARIABLE wire layouts, where the slot
 width is a static worst-case bound and a uint32 length header records
-the achieved (data-dependent) bytes.  The transport is agnostic — the
-lax collective moves the bound, still exactly one collective per hop —
-while the byte telemetry splits: ``wire_slot_bytes`` reports the bound
-the fabric carries today, ``achieved_slot_bytes`` (and the ``sample=``
-arg of the per-collective byte counters) the data-dependent payload a
-ragged-aware fabric would carry.
+the achieved (data-dependent) bytes.  The transport stays one collective
+per hop, but the bound it moves is RENEGOTIABLE: a codec with
+``slot="auto"`` carries a controller-set ``moved_frac`` (per-chunk
+fractions of the slot bound), each hop truncates its wire buffer to the
+negotiated width before the ONE lax collective and zero-repads after —
+bit-exact whenever every slot's achieved bytes fit the truncation,
+because a variable layout guarantees all bytes past the achieved width
+are zero.  Hops on auto codecs also probe their achieved bytes out of
+jit via ``jax.debug.callback``; the host-side :class:`SlotController`
+drains the probes between steps, tracks a decaying high-watermark per
+(codec, chunk), renegotiates ``moved_frac`` outside jit (like the
+trainer's warmup resolution — a handful of quantized fractions, so jit
+caches stay bounded), and on a per-hop OVERFLOW (achieved > negotiated)
+flags a one-step static-slot resync so the path stays lossless — never
+deadlocked, the worst case is one replayed step at the static bound.
+The byte telemetry splits three ways: ``wire_slot_bytes`` is the static
+bound, ``moved_slot_bytes`` the negotiated width the fabric carries,
+``achieved_slot_bytes`` (and the ``sample=`` arg of the per-collective
+byte counters) the data-dependent payload itself.
 
 Chunked ring overlap (Flash-Communication-style): codecs with
 ``chunks=N > 1`` route their all-gather / reduce-scatter through ring
@@ -70,9 +83,13 @@ stage, cf. MegaScale).
 """
 from __future__ import annotations
 
+import collections
 import contextlib
 import contextvars
+import dataclasses
 import functools
+import math
+import weakref
 
 import jax
 import jax.numpy as jnp
@@ -132,6 +149,83 @@ def _wire_layout(codec, n):
     return None if wl is None else wl(n)
 
 
+# --------------------------------------------------------------------------
+# slot renegotiation: negotiated widths, truncation, achieved-bytes probes
+# --------------------------------------------------------------------------
+
+#: Live SlotControllers (weak: a dropped controller needs no unregister).
+#: Probe callbacks fan observations out to every registered controller;
+#: with none registered the probes are inert.
+_CONTROLLERS: "weakref.WeakSet[SlotController]" = weakref.WeakSet()
+
+
+def _slot_key(codec):
+    """The codec with any negotiated ``moved_frac`` stripped — the stable
+    identity a controller tracks stats under (and the static-bound
+    variant a resync step runs against)."""
+    if getattr(codec, "moved_frac", None) is not None:
+        return dataclasses.replace(codec, moved_frac=None)
+    return codec
+
+
+def negotiated_wire_bytes(codec, n: int, *, chunk: int | None = None):
+    """Static MOVED byte width of one hop's wire buffer for an
+    ``n``-element slot under the codec's negotiated ``moved_frac``, or
+    None when the full slot bound moves (static layouts, un-negotiated
+    codecs).  ``chunk`` selects the ring chunk's fraction; ``chunk=None``
+    is a monolithic hop, which must cover every chunk's payload and so
+    takes the max fraction.  The width is clamped to the layout's
+    always-achieved floor (every component before the trailing data
+    region — a wire is never narrower than its header + metadata) and to
+    the slot bound."""
+    layout = _wire_layout(codec, n)
+    if layout is None or not layout.variable:
+        return None
+    frac = getattr(codec, "moved_frac", None)
+    if frac is None:
+        return None
+    f = max(frac) if chunk is None else frac[min(chunk, len(frac) - 1)]
+    floor = layout.components[-1].offset
+    return max(floor, min(layout.total_bytes,
+                          math.ceil(layout.total_bytes * f)))
+
+
+def _zero_repad(wire, total_bytes: int):
+    """Widen a truncated wire buffer back to the full slot bound with
+    zero bytes — the exact inverse of the truncation whenever the slot's
+    achieved bytes fit the moved width (variable layouts zero everything
+    past the achieved length, so the dropped tail WAS zero)."""
+    pad = total_bytes - wire.shape[-1]
+    if pad <= 0:
+        return wire
+    return jnp.pad(wire, [(0, 0)] * (wire.ndim - 1) + [(0, pad)])
+
+
+def _dispatch_probe(key, slot_bytes, moved_bytes, chunk, achieved):
+    """Host side of an achieved-bytes probe (runs via jax.debug.callback,
+    possibly on a runtime thread): enqueue on every live controller.
+    Appends to thread-safe deques only — controllers aggregate later,
+    under ``jax.effects_barrier`` in ``finish_step``."""
+    ach = int(achieved)
+    for ctl in list(_CONTROLLERS):
+        ctl._obs.append((key, chunk, slot_bytes, moved_bytes, ach))
+
+
+def _slot_probe(codec, layout, wire, moved_bytes: int, chunk: int) -> None:
+    """Emit one achieved-bytes observation for a hop's encoded wire (max
+    over the slot rows) when the codec opted into slot renegotiation.
+    The callback is an ordered effect OUTSIDE the jit dataflow — it adds
+    no collective and cannot perturb bit-parity; codecs with
+    ``slot="static"`` (the default) trace zero probes."""
+    if not layout.variable or getattr(codec, "slot", "static") != "auto":
+        return
+    mx = jnp.max(achieved_wire_bytes(wire, layout))
+    jax.debug.callback(
+        functools.partial(_dispatch_probe, _slot_key(codec),
+                          int(layout.total_bytes), int(moved_bytes),
+                          int(chunk)), mx)
+
+
 def _transport(x2d, codec, move, *, reduce=False, dtype):
     """Shared codec plumbing for every compressed collective: pad the
     trailing dim of ``x2d`` to the codec granule, encode straight into the
@@ -140,7 +234,13 @@ def _transport(x2d, codec, move, *, reduce=False, dtype):
     straight from the moved buffer — fused-summing the stacked peer axis
     when ``reduce`` — then crop the padding.  Codecs without a wire
     layout (or under :func:`multibuffer_wire`) fall back to one ``move``
-    per encoded component."""
+    per encoded component.
+
+    Negotiated-slot codecs move only ``negotiated_wire_bytes`` of the
+    bound: the wire is truncated before ``move`` and zero-repadded after
+    (bit-exact under the variable-layout zero-tail contract; the achieved
+    probe feeds the controller's overflow/resync protocol), still exactly
+    one lax collective."""
     padded, n = _pad_to(x2d, codec.granule)
     pn = padded.shape[-1]
     layout = _wire_layout(codec, pn) if _WIRE_PACKING.get() else None
@@ -149,7 +249,14 @@ def _transport(x2d, codec, move, *, reduce=False, dtype):
         if reduce:
             return codec.decode_sum(enc, pn, dtype)[:n]
         return codec.decode(enc, pn, dtype)[..., :n]
-    wire = move(codec.encode_wire(padded))
+    wire = codec.encode_wire(padded)
+    moved_b = negotiated_wire_bytes(codec, pn, chunk=None)
+    _slot_probe(codec, layout, wire,
+                layout.total_bytes if moved_b is None else moved_b, 0)
+    if moved_b is not None and moved_b < layout.total_bytes:
+        wire = _zero_repad(move(wire[..., :moved_b]), layout.total_bytes)
+    else:
+        wire = move(wire)
     if reduce:
         return codec.decode_sum_wire(wire, pn, dtype)[:n]
     return codec.decode_wire(wire, pn, dtype)[..., :n]
@@ -235,9 +342,21 @@ def _ag_one_ring(x, ax, dim, codec):
     c-1's fused decode can overlap chunk c's transfer; the stage emission
     order (pipelined with barrier fences vs hoisted serial) is the
     codec's ``schedule`` knob, dispatched through
-    :func:`repro.core.overlap.run_ring`."""
+    :func:`repro.core.overlap.run_ring`.
+
+    Negotiated-slot codecs make the ring RAGGED-AWARE: chunk ``c``'s
+    encode truncates its wire to ``negotiated_wire_bytes(..., chunk=c)``
+    (per-chunk achieved-byte mass, not an equal slot split), its
+    ``p-1`` ppermutes move the truncated buffer, and its decode
+    zero-repads before the usual wire decode — per-chunk stage closures
+    through :func:`overlap.run_ring`'s FIFO pairing, chunk ELEMENT
+    boundaries unchanged, bit-parity via the zero-tail contract."""
     p = axis_size(ax)
     segs, n0, csz = _chunk_slices(x.reshape(1, -1), codec)
+    layout = _wire_layout(codec, csz)
+    total = layout.total_bytes
+    moved = [negotiated_wire_bytes(codec, csz, chunk=c)
+             for c in range(len(segs))]
     ring = tuple((s, (s + 1) % p) for s in range(p))
     idx = jax.lax.axis_index(ax)
 
@@ -249,9 +368,25 @@ def _ag_one_ring(x, ax, dim, codec):
             arrivals.append(buf)
         return _peer_order(jnp.stack(arrivals)[:, 0], idx, p)   # (P, bytes)
 
+    def enc_for(c):
+        def enc(seg):
+            wire = codec.encode_wire(seg)
+            m = moved[c]
+            _slot_probe(codec, layout, wire, total if m is None else m, c)
+            return wire if m is None or m >= total else wire[..., :m]
+        return enc
+
+    def dec_for(c):
+        def dec(stack):
+            if moved[c] is not None and moved[c] < total:
+                stack = _zero_repad(stack, total)
+            return codec.decode_wire(stack, csz, x.dtype)
+        return dec
+
     outs = overlap.run_ring(
-        segs, encode=codec.encode_wire, transfer=transfer,
-        decode=lambda stack: codec.decode_wire(stack, csz, x.dtype),
+        segs, encode=[enc_for(c) for c in range(len(segs))],
+        transfer=transfer,
+        decode=[dec_for(c) for c in range(len(segs))],
         schedule=overlap.ring_schedule(codec))
     dec = (jnp.concatenate(outs, axis=-1) if len(outs) > 1
            else outs[0])[:, :n0]                                  # (P, n)
@@ -280,14 +415,18 @@ def _rs_one_ring(x, ax, dim, codec):
     (asserted in tests/multidev/check_parity.py), bit-parity unchanged.
     """
     p = axis_size(ax)
-    moved = jnp.moveaxis(x, dim, 0)
-    d = moved.shape[0]
+    rowsrc = jnp.moveaxis(x, dim, 0)
+    d = rowsrc.shape[0]
     if d % p:
         raise ValueError(
             f"compressed reduce-scatter: scatter dim {dim} has size {d}, "
             f"not divisible by axis {ax!r} of size {p}")
-    rows = moved.reshape(p, -1)                    # row j -> destined peer j
+    rows = rowsrc.reshape(p, -1)                   # row j -> destined peer j
     segs, n0, csz = _chunk_slices(rows, codec)
+    layout = _wire_layout(codec, csz)
+    total = layout.total_bytes
+    moved = [negotiated_wire_bytes(codec, csz, chunk=c)
+             for c in range(len(segs))]
     idx = jax.lax.axis_index(ax)
 
     def transfer(wire):
@@ -300,15 +439,29 @@ def _rs_one_ring(x, ax, dim, codec):
             arrivals.append(jax.lax.ppermute(sends[k], ax, shift))
         return _peer_order(jnp.stack(arrivals), idx, p)        # (P, bytes)
 
-    def decode(stack):
-        dec = codec.decode_sum_wire(stack, csz, x.dtype)
-        return dec.reshape(-1)[:csz]
+    def enc_for(c):
+        def enc(seg):
+            wire = codec.encode_wire(seg)
+            m = moved[c]
+            _slot_probe(codec, layout, wire, total if m is None else m, c)
+            return wire if m is None or m >= total else wire[..., :m]
+        return enc
+
+    def dec_for(c):
+        def dec(stack):
+            if moved[c] is not None and moved[c] < total:
+                stack = _zero_repad(stack, total)
+            out = codec.decode_sum_wire(stack, csz, x.dtype)
+            return out.reshape(-1)[:csz]
+        return dec
 
     outs = overlap.run_ring(
-        segs, encode=codec.encode_wire, transfer=transfer, decode=decode,
+        segs, encode=[enc_for(c) for c in range(len(segs))],
+        transfer=transfer,
+        decode=[dec_for(c) for c in range(len(segs))],
         schedule=overlap.ring_schedule(codec))
     summed = (jnp.concatenate(outs) if len(outs) > 1 else outs[0])[:n0]
-    out = summed.reshape(d // p, *moved.shape[1:])
+    out = summed.reshape(d // p, *rowsrc.shape[1:])
     return jnp.moveaxis(out, 0, dim) if dim != 0 else out
 
 
@@ -582,6 +735,32 @@ def wire_slot_bytes(codec, n: int, *, chunks: int | None = None):
     return chunks * layout.total_bytes
 
 
+def moved_slot_bytes(codec, n: int, *, chunks: int | None = None):
+    """EXACT bytes the transport MOVES for one ``n``-element slot under
+    the codec's negotiated ``moved_frac`` — the per-chunk
+    :func:`negotiated_wire_bytes` widths summed over the ring chunks
+    (``chunks`` defaults as for :func:`wire_slot_bytes`).  Equals
+    ``wire_slot_bytes`` for static layouts and un-negotiated codecs;
+    None for layout-less codecs.  Sits strictly between
+    :func:`achieved_slot_bytes` (the payload) and
+    :func:`wire_slot_bytes` (the bound) on every overflow-free step."""
+    chunks = _ring_chunks(codec) if chunks is None else max(1, int(chunks))
+    mult = chunks * codec.granule
+    padded = ((int(n) + mult - 1) // mult) * mult
+    csz = padded // chunks
+    layout = _wire_layout(codec, csz)
+    if layout is None:
+        return None
+    if chunks == 1:
+        m = negotiated_wire_bytes(codec, csz, chunk=None)
+        return layout.total_bytes if m is None else m
+    total = 0
+    for c in range(chunks):
+        m = negotiated_wire_bytes(codec, csz, chunk=c)
+        total += layout.total_bytes if m is None else m
+    return total
+
+
 def achieved_slot_bytes(codec, x2d, *, chunks: int | None = None):
     """ACHIEVED (data-dependent) wire bytes per slot row of ``x2d``.
 
@@ -678,3 +857,206 @@ def a2a_wire_bytes(local_shape, dtype, p, codec, *, sample=None) -> float:
     if slot is None:
         slot = (n // p) * np.dtype(dtype).itemsize
     return float(slot) * (p - 1)
+
+
+# --------------------------------------------------------------------------
+# SlotController: adaptive slot renegotiation (host side, between steps)
+# --------------------------------------------------------------------------
+
+class SlotController:
+    """Host-side renegotiation protocol for ``slot="auto"`` wire codecs.
+
+    Per negotiated codec identity (:func:`_slot_key` — the codec with
+    ``moved_frac`` stripped) the controller runs a two-state protocol::
+
+        STATIC ──(watermark known)──> NEGOTIATED(frac)
+           ^                              │
+           └──(overflow: achieved > moved, one-step resync)──┘
+
+    * In STATIC (bootstrap, or the step after an overflow) hops move the
+      full slot bound — always bit-exact — while their probes record
+      achieved bytes.
+    * In NEGOTIATED hops move ``ceil(frac * bound)`` where ``frac`` is
+      the decaying achieved/slot high-watermark times ``1 + headroom``
+      (the codec's ``headroom`` field), rounded UP to the 1/32
+      :data:`QUANTUM` grid — quantization keeps the set of traced wire
+      widths (and therefore jit cache entries) small and bounded.
+    * A probe observing ``achieved > moved`` is an OVERFLOW: that step's
+      decode may have dropped nonzero tail bytes, so ``finish_step``
+      returns True and the caller must DISCARD the step's outputs and
+      replay it — ``apply``/``negotiate`` now hand back the static-bound
+      variant (one-step resync), and the raised watermark renegotiates a
+      wider fraction afterwards.  Never lossy, never deadlocked: the
+      static bound can never overflow, so a replay always lands.
+
+    Drive it like the trainer's warmup resolution — entirely outside
+    jit::
+
+        ctl = SlotController(reporter=reporter)
+        while training:
+            plan = ctl.apply(base_plan)        # negotiated codecs
+            out = step_fns[plan](state, batch) # donate=False: replayable
+            if ctl.finish_step():              # overflow -> resync replay
+                plan = ctl.apply(base_plan)    # static-bound variant
+                out = step_fns[plan](state, batch)
+                ctl.finish_step()
+
+    Thread-safety: probes append to a ``collections.deque`` from the
+    runtime's callback threads; ``finish_step`` flushes outstanding
+    effects (``jax.effects_barrier``) before draining, so a step's
+    probes are fully visible to its own ``finish_step``.
+    """
+
+    #: Negotiated fractions snap UP to this grid (bounded retrace count).
+    QUANTUM = 1.0 / 32.0
+    #: High-watermark decay per observation: ``max(obs, d*wm + (1-d)*obs)``
+    #: — rises instantly, forgets old spikes over ~1/(1-d) observations.
+    DECAY = 0.875
+
+    def __init__(self, reporter=None):
+        self.reporter = reporter
+        self._obs: collections.deque = collections.deque()
+        self._hwm: dict = {}     # (key, chunk) -> achieved/slot frac hwm
+        self._frac: dict = {}    # key -> negotiated per-chunk frac tuple
+        self._resync: set = set()   # keys pinned to STATIC next step
+        self._paths: dict = {}   # key -> set of plan path names (events)
+        self.renegotiations = 0
+        self.resyncs = 0
+        self.overflows = 0
+        _CONTROLLERS.add(self)
+
+    # ---- negotiation ------------------------------------------------------
+    def negotiate(self, codec):
+        """The variant of ``codec`` the next step should run: negotiated
+        (``moved_frac`` filled in) once a watermark exists, the
+        static-bound key while bootstrapping or resyncing, and any
+        non-auto codec unchanged."""
+        if getattr(codec, "slot", None) != "auto":
+            return codec
+        key = _slot_key(codec)
+        frac = self._frac.get(key)
+        if key in self._resync or frac is None:
+            return key
+        if getattr(codec, "moved_frac", None) == frac:
+            return codec
+        return dataclasses.replace(key, moved_frac=frac)
+
+    def apply(self, plan):
+        """Per-path :meth:`negotiate` over a CommPlan's codec fields;
+        returns the plan unchanged when no path is ``slot="auto"`` (the
+        common case costs one getattr per path)."""
+        changes = {}
+        for f in dataclasses.fields(plan):
+            codec = getattr(plan, f.name)
+            if getattr(codec, "slot", None) != "auto":
+                continue
+            self._paths.setdefault(_slot_key(codec), set()).add(f.name)
+            neg = self.negotiate(codec)
+            if neg is not codec:
+                changes[f.name] = neg
+        return dataclasses.replace(plan, **changes) if changes else plan
+
+    # ---- observation ingest ----------------------------------------------
+    def observe_sample(self, codec, x2d, *, chunks: int | None = None):
+        """Record the observations the transport's probes would emit for
+        ``x2d`` without running a collective (bench / warm-start path):
+        one per-chunk achieved-bytes max at the static slot width,
+        mirroring ``_chunk_slices`` on the sample AS GIVEN.
+
+        GEOMETRY CONTRACT: rows of ``x2d`` are taken to be wire rows and
+        the trailing dim is chunk-sliced exactly like the packed
+        transport's flat view — so feed the layout the transport will
+        actually encode (flatten to ``(1, -1)`` for a single-stream
+        hop).  The ring transports flatten each device's LOCAL block
+        before chunking, which a host-side global sample cannot predict;
+        to warm-start those, run one static bootstrap step instead and
+        let the runtime probes observe the true per-device geometry
+        (tests/multidev/check_parity.py does exactly this)."""
+        key = _slot_key(codec)
+        if getattr(key, "slot", None) != "auto":
+            raise ValueError("observe_sample needs a slot='auto' codec")
+        nchunks = _ring_chunks(key) if chunks is None else max(1, int(chunks))
+        padded, _ = _pad_to(x2d, nchunks * key.granule)
+        csz = padded.shape[-1] // nchunks
+        layout = _wire_layout(key, csz)
+        for c in range(nchunks):
+            wire = key.encode_wire(padded[:, c * csz:(c + 1) * csz])
+            ach = int(jnp.max(achieved_wire_bytes(wire, layout)))
+            self._obs.append((key, c, int(layout.total_bytes),
+                              int(layout.total_bytes), ach))
+
+    # ---- the between-steps protocol tick ----------------------------------
+    def finish_step(self) -> bool:
+        """Drain this step's probes, update watermarks, and renegotiate.
+
+        Returns True on OVERFLOW: the caller must discard the step's
+        outputs and replay the step (``apply`` now returns static-bound
+        codecs for the overflowed keys).  Returns False when the step's
+        decodes were bit-exact and the next step may run negotiated."""
+        jax.effects_barrier()   # flush in-flight probe callbacks
+        overflowed: dict = {}
+        seen_static: set = set()
+        while True:
+            try:
+                key, chunk, slot_b, moved_b, ach = self._obs.popleft()
+            except IndexError:
+                break
+            f = ach / slot_b
+            k = (key, chunk)
+            cur = self._hwm.get(k)
+            self._hwm[k] = f if cur is None else max(
+                f, self.DECAY * cur + (1.0 - self.DECAY) * f)
+            if ach > moved_b:
+                overflowed[key] = max(overflowed.get(key, 0), ach - moved_b)
+            elif moved_b >= slot_b:
+                seen_static.add(key)
+        if overflowed:
+            self.overflows += len(overflowed)
+            self.resyncs += len(overflowed)
+            self._resync |= set(overflowed)
+            for key, by in sorted(overflowed.items(), key=repr):
+                self._event("slot/resync", key, overflow_bytes=by)
+            return True
+        # clean static observations close a resync window: the watermark
+        # now covers the spike, so the key may renegotiate again
+        self._resync -= seen_static
+        self._renegotiate()
+        return False
+
+    def _renegotiate(self) -> None:
+        per_key: dict = {}
+        for (key, chunk), wm in self._hwm.items():
+            per_key.setdefault(key, {})[chunk] = wm
+        for key, obs in per_key.items():
+            if key in self._resync:
+                continue
+            headroom = float(getattr(key, "headroom", 0.5))
+            chunks = _ring_chunks(key)
+            # chunks this key never probed at (e.g. only monolithic hops
+            # ran so far) borrow the widest observed fraction
+            fallback = max(obs.values())
+            fracs = tuple(
+                self._quantize(obs.get(c, fallback) * (1.0 + headroom))
+                for c in range(chunks))
+            if fracs != self._frac.get(key):
+                self._frac[key] = fracs
+                self.renegotiations += 1
+                self._event("slot/renegotiate", key,
+                            frac_max=max(fracs), frac_min=min(fracs))
+
+    def _quantize(self, f: float) -> float:
+        q = math.ceil(f / self.QUANTUM) * self.QUANTUM
+        return min(max(q, self.QUANTUM), 1.0)
+
+    # ---- telemetry --------------------------------------------------------
+    def _event(self, kind, key, **fields) -> None:
+        if self.reporter is not None:
+            paths = ",".join(sorted(self._paths.get(key, ()))) or "?"
+            self.reporter.event(kind, paths=paths, **fields)
+
+    def metrics(self) -> dict:
+        """Cumulative protocol counters in the trainer/serve ``comm/*``
+        key family."""
+        return {"comm/slot_renegotiations": float(self.renegotiations),
+                "comm/slot_resyncs": float(self.resyncs),
+                "comm/slot_overflows": float(self.overflows)}

@@ -9,27 +9,45 @@ PAPERS.md) exists to harvest exactly that redundancy *after* the lossy
 stage.  This module supplies the first lossless tier:
 
 ``zle`` — zero-length encoding.  The inner codec's wire row (payload +
-scales + alpha, ``W`` bytes) is viewed as ``G = ceil(W/16)`` groups of
-16 bytes; a ``G``-bit occupancy bitmap marks the nonzero groups, and the
-nonzero groups are stably compacted to the front of a max-size data
-region.  The slot is **bounded-but-ragged** (``codecs.WireLayout`` with
-``variable=True``)::
+scales + alpha, ``W`` bytes) is viewed as ``G = ceil(W/g)`` groups of
+``g`` bytes (the spec arg ``zle:g=<N>``, default 16); a ``G``-bit
+occupancy bitmap marks the nonzero groups, and the nonzero groups are
+stably compacted to the front of a max-size data region.  The slot is
+**bounded-but-ragged** (``codecs.WireLayout`` with ``variable=True``)::
 
     byte offset   component                     semantics
     0             length   uint32 x 1           achieved slot bytes
     4             bitmap   uint8  x ceil(G/8)   nonzero-group occupancy
-    4+ceil(G/8)   data     uint8  x 16*G        compacted nonzero groups,
+    4+ceil(G/8)   data     uint8  x g*G         compacted nonzero groups,
                                                 zero-padded to the bound
 
-The static slot width (the bound a transport must reserve, and what the
-lax collective moves) is ``4 + ceil(G/8) + 16*G`` bytes; the ACHIEVED
-width is ``4 + ceil(G/8) + 16*nnz`` — data-dependent, recorded in the
-header, and reported by the byte telemetry
-(``collectives.achieved_slot_bytes``) and the achieved-ratio benchmark
-rows (``benchmarks/comm_volume.py``).  Encode and decode are pure
-jnp/static-shape (argsort compaction, cumsum gather) so they trace under
-jit, vmap over any leading slot/peer axes, and ride inside shard_map —
-the transport treats a hybrid stack exactly like any other codec.
+The static slot width (the worst-case bound a transport must reserve) is
+``4 + ceil(G/8) + g*G`` bytes; the ACHIEVED width is
+``4 + ceil(G/8) + g*nnz`` — data-dependent, recorded in the header, and
+reported by the byte telemetry (``collectives.achieved_slot_bytes``) and
+the achieved-ratio benchmark rows (``benchmarks/comm_volume.py``).  Every
+byte past the achieved width is exactly zero (padding groups and the
+compaction tail are zeroed), which is the contract the transport's slot
+renegotiation relies on: a truncated-then-zero-repadded wire decodes
+bit-identically whenever the achieved width fits the truncation (see
+``collectives.SlotController``).  A smaller ``g`` tracks zero runs more
+finely at the cost of a proportionally larger bitmap — the knob exists so
+renegotiation experiments can trade header overhead vs compaction
+granularity.  Encode and decode are pure jnp/static-shape (argsort
+compaction, cumsum gather) so they trace under jit, vmap over any
+leading slot/peer axes, and ride inside shard_map — the transport treats
+a hybrid stack exactly like any other codec.
+
+Slot negotiation fields: ``slot="auto"`` (spec ``zle:slot=auto``) opts
+the stack into the transport's adaptive slot renegotiation — hops probe
+their achieved bytes and a host-side ``collectives.SlotController``
+renegotiates the moved width between steps, with ``headroom`` (spec
+``zle:headroom=<f>``) the fractional margin above the observed
+high-watermark.  ``moved_frac`` is the negotiated per-chunk fraction of
+the slot bound a hop actually moves; it is set ONLY by the controller
+(never from a spec, never serialized back into one) and ``None`` means
+the full static bound moves — which is always bit-exact, so a codec
+straight from a spec is safe without any controller attached.
 
 :class:`ZleCodec` stacks the stage over ANY codec that publishes a wire
 layout (spec grammar ``base+zle``, e.g. ``taco+zle:folded:chunks=4`` —
@@ -57,60 +75,68 @@ from repro.core.codecs import WireFastPath, make_wire_layout
 from repro.core.overlap import PIPELINED
 
 __all__ = [
-    "GROUP_BYTES", "zle_wire_layout", "zle_encode", "zle_decode",
-    "zle_slot_bytes", "byte_entropy_bits", "ZleCodec",
+    "GROUP_BYTES", "SLOT_MODES", "zle_wire_layout", "zle_encode",
+    "zle_decode", "zle_slot_bytes", "byte_entropy_bits", "ZleCodec",
 ]
 
-#: Bytes per zero-run group: the compaction granularity.  16 bytes keeps
-#: the bitmap overhead at 1/128 of the inner stream while still folding
-#: away sub-block zero runs (one fp8 payload byte per element -> a
-#: 16-element zero run compacts).
+#: Default bytes per zero-run group: the compaction granularity (spec arg
+#: ``zle:g=<N>``).  16 bytes keeps the bitmap overhead at 1/128 of the
+#: inner stream while still folding away sub-block zero runs (one fp8
+#: payload byte per element -> a 16-element zero run compacts).
 GROUP_BYTES = 16
 
+#: Valid values of the ``slot=`` spec arg / ``ZleCodec.slot`` field:
+#: "static" moves the worst-case bound on every hop, "auto" opts into the
+#: transport's adaptive slot renegotiation (``collectives.SlotController``).
+SLOT_MODES = ("static", "auto")
 
-def _geometry(inner_bytes: int) -> tuple[int, int]:
-    """(groups, bitmap_bytes) for an inner wire row of ``inner_bytes``."""
+
+def _geometry(inner_bytes: int, group: int = GROUP_BYTES) -> tuple[int, int]:
+    """(groups, bitmap_bytes) for an inner wire row of ``inner_bytes``
+    split into ``group``-byte zero-run groups."""
     if inner_bytes <= 0:
         raise ValueError(f"inner wire width must be >= 1, got {inner_bytes}")
-    groups = -(-inner_bytes // GROUP_BYTES)
+    if group < 1:
+        raise ValueError(f"zle group size must be >= 1, got {group}")
+    groups = -(-inner_bytes // group)
     return groups, -(-groups // 8)
 
 
-def zle_wire_layout(inner_bytes: int):
+def zle_wire_layout(inner_bytes: int, group: int = GROUP_BYTES):
     """The variable :class:`~repro.core.codecs.WireLayout` of one ZLE slot
     over an ``inner_bytes``-wide inner wire row (see module docstring for
     the byte table)."""
-    groups, bitmap = _geometry(inner_bytes)
+    groups, bitmap = _geometry(inner_bytes, group)
     return make_wire_layout(("length", "uint32", 1),
                             ("bitmap", "uint8", bitmap),
-                            ("data", "uint8", groups * GROUP_BYTES),
+                            ("data", "uint8", groups * group),
                             variable=True)
 
 
-def zle_slot_bytes(inner_bytes: int) -> int:
+def zle_slot_bytes(inner_bytes: int, group: int = GROUP_BYTES) -> int:
     """Static slot (worst-case) bytes of the ZLE stage over an
     ``inner_bytes`` inner row: header + bitmap + group-padded data."""
-    return zle_wire_layout(inner_bytes).total_bytes
+    return zle_wire_layout(inner_bytes, group).total_bytes
 
 
 _BIT_WEIGHTS = tuple(1 << k for k in range(8))   # LSB-first bit packing
 
 
-def zle_encode(wire):
+def zle_encode(wire, group: int = GROUP_BYTES):
     """Inner wire rows -> ZLE component tuple.
 
     ``wire`` is ``(..., W)`` uint8; returns ``(length, bitmap, data)``
     with shapes ``(..., 1)`` uint32 / ``(..., B)`` uint8 /
-    ``(..., 16*G)`` uint8 matching :func:`zle_wire_layout`.  Nonzero
+    ``(..., g*G)`` uint8 matching :func:`zle_wire_layout`.  Nonzero
     groups keep their relative order (stable compaction via distinct
     integer sort keys), padding groups are zeroed, and the header records
-    the achieved slot bytes ``4 + B + 16*nnz``."""
+    the achieved slot bytes ``4 + B + g*nnz``."""
     lead, w = wire.shape[:-1], wire.shape[-1]
-    groups, bitmap_bytes = _geometry(w)
-    pad = groups * GROUP_BYTES - w
+    groups, bitmap_bytes = _geometry(w, group)
+    pad = groups * group - w
     if pad:
         wire = jnp.pad(wire, [(0, 0)] * len(lead) + [(0, pad)])
-    g = wire.reshape(*lead, groups, GROUP_BYTES)
+    g = wire.reshape(*lead, groups, group)
     nz = jnp.any(g != 0, axis=-1)                            # (..., G)
     # occupancy bitmap, LSB-first within each byte
     bits = nz
@@ -129,26 +155,26 @@ def zle_encode(wire):
     valid = idx < nnz[..., None]
     data = jnp.where(valid[..., None], data, jnp.uint8(0))
     length = (4 + bitmap_bytes
-              + nnz * GROUP_BYTES).astype(jnp.uint32)[..., None]
-    return length, bitmap, data.reshape(*lead, groups * GROUP_BYTES)
+              + nnz * group).astype(jnp.uint32)[..., None]
+    return length, bitmap, data.reshape(*lead, groups * group)
 
 
-def zle_decode(bitmap, data, inner_bytes: int):
+def zle_decode(bitmap, data, inner_bytes: int, group: int = GROUP_BYTES):
     """Inverse of :func:`zle_encode`: ``(..., W)`` uint8 inner wire rows.
 
     Only the bitmap and compacted data are consumed — the length header
     is redundant telemetry (``nnz`` is the bitmap's popcount), so decode
     correctness can never hinge on header handling."""
     lead = bitmap.shape[:-1]
-    groups, bitmap_bytes = _geometry(inner_bytes)
+    groups, bitmap_bytes = _geometry(inner_bytes, group)
     shifts = jnp.arange(8, dtype=jnp.uint8)
     bits = (bitmap[..., None] >> shifts) & jnp.uint8(1)      # (..., B, 8)
     nz = bits.reshape(*lead, bitmap_bytes * 8)[..., :groups].astype(bool)
     src = jnp.clip(jnp.cumsum(nz, axis=-1) - 1, 0, groups - 1)
-    g = jnp.take_along_axis(data.reshape(*lead, groups, GROUP_BYTES),
+    g = jnp.take_along_axis(data.reshape(*lead, groups, group),
                             src[..., None], axis=-2)
     g = jnp.where(nz[..., None], g, jnp.uint8(0))
-    return g.reshape(*lead, groups * GROUP_BYTES)[..., :inner_bytes]
+    return g.reshape(*lead, groups * group)[..., :inner_bytes]
 
 
 def byte_entropy_bits(wire) -> jnp.ndarray:
@@ -171,9 +197,38 @@ class ZleCodec(WireFastPath):
     fused Pallas emission still applies), and decode reconstructs the
     inner row and hands it to the inner wire-native decoders.  Transport
     knobs (``granule``, ``chunks``, ``schedule``) delegate to the inner
-    codec — a stack rides the exact transport its base codec would."""
+    codec — a stack rides the exact transport its base codec would.
+
+    ``group`` is the zero-run compaction granularity (``zle:g=<N>``);
+    ``slot``/``headroom`` opt the stack into adaptive slot renegotiation
+    (``zle:slot=auto:headroom=<f>``); ``moved_frac`` is the negotiated
+    per-chunk moved fraction — controller-owned, never spec-parsed (see
+    module docstring)."""
 
     inner: object
+    group: int = GROUP_BYTES
+    slot: str = "static"
+    headroom: float = 0.5
+    moved_frac: tuple | None = None
+
+    def __post_init__(self):
+        if self.group < 1:
+            raise ValueError(f"zle group size must be >= 1, got {self.group}")
+        if self.slot not in SLOT_MODES:
+            raise ValueError(f"zle slot mode must be one of "
+                             f"{'/'.join(SLOT_MODES)}, got {self.slot!r}")
+        if self.headroom < 0:
+            raise ValueError(f"zle headroom must be >= 0, "
+                             f"got {self.headroom}")
+        if self.moved_frac is not None:
+            if self.slot != "auto":
+                raise ValueError("moved_frac is controller-owned and only "
+                                 "valid under slot='auto'")
+            if not self.moved_frac or any(
+                    not 0.0 < f <= 1.0 for f in self.moved_frac):
+                raise ValueError("moved_frac must be a non-empty tuple of "
+                                 f"fractions in (0, 1], got "
+                                 f"{self.moved_frac}")
 
     @property
     def granule(self) -> int:
@@ -191,19 +246,21 @@ class ZleCodec(WireFastPath):
         return self.inner.wire_layout(n).total_bytes
 
     def wire_layout(self, n):
-        return zle_wire_layout(self._inner_bytes(n))
+        return zle_wire_layout(self._inner_bytes(n), self.group)
 
     def encode(self, x):
-        return zle_encode(self.inner.encode_wire(x))
+        return zle_encode(self.inner.encode_wire(x), self.group)
 
     def decode(self, enc, n, dtype):
         length, bitmap, data = enc
-        inner_wire = zle_decode(bitmap, data, self._inner_bytes(n))
+        inner_wire = zle_decode(bitmap, data, self._inner_bytes(n),
+                                self.group)
         return self.inner.decode_wire(inner_wire, n, dtype)
 
     def decode_sum(self, enc, n, dtype):
         length, bitmap, data = enc
-        inner_wire = zle_decode(bitmap, data, self._inner_bytes(n))
+        inner_wire = zle_decode(bitmap, data, self._inner_bytes(n),
+                                self.group)
         return self.inner.decode_sum_wire(inner_wire, n, dtype)
 
     def bytes_per_element(self, in_dtype=jnp.bfloat16) -> float:
@@ -212,22 +269,23 @@ class ZleCodec(WireFastPath):
         # Achieved bytes are data-dependent and strictly <= this; see
         # collectives.achieved_slot_bytes / the comm_volume achieved rows.
         return float(self.inner.bytes_per_element(in_dtype)) \
-            * (1.0 + 1.0 / (8 * GROUP_BYTES))
+            * (1.0 + 1.0 / (8 * self.group))
 
     def expansion_bytes(self, n: int) -> int:
         """Worst-case slot GROWTH over the inner wire row (header + bitmap
         + group padding) for an ``n``-element slot — what the bound costs
         when the data has no zero runs at all."""
         w = self._inner_bytes(n)
-        return zle_slot_bytes(w) - w
+        return zle_slot_bytes(w, self.group) - w
 
 
-def _np_reference_zle(row: np.ndarray) -> tuple[int, np.ndarray]:
+def _np_reference_zle(row: np.ndarray,
+                      group: int = GROUP_BYTES) -> tuple[int, np.ndarray]:
     """Tiny numpy oracle for tests: (achieved_bytes, decoded_row)."""
     w = row.size
-    groups, bitmap_bytes = _geometry(w)
-    padded = np.zeros(groups * GROUP_BYTES, np.uint8)
+    groups, bitmap_bytes = _geometry(w, group)
+    padded = np.zeros(groups * group, np.uint8)
     padded[:w] = row
-    g = padded.reshape(groups, GROUP_BYTES)
+    g = padded.reshape(groups, group)
     nnz = int(np.sum(np.any(g != 0, axis=-1)))
-    return 4 + bitmap_bytes + nnz * GROUP_BYTES, padded[:w]
+    return 4 + bitmap_bytes + nnz * group, padded[:w]

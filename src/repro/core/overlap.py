@@ -100,15 +100,34 @@ def _fence(*stages):
     return tuple(out)
 
 
+def _per_chunk(stage, n: int) -> list:
+    """Normalize a stage spec to one callable per chunk.
+
+    A single callable is shared by every chunk (the classic uniform-slot
+    ring); a sequence supplies chunk ``c``'s callable at index ``c`` —
+    how the ragged-aware transport gives each chunk its own negotiated
+    wire width (``collectives.SlotController``) while chunk ELEMENT
+    boundaries stay static.  The schedules consume chunks strictly FIFO
+    per stage, so per-chunk callables pair with their chunk even under
+    pipelined emission."""
+    if callable(stage):
+        return [stage] * n
+    fns = list(stage)
+    if len(fns) != n:
+        raise ValueError(
+            f"per-chunk stage needs exactly {n} callables, got {len(fns)}")
+    return fns
+
+
 def _serial(segs, encode, transfer, decode):
     """Hoisted stage ordering: all encodes, then all ring transfers, then
     all decodes, no fences — today's chunked-ring emission order, kept as
     the baseline the pipelined schedule is parity-tested and benchmarked
     against.  On a synchronous backend this is also what the pipelined
     schedule degenerates to performance-wise."""
-    wires = [encode(seg) for seg in segs]
-    stacks = [transfer(wire) for wire in wires]
-    return [decode(stack) for stack in stacks]
+    wires = [encode[c](seg) for c, seg in enumerate(segs)]
+    stacks = [transfer[c](wire) for c, wire in enumerate(wires)]
+    return [decode[c](stack) for c, stack in enumerate(stacks)]
 
 
 def _pipelined(segs, encode, transfer, decode):
@@ -120,12 +139,16 @@ def _pipelined(segs, encode, transfer, decode):
     decoded), outputs are appended in chunk order (FIFO), and every live
     buffer — including raw not-yet-encoded chunks and already-decoded
     outputs — crosses each tick's single fence so no stage op can drift
-    across a tick boundary in either direction.
+    across a tick boundary in either direction.  Per-stage chunk
+    counters index the per-chunk callables in the same FIFO order the
+    queues drain, so chunk ``c``'s buffer always meets chunk ``c``'s
+    stage op (the ragged-wire pairing invariant).
     """
     pending = list(segs)            # raw chunks awaiting encode
     enc: list = []                  # encoded wires awaiting transfer
     tx: list = []                   # arrival stacks awaiting decode
     outs: list = []                 # decoded chunks, in chunk order
+    e_i = t_i = d_i = 0             # next chunk index per stage (FIFO)
     for _ in range(len(segs) + 2):  # prologue + steady state + epilogue
         pending, enc, tx, outs = _fence(pending, enc, tx, outs)
         # pop every stage's input BEFORE pushing results: a buffer
@@ -134,11 +157,14 @@ def _pipelined(segs, encode, transfer, decode):
         t_in = enc.pop(0) if enc else None
         d_in = tx.pop(0) if tx else None
         if e_in is not None:
-            enc.append(encode(e_in))
+            enc.append(encode[e_i](e_in))
+            e_i += 1
         if t_in is not None:
-            tx.append(transfer(t_in))
+            tx.append(transfer[t_i](t_in))
+            t_i += 1
         if d_in is not None:
-            outs.append(decode(d_in))
+            outs.append(decode[d_i](d_in))
+            d_i += 1
     return outs
 
 
@@ -147,15 +173,21 @@ def run_ring(segs, *, encode, transfer, decode, schedule=PIPELINED):
 
     ``encode(seg)`` -> wire buffer, ``transfer(wire)`` -> peer-ordered
     arrival stack (the P-1 ppermute ring steps), ``decode(stack)`` ->
-    output chunk.  Returns the decoded chunks in input order.  The stage
-    callables must be pure and per-chunk independent (no chunk's stage
-    may read another chunk's buffers) — the schedules reorder emission
-    freely under exactly that contract, which is what keeps
-    ``pipelined`` and ``serial`` bit-identical.
+    output chunk.  Each stage is either ONE callable shared by all
+    chunks or a sequence of ``len(segs)`` per-chunk callables (ragged
+    negotiated wire widths — see :func:`_per_chunk`).  Returns the
+    decoded chunks in input order.  The stage callables must be pure and
+    per-chunk independent (no chunk's stage may read another chunk's
+    buffers) — the schedules reorder emission freely under exactly that
+    contract, which is what keeps ``pipelined`` and ``serial``
+    bit-identical.
     """
     validate_schedule(schedule)
     if not segs:
         return []
+    encode = _per_chunk(encode, len(segs))
+    transfer = _per_chunk(transfer, len(segs))
+    decode = _per_chunk(decode, len(segs))
     if schedule == SERIAL or len(segs) == 1:
         # one chunk has nothing to pipeline with; skip the fence noise
         return _serial(segs, encode, transfer, decode)

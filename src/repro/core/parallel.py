@@ -171,6 +171,22 @@ class CommPlan:
         return {path: int(getattr(getattr(self, path), "chunks", 1))
                 for path in PATHS}
 
+    def slot_modes(self) -> dict:
+        """Per-path slot policy: ``"auto"`` when the codec opted into
+        controller renegotiation (``slot=auto`` spec token), ``"static"``
+        otherwise.  Auto paths are the ones a ``collectives.
+        SlotController`` will renegotiate between steps; consumers (the
+        trainer, serve engine) use this to decide whether to run one at
+        all — and whether buffer donation must be disabled so an
+        overflowed step can be replayed."""
+        return {path: getattr(getattr(self, path), "slot", "static")
+                for path in PATHS}
+
+    def has_auto_slots(self) -> bool:
+        """True when any path's codec runs under ``slot=auto`` (i.e. a
+        SlotController should drive this plan)."""
+        return any(m == "auto" for m in self.slot_modes().values())
+
 
 @dataclasses.dataclass(frozen=True)
 class ParallelCtx:

@@ -20,8 +20,12 @@ Grammar::
 
 ``tp=X`` assigns both TP directions at once.  A ``+stage`` suffix on the
 codec head stacks a registered lossless wire stage over the base codec
-(e.g. ``tp=taco+zle:folded:chunks=4`` — the colon args belong to the
-BASE codec; stages take none).  Stages apply left-to-right and each
+(e.g. ``tp=taco+zle:folded:chunks=4``).  Colon args are routed by
+PREFIX: each stage registers the ``key=`` arg prefixes it claims
+(``zle`` claims ``g=``, ``slot=``, ``headroom=``) and those args go to
+the stage's parser; everything else belongs to the BASE codec — so
+``taco+zle:folded:chunks=4:slot=auto`` parses ``folded:chunks=4`` into
+taco and ``slot=auto`` into zle.  Stages apply left-to-right and each
 requires the codec it wraps to publish a wire layout, so ``none+zle``
 is rejected (there is no packed wire buffer to stack over).  Knobs: ``skip_first``/
 ``skip_last`` keep the first/last N transformer layers TP-uncompressed
@@ -40,8 +44,12 @@ Codec args (all optional; normalized output only emits non-defaults):
     tahquant  g<N> (group), chunks=<N>, schedule=pipelined|serial
     int8      g<N> (group), chunks=<N>, schedule=pipelined|serial
     none      no args ("identity" is a whole-spec alias, not a codec name)
-    +zle      lossless zero-run wire stage (no args of its own); stacks
-              over any wire-publishing base codec — see repro.core.lossless
+    +zle      lossless zero-run wire stage over any wire-publishing base
+              codec (repro.core.lossless); claims g=<N> (zero-run group
+              bytes, default 16), slot=auto|static (adaptive slot
+              renegotiation — collectives.SlotController), and
+              headroom=<f> (renegotiation margin over the achieved
+              high-watermark, default 0.5)
 
 ``chunks=N`` (N >= 1) selects the chunked ring-overlap transport for the
 codec's all-gather / reduce-scatter hops (N double-buffered wire slices;
@@ -176,25 +184,33 @@ def list_codecs() -> list[str]:
 class StageEntry:
     name: str
     cls: type
-    wrap: Callable          # (inner codec) -> stacked codec instance
+    wrap: Callable          # (inner codec, *stage args) -> stacked instance
+    unparse: Callable | None = None   # (codec) -> tuple of normalized args
+    args: tuple = ()        # "key=" prefixes of spec args this stage claims
 
 
 _STAGES: dict[str, StageEntry] = {}
 _STAGE_NAME_BY_CLS: dict[type, str] = {}
 
 
-def register_stage(name: str, cls: type, wrap: Callable) -> None:
+def register_stage(name: str, cls: type, wrap: Callable, *,
+                   unparse: Callable | None = None,
+                   args: tuple = ()) -> None:
     """Register a lossless wire stage usable as a ``+name`` head suffix.
 
-    ``wrap(inner)`` stacks the stage over an inner codec instance; the
-    parser validates that ``inner`` publishes a wire layout before
-    wrapping (a stage transforms the packed wire buffer — raw-tensor
-    codecs have none)."""
+    ``wrap(inner, *stage_args)`` stacks the stage over an inner codec
+    instance with the stage's claimed spec args (as strings); the parser
+    validates that ``inner`` publishes a wire layout before wrapping (a
+    stage transforms the packed wire buffer — raw-tensor codecs have
+    none).  ``args`` lists the ``key=`` prefixes of colon args the stage
+    claims out of the codec spec (``codec_from_spec`` routes them here
+    instead of the base parser); ``unparse(codec)`` emits the normalized
+    non-default stage args so specs round-trip."""
     if name in _STAGES:
         raise ValueError(f"stage {name!r} already registered")
     if name in _CODECS:
         raise ValueError(f"stage {name!r} collides with a codec name")
-    _STAGES[name] = StageEntry(name, cls, wrap)
+    _STAGES[name] = StageEntry(name, cls, wrap, unparse, tuple(args))
     _STAGE_NAME_BY_CLS.setdefault(cls, name)
 
 
@@ -204,20 +220,29 @@ def list_stages() -> list[str]:
     return sorted(_STAGES)
 
 
-def _apply_stage(name: str, codec, spec: str):
+def _stage_entry(name: str, spec: str) -> StageEntry:
     try:
-        entry = _STAGES[name]
+        return _STAGES[name]
     except KeyError:
         raise CommSpecError(
             f"unknown stage {name!r} in {spec!r}; "
             f"registered stages: {sorted(_STAGES)}") from None
+
+
+def _apply_stage(entry: StageEntry, codec, stage_args: tuple, spec: str):
     wl = getattr(codec, "wire_layout", None)
     if wl is None or wl(codec.granule) is None:
         raise CommSpecError(
-            f"stage {name!r} in {spec!r} requires a codec with a wire "
-            "layout to stack over (lossless stages transform the packed "
-            "wire buffer)")
-    return entry.wrap(codec)
+            f"stage {entry.name!r} in {spec!r} requires a codec with a "
+            "wire layout to stack over (lossless stages transform the "
+            "packed wire buffer)")
+    try:
+        return entry.wrap(codec, *stage_args)
+    except CommSpecError:
+        raise
+    except Exception as e:  # noqa: BLE001 — surface as a spec error
+        raise CommSpecError(
+            f"bad args for stage {entry.name!r}: {spec!r} ({e})") from e
 
 
 def register_alias(name: str, spec: str) -> None:
@@ -231,13 +256,15 @@ def list_aliases() -> dict[str, str]:
 
 
 def codec_from_spec(spec: str):
-    """``"taco:e4m3:b256"`` / ``"taco+zle:folded"`` -> codec instance.
+    """``"taco:e4m3:b256"`` / ``"taco+zle:folded:slot=auto"`` -> codec.
 
     The head (everything before the first ``:``) is split on ``+`` into
-    a base codec name plus zero or more lossless stage names; the
-    colon-separated args are parsed by the BASE codec's registered
-    parser, then the stages wrap the result left-to-right.  Parse
-    failures surface as :class:`CommSpecError`, and two transport-level
+    a base codec name plus zero or more lossless stage names; each colon
+    arg whose ``key=`` prefix is claimed by one of the head's stages is
+    routed to that stage (first claiming stage wins), the rest are
+    parsed by the BASE codec's registered parser, then the stages wrap
+    the result left-to-right with their routed args.  Parse failures
+    surface as :class:`CommSpecError`, and two transport-level
     invariants are enforced: ``chunks=N > 1`` is only legal on codecs
     publishing a wire layout (the chunked ring slices the packed wire
     buffer — there is nothing to slice on raw-tensor codecs), and every
@@ -246,8 +273,14 @@ def codec_from_spec(spec: str):
     head, args = parts[0], tuple(parts[1:])
     name, *stages = head.split("+")
     entry = get_codec(name)
+    sentries = [_stage_entry(s, spec) for s in stages]
+    base_args, stage_args = [], {s: [] for s in stages}
+    for tok in args:
+        owner = next((se.name for se in sentries
+                      if any(tok.startswith(p) for p in se.args)), None)
+        (stage_args[owner] if owner else base_args).append(tok)
     try:
-        codec = entry.parse(args)
+        codec = entry.parse(tuple(base_args))
     except CommSpecError:
         raise
     except Exception as e:  # noqa: BLE001 — surface as a spec error
@@ -259,21 +292,28 @@ def codec_from_spec(spec: str):
             raise CommSpecError(
                 f"codec {name!r} has no wire layout; 'chunks=' requires "
                 "one (chunked ring transport slices the packed wire buffer)")
-    for stage in stages:
-        codec = _apply_stage(stage, codec, spec)
+    for se in sentries:
+        codec = _apply_stage(se, codec, tuple(stage_args[se.name]), spec)
     return codec
 
 
 def codec_to_spec(codec) -> str:
     """Codec instance -> normalized spec string (inverse of
     :func:`codec_from_spec`).  Stacked stages unparse recursively: the
-    inner codec's spec gains a ``+stage`` head suffix, keeping the base
-    codec's colon args in place."""
+    inner codec's spec gains a ``+stage`` head suffix with the stage's
+    non-default args appended after the base codec's colon args.
+    Controller-negotiated state (``moved_frac``) is deliberately NOT
+    serialized — a spec declares policy, the controller owns the
+    negotiated width — so ``codec_from_spec(codec_to_spec(c))`` returns
+    the declared (un-negotiated) codec."""
     stage = _STAGE_NAME_BY_CLS.get(type(codec))
     if stage is not None:
         inner = codec_to_spec(codec.inner)
         head, sep, rest = inner.partition(":")
-        return f"{head}+{stage}{sep}{rest}"
+        entry = _STAGES[stage]
+        extra = tuple(entry.unparse(codec)) if entry.unparse else ()
+        out = f"{head}+{stage}{sep}{rest}"
+        return ":".join((out,) + extra) if extra else out
     name = _CODEC_NAME_BY_CLS.get(type(codec))
     if name is None:
         raise CommSpecError(f"codec class {type(codec).__name__} is not "
@@ -479,7 +519,38 @@ register_codec("tahquant", TahQuantCodec,
                *_make_group_codec(TahQuantCodec, "tahquant"))
 register_codec("int8", Int8Codec, *_make_group_codec(Int8Codec, "int8"))
 
-register_stage("zle", ZleCodec, ZleCodec)
+def _wrap_zle(inner, *args):
+    kw = {}
+    for tok in args:
+        if tok.startswith("g="):
+            key, val = "group", _pos_int(tok, "g=")
+        elif tok.startswith("slot="):
+            key, val = "slot", tok[len("slot="):]
+        elif tok.startswith("headroom="):
+            key, val = "headroom", float(tok[len("headroom="):])
+        else:  # unreachable while routing matches the claimed prefixes
+            raise CommSpecError(f"unknown zle arg {tok!r}")
+        if key in kw:
+            raise CommSpecError(f"duplicate zle arg {tok!r}")
+        kw[key] = val
+    return ZleCodec(inner, **kw)
+
+
+def _unparse_zle(codec):
+    ref = ZleCodec(codec.inner)
+    out = []
+    if codec.group != ref.group:
+        out.append(f"g={codec.group}")
+    if codec.slot != ref.slot:
+        out.append(f"slot={codec.slot}")
+    if codec.headroom != ref.headroom:
+        out.append(f"headroom={codec.headroom!r}")
+    # moved_frac is controller-negotiated runtime state, never spec text
+    return tuple(out)
+
+
+register_stage("zle", ZleCodec, _wrap_zle, unparse=_unparse_zle,
+               args=("g=", "slot=", "headroom="))
 
 register_alias("identity", "baseline")
 register_alias("baseline", "")                  # identity everywhere

@@ -35,17 +35,18 @@ def achieved_probe_ratio(codec) -> float:
     one encode on device, so results are cached per codec; only
     meaningful for variable layouts (callers gate on
     ``CommPlan.wire_variable``)."""
-    cached = _PROBE_RATIO_CACHE.get(codec)
+    from repro.core import collectives as cc
+    key = cc._slot_key(codec)  # negotiated variants share the cache entry
+    cached = _PROBE_RATIO_CACHE.get(key)
     if cached is None:
         import jax.numpy as jnp
 
-        from repro.core import collectives as cc
-        n = 4 * codec.granule
+        n = 4 * key.granule
         probe = jnp.zeros((1, n), jnp.bfloat16)
-        ach = cc.achieved_slot_bytes(codec, probe)
-        slot = cc.wire_slot_bytes(codec, n)
+        ach = cc.achieved_slot_bytes(key, probe)
+        slot = cc.wire_slot_bytes(key, n)
         cached = float(ach[0]) / float(slot)
-        _PROBE_RATIO_CACHE[codec] = cached
+        _PROBE_RATIO_CACHE[key] = cached
     return cached
 
 
@@ -71,6 +72,17 @@ def comm_metrics(plan, *, spec: str | None = None,
             m[f"comm/{path}_wire_variable"] = 1.0
             m[f"comm/{path}_achieved_floor_ratio"] = \
                 achieved_probe_ratio(getattr(plan, path))
+    for path, mode in plan.slot_modes().items():
+        if mode == "auto":   # controller-renegotiated slot on path:
+            # surface the flag plus the bytes/elem the NEGOTIATED bound
+            # moves (equals the slot bound while the controller is
+            # bootstrapping or resyncing, i.e. moved_frac is unset)
+            codec = getattr(plan, path)
+            frac = getattr(codec, "moved_frac", None)
+            m[f"comm/{path}_slot_auto"] = 1.0
+            m[f"comm/{path}_negotiated_bytes"] = \
+                m[f"comm/{path}_bytes_per_elem"] * \
+                (1.0 if frac is None else max(frac))
     return m
 
 

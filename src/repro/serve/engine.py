@@ -38,6 +38,7 @@ The engine is a single-controller design: one process drives the mesh
 """
 from __future__ import annotations
 
+import dataclasses
 import time
 
 import jax
@@ -70,7 +71,8 @@ class ServeEngine:
                  max_len: int = 64, block: int = 16,
                  total_blocks: int | None = None,
                  prefill_buckets=DEFAULT_BUCKETS,
-                 collect_logits: bool = False, reporter=None):
+                 collect_logits: bool = False, reporter=None,
+                 slot_controller=None):
         self.model, self.mesh, self.ctx = model, mesh, ctx
         self.params = params
         self.max_batch, self.max_len = int(max_batch), int(max_len)
@@ -80,6 +82,19 @@ class ServeEngine:
         self.collect_logits = collect_logits
         self.reporter = reporter if reporter is not None \
             else telemetry.Reporter()
+        # slot=auto on any TP path: renegotiate the decode wire bound
+        # between ticks (pass a shared SlotController to pool watermarks
+        # across engines; default builds a private one).  Decode-cache
+        # donation is disabled in that mode so an overflowed tick can be
+        # replayed bit-exactly — prefill keeps donation, its hops always
+        # move the static bound (the base plan is never negotiated).
+        from repro.core.collectives import SlotController
+        if slot_controller is not None:
+            self.slots = slot_controller
+        elif ctx.plan.has_auto_slots():
+            self.slots = SlotController(reporter=self.reporter)
+        else:
+            self.slots = None
 
         self.pager = KVPager(self.max_batch, self.max_len, block=block,
                              total_blocks=total_blocks)
@@ -97,7 +112,8 @@ class ServeEngine:
         self.slot_pos = np.zeros((self.max_batch,), np.int32)
 
         self._decode_traces = 0
-        self._decode_fn = self._build_decode_step()
+        self._decode_fns: dict = {}   # (negotiated) CommPlan -> compiled
+        self._decode_fn_for()         # warmup trace for the current plan
         self._prefill_fns: dict[int, object] = {}
         self._install_fn = self._build_install()
         self._extract_fn = self._build_extract()
@@ -111,8 +127,8 @@ class ServeEngine:
             lambda x, s: jax.device_put(x, NamedSharding(self.mesh, s)),
             cache, ss.cache_pspecs(self.model))
 
-    def _build_decode_step(self):
-        model, ctx, dp = self.model, self.ctx, self._dp
+    def _build_decode_step(self, ctx):
+        model, dp = self.model, self._dp
         cspecs = ss.cache_pspecs(model)
         collect = self.collect_logits
 
@@ -135,7 +151,26 @@ class ServeEngine:
             # committed-ness difference while reusing the executable)
             self._decode_traces += 1
             return sharded(params, cache, token, pos)
-        return jax.jit(counted, donate_argnums=(1,))
+        # an overflowed negotiated tick is replayed against the same
+        # cache, so the controller mode cannot donate it
+        donate = () if self.slots is not None else (1,)
+        return jax.jit(counted, donate_argnums=donate)
+
+    def _decode_fn_for(self):
+        """The compiled decode step for the plan active THIS tick —
+        the base plan, or the SlotController's negotiated variant
+        (renegotiation resolved here on the host, exactly like the
+        trainer's warmup scheduling; negotiated plans are frozen, so
+        each caches its own compiled step)."""
+        plan = self.ctx.plan
+        if self.slots is not None:
+            plan = self.slots.apply(plan)
+        fn = self._decode_fns.get(plan)
+        if fn is None:
+            ctx = self.ctx if plan is self.ctx.plan else \
+                dataclasses.replace(self.ctx, plan=plan)
+            fn = self._decode_fns[plan] = self._build_decode_step(ctx)
+        return fn
 
     def _build_prefill_step(self, bucket: int):
         model, ctx = self.model, self.ctx
@@ -253,7 +288,12 @@ class ServeEngine:
         tok = jnp.asarray(self.slot_tok)
         pos = jnp.asarray(self.slot_pos)
         t0 = time.perf_counter()
-        out = self._decode_fn(self.params, self.cache, tok, pos)
+        out = self._decode_fn_for()(self.params, self.cache, tok, pos)
+        while self.slots is not None and self.slots.finish_step():
+            # a negotiated wire bound overflowed this tick: discard the
+            # outputs (cache was not donated) and replay against the
+            # controller's static resync plan — which cannot overflow
+            out = self._decode_fn_for()(self.params, self.cache, tok, pos)
         nxt, self.cache = out[0], out[1]
         nxt = np.asarray(jax.block_until_ready(nxt))
         dt = time.perf_counter() - t0
@@ -318,10 +358,11 @@ class ServeEngine:
         self.reporter.event("serve/request", **row)
 
     def recompiles_after_warmup(self) -> int:
-        """Decode-step traces beyond the single warmup trace (0 = the
-        slot table held its shape across all churn and the compiled step
-        was reused every tick)."""
-        return max(0, self._decode_traces - 1)
+        """Decode-step traces beyond the expected one-per-plan warmup
+        traces (0 = the slot table held its shape across all churn and
+        each compiled step was reused every tick; slot renegotiation
+        legitimately adds one trace per distinct negotiated plan)."""
+        return max(0, self._decode_traces - len(self._decode_fns))
 
     def summary(self) -> dict:
         rows = self.reporter.of_kind("serve/request")
@@ -329,8 +370,11 @@ class ServeEngine:
                    decode_steps=self.decode_steps,
                    recompiles=self.recompiles_after_warmup(),
                    requests=len(rows))
-        out.update(telemetry.comm_metrics(
-            self.ctx.plan, spec=None))
+        plan = self.ctx.plan if self.slots is None \
+            else self.slots.apply(self.ctx.plan)
+        out.update(telemetry.comm_metrics(plan, spec=None))
+        if self.slots is not None:
+            out.update(self.slots.metrics())
         if rows:
             per_tok = [r["decode_s_per_tok"] for r in rows
                        if r["decode_s_per_tok"] is not None]

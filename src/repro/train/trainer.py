@@ -8,10 +8,16 @@ checkpoint and replays identically (tested in tests/test_checkpoint.py).
 Compression policy: the trainer owns the CommPlan *schedule*.  Each step it
 resolves ``ctx.plan.at_step(step)`` OUTSIDE jit (identity plan during the
 warmup window, the steady plan after) and dispatches to a per-plan compiled
-step function — plans are frozen/hashable, so the cache holds at most two
-entries and jit never sees a varying policy object.  The normalized spec is
-persisted in every checkpoint manifest and validated on restore; per-path
-wire-byte telemetry is merged into the metrics dict every step.
+step function — plans are frozen/hashable, so the cache holds a few
+entries and jit never sees a varying policy object.  When any path runs
+under ``slot=auto`` a :class:`repro.core.collectives.SlotController`
+renegotiates the moved wire bound between steps through the same
+mechanism (``apply`` returns a frozen negotiated plan -> its own cached
+step function); buffer donation is disabled in that mode so a step whose
+negotiated bound overflowed can be replayed bit-exactly against the
+static bound.  The normalized spec is persisted in every checkpoint
+manifest and validated on restore; per-path wire-byte telemetry is
+merged into the metrics dict every step.
 """
 from __future__ import annotations
 
@@ -56,17 +62,30 @@ class Trainer:
         self._step_fns: dict = {}     # resolved CommPlan -> compiled step
         self.watchdog = StepWatchdog()
         self.losses: list = []
-        log.info("comm plan: %s", self.comm_spec)
+        self.reporter = telemetry.Reporter(log)
+        # slot=auto on any path: run the renegotiation protocol (and give
+        # up buffer donation so an overflowed step can be replayed)
+        from repro.core.collectives import SlotController
+        self.slots = (SlotController(reporter=self.reporter)
+                      if ctx.plan.steady().has_auto_slots() else None)
+        log.info("comm plan: %s%s", self.comm_spec,
+                 " [slot renegotiation active]" if self.slots else "")
 
     # ---- schedule ----------------------------------------------------------
     def step_fn_for(self, step: int):
         """The compiled step function for the plan active at ``step``
-        (warmup scheduling resolved here, outside jit)."""
+        (warmup scheduling AND slot renegotiation resolved here, outside
+        jit — negotiated plans are frozen/hashable like any other, so
+        they cache their own compiled step; the 1/32 fraction grid in
+        ``SlotController`` bounds how many exist)."""
         plan = self.ctx.plan.at_step(step)
+        if self.slots is not None:
+            plan = self.slots.apply(plan)
         fn = self._step_fns.get(plan)
         if fn is None:
             rctx = dataclasses.replace(self.ctx, plan=plan)
-            fn = build_train_step(self.model, self.mesh, rctx, self.oc)
+            fn = build_train_step(self.model, self.mesh, rctx, self.oc,
+                                  donate=self.slots is None)
             self._step_fns[plan] = fn
         return fn, plan
 
@@ -113,8 +132,18 @@ class Trainer:
                                         bspecs)
                 step_fn, plan = self.step_fn_for(step)
                 t0 = time.time()
-                params, opt_state, metrics = step_fn(
+                new_params, new_opt, metrics = step_fn(
                     params, opt_state, batch)
+                while self.slots is not None and self.slots.finish_step():
+                    # a negotiated wire bound overflowed: the step's
+                    # decodes may have dropped tail bytes.  Discard the
+                    # outputs (donate=False keeps the inputs alive) and
+                    # replay against the controller's resync plan — the
+                    # static bound cannot overflow, so this terminates.
+                    step_fn, plan = self.step_fn_for(step)
+                    new_params, new_opt, metrics = step_fn(
+                        params, opt_state, batch)
+                params, opt_state = new_params, new_opt
                 loss = float(metrics["loss"])
                 dt = time.time() - t0
                 self.watchdog.observe(dt)
@@ -124,7 +153,10 @@ class Trainer:
                 # key set with the serving engine's run summary
                 metrics.update(telemetry.comm_metrics(
                     plan, spec=self.comm_spec,
-                    warmup_active=plan != self.ctx.plan.steady()))
+                    warmup_active=self.ctx.plan.at_step(step)
+                    != self.ctx.plan.steady()))
+                if self.slots is not None:
+                    metrics.update(self.slots.metrics())
                 if step % self.tc.log_every == 0:
                     log.info("step %d loss %.4f gnorm %.3f lr %.2e (%.2fs) "
                              "tp_wire %.3fB/elem",

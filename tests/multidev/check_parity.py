@@ -24,7 +24,15 @@ bounded-but-ragged variable wire layouts, repro.core.lossless):
      fences its ticks with optimization_barriers, the serial schedule
      hoists every encode above the first ppermute with no fences, and the
      ring reduce-scatter's hoisted per-peer send gather leaves ZERO
-     dynamic-slices of the wire matrix in the step loop.
+     dynamic-slices of the wire matrix in the step loop;
+  5. negotiated (slot=auto) hops: a static BOOTSTRAP step (probes
+     observing the true per-device chunk geometry) feeds the
+     SlotController, whose negotiated moved bound then keeps the AG and
+     RS transports BIT-IDENTICAL to their static-bound hops on the
+     8-device mesh while moving strictly fewer bytes, with no overflow
+     on the observed workload, and the lowered HLO still shows exactly
+     ONE lax collective per packed hop (the ring its usual
+     chunks*(P-1) permutes).
 """
 import os
 import re
@@ -389,6 +397,71 @@ for sched, txt in (("pipelined", txt_pipe), ("serial", txt_ser)):
                    enc_mid == 0 and not bar,
                    f"encodes_between_permutes={enc_mid} (want 0) "
                    f"barriers={len(bar)} (want 0)")
+
+# ------------------------------------------ negotiated (slot=auto) hops
+# padded workload: the trailing 75% of every wire row is zero (sequence
+# padding), so the controller negotiates a genuinely smaller bound
+x_pad_np = rng.normal(0, 0.02, (16, 512)).astype(np.float32)
+x_pad_np[:, 128:] = 0.0
+x_pad = jnp.asarray(x_pad_np)
+
+for suffix in ("", f":chunks={CHUNKS}", f":chunks={CHUNKS}:schedule=serial"):
+    label = "negotiated" + (suffix.replace(":", "_") or "_packed")
+    auto = codec_from_spec("taco+zle:jnp:slot=auto" + suffix)
+    static = codec_from_spec("taco+zle:jnp" + suffix)
+    ctl = cc.SlotController()
+
+    def ag_s(v, c=static):
+        return cc.all_gather_c(v, "model", 0, c, ID)
+
+    def rs_s(v, c=static):
+        return cc.psum_scatter_c(v, "model", 0, c, ID)
+
+    # bootstrap step: the un-negotiated auto codec runs against the full
+    # static bound while its probes observe the REAL per-device chunk
+    # geometry (the ring flattens each device's local block before
+    # chunking, so a host-side guess at the chunk contents would
+    # mis-predict which chunks carry the dense columns)
+    boot_ag = run(lambda v: cc.all_gather_c(v, "model", 0, auto, ID),
+                  x_pad, *ag_specs)
+    boot_rs = run(lambda v: cc.psum_scatter_c(v, "model", 0, auto, ID),
+                  x_pad, *rs_specs)
+    assert not ctl.finish_step()          # static bounds cannot overflow
+    neg = ctl.negotiate(auto)
+    moved = cc.moved_slot_bytes(neg, x_pad.shape[-1])
+    slot = cc.wire_slot_bytes(auto, x_pad.shape[-1])
+    check_true(f"{label}/moved_below_slot", moved < slot,
+               f"moved={moved} slot={slot} "
+               f"({moved / slot:.3f}x, frac={neg.moved_frac})")
+
+    def ag_n(v, c=neg):
+        return cc.all_gather_c(v, "model", 0, c, ID)
+
+    def rs_n(v, c=neg):
+        return cc.psum_scatter_c(v, "model", 0, c, ID)
+
+    base_ag = run(ag_s, x_pad, *ag_specs)
+    base_rs = run(rs_s, x_pad, *rs_specs)
+    check_equal(f"{label}/ag_bootstrap_vs_static", base_ag, boot_ag)
+    check_equal(f"{label}/rs_bootstrap_vs_static", base_rs, boot_rs)
+    check_equal(f"{label}/ag_vs_static_bound",
+                base_ag, run(ag_n, x_pad, *ag_specs))
+    check_equal(f"{label}/rs_vs_static_bound",
+                base_rs, run(rs_n, x_pad, *rs_specs))
+    check_true(f"{label}/no_overflow_on_observed_workload",
+               not ctl.finish_step(),
+               f"overflows={ctl.overflows}")
+    if not suffix:
+        check_counts(f"{label}/hlo_ag_one_collective",
+                     collectives_of(ag_n, x_pad, *ag_specs),
+                     {"all_gather": 1})
+        check_counts(f"{label}/hlo_rs_one_collective",
+                     collectives_of(rs_n, x_pad, *rs_specs),
+                     {"all_to_all": 1})
+    else:
+        check_counts(f"{label}/hlo_ag_ring_chunked_permutes",
+                     collectives_of(ag_n, x_pad, *ag_specs),
+                     {"collective_permute": CHUNKS * (TP - 1)})
 
 # the ring reduce-scatter gathers its per-peer sends ONCE per chunk
 # before the step loop (static row slices inside it): zero dynamic-slices

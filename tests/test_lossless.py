@@ -178,3 +178,68 @@ def test_telemetry_achieved_floor_probe():
     r = achieved_probe_ratio(hybrid)
     assert 0.0 < r < 1.0                      # zeros compact below the bound
     assert achieved_probe_ratio(hybrid) == r  # cached (same codec key)
+
+
+# --------------------------------------------------------------------------
+# configurable group size (zle:g=<N>)
+# --------------------------------------------------------------------------
+
+@pytest.mark.parametrize("group", [1, 4, 8, 32, 64])
+def test_zle_group_size_roundtrip_and_oracle(group, rng):
+    """Non-default group sizes round-trip and match the numpy oracle's
+    per-row achieved lengths (header overhead vs compaction granularity
+    is exactly the trade the spec arg exposes)."""
+    shape = (3, 200)
+    x = _sparse_rows(rng, shape)             # zeros on the DEFAULT grid:
+    # finer groups harvest at least as much, coarser ones less
+    length, bitmap, data = jax.jit(
+        lambda v: L.zle_encode(v, group=group))(jnp.asarray(x))
+    dec = jax.jit(lambda b, d: L.zle_decode(b, d, shape[-1], group=group))(
+        bitmap, data)
+    np.testing.assert_array_equal(np.asarray(dec), x)
+    lens = np.asarray(length)[..., 0]
+    for idx in np.ndindex(*shape[:-1]):
+        want, _ = L._np_reference_zle(x[idx], group=group)
+        assert lens[idx] == want, (idx, group)
+
+
+def test_zle_group_layout_scales_header_overhead():
+    """Finer groups buy compaction granularity with bitmap bytes: the
+    slot bound grows as the group shrinks, for fixed inner width."""
+    w = 1024
+    slots = [L.zle_slot_bytes(w, group=g) for g in (1, 8, 16, 64)]
+    assert slots == sorted(slots, reverse=True)
+    lay = L.zle_wire_layout(w, group=4)
+    groups = -(-w // 4)
+    assert lay.variable and lay.components[1].size == -(-groups // 8)
+
+
+@pytest.mark.parametrize("group", [4, 64])
+def test_zlecodec_group_bit_parity_with_inner(group, rng):
+    hybrid = codec_from_spec(f"taco+zle:jnp:g={group}")
+    assert hybrid.group == group
+    inner = hybrid.inner
+    n = 4 * hybrid.granule
+    x = jnp.asarray(rng.normal(0, 0.02, (3, n)).astype(np.float32))
+    d_h = hybrid.decode(hybrid.encode(x), n, jnp.float32)
+    d_i = inner.decode(inner.encode(x), n, jnp.float32)
+    np.testing.assert_array_equal(np.asarray(d_h), np.asarray(d_i))
+    s_h = hybrid.decode_sum_wire(hybrid.encode_wire(x), n, jnp.float32)
+    s_i = inner.decode_sum_wire(inner.encode_wire(x), n, jnp.float32)
+    np.testing.assert_array_equal(np.asarray(s_h), np.asarray(s_i))
+
+
+def test_zle_group_spec_roundtrip_and_validation():
+    c = codec_from_spec("taco+zle:jnp:g=32")
+    assert codec_to_spec(c) == "taco+zle:jnp:g=32"
+    assert codec_from_spec(codec_to_spec(c)) == c
+    # g64 (no '=') still binds to the BASE codec's quant group, not zle
+    base_g = codec_from_spec("taco+zle:jnp:g64")
+    assert base_g.group == L.GROUP_BYTES
+    assert base_g.inner.cfg.quant_group_size == 64
+    with pytest.raises(CommSpecError):
+        codec_from_spec("taco+zle:jnp:g=0")
+    with pytest.raises(CommSpecError):
+        codec_from_spec("taco+zle:jnp:g=16:g=32")     # duplicate
+    with pytest.raises(CommSpecError):
+        codec_from_spec("taco:jnp:g=16")              # no zle stage claims it

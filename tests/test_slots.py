@@ -1,0 +1,362 @@
+"""Slot renegotiation protocol (``slot=auto`` wire codecs).
+
+Covers the spec grammar (``slot=``/``headroom=`` stage args, the
+controller-owned ``moved_frac`` invariant), the negotiated-bound math
+(``negotiated_wire_bytes`` / ``moved_slot_bytes``), the SlotController
+state machine (bootstrap -> negotiate -> overflow -> one-step static
+resync -> renegotiate), bit-exactness of the truncated transport across
+packed / ring-pipelined / ring-serial hops, one-collective HLO under a
+negotiated bound, and the trainer/serve/telemetry integration.  The
+8-device negotiated-hop matrix runs in tests/multidev/check_parity.py.
+"""
+import dataclasses
+import sys
+from collections import Counter
+from pathlib import Path
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from jax.sharding import PartitionSpec as P
+
+from repro.compat import shard_map
+from repro.core import collectives as cc
+from repro.core import telemetry
+from repro.core.codecs import IdentityCodec
+from repro.core.registry import (CommSpecError, codec_from_spec,
+                                 codec_to_spec, from_spec)
+
+sys.path.insert(0, str(Path(__file__).resolve().parent))
+try:
+    from hypothesis import given, settings
+    from hypothesis import strategies as st
+except ImportError:                      # offline container
+    from _hypothesis_compat import given, settings
+    from _hypothesis_compat import strategies as st
+
+ID = IdentityCodec()
+
+# the three transport shapes a compressed AG/RS hop can take; chunks=1
+# is the monolithic packed hop, chunks=4 routes through the ring
+TRANSPORTS = ["", ":chunks=4", ":chunks=4:schedule=serial"]
+
+
+def one_dev_mesh():
+    return jax.make_mesh((1, 1), ("data", "model"))
+
+
+def run1(fn, x):
+    return jax.jit(shard_map(fn, mesh=one_dev_mesh(), in_specs=P(),
+                             out_specs=P(), check_vma=False))(x)
+
+
+def lowered_collectives(fn, x):
+    import re
+    txt = jax.jit(shard_map(fn, mesh=one_dev_mesh(), in_specs=P(),
+                            out_specs=P(), check_vma=False)
+                  ).lower(x).as_text()
+    pat = re.compile(
+        r"stablehlo\.(all_gather|all_to_all|all_reduce|reduce_scatter"
+        r"|collective_permute|collective_broadcast)\b")
+    return Counter(m.group(1) for m in pat.finditer(txt))
+
+
+def sparse_flat(rng, rows=8, cols=1024, dense_rows=2):
+    """bf16 (1, rows*cols) wire row whose trailing token rows are zero —
+    the padded-batch workload renegotiation targets."""
+    x = rng.normal(0, 0.02, (rows, cols)).astype(np.float32)
+    x[dense_rows:] = 0.0
+    return jnp.asarray(x, jnp.bfloat16).reshape(1, -1)
+
+
+def dense_flat(rng, rows=8, cols=1024):
+    x = rng.normal(0, 0.02, (rows, cols)).astype(np.float32)
+    return jnp.asarray(x, jnp.bfloat16).reshape(1, -1)
+
+
+def negotiated(codec, sample):
+    """One observe/finish cycle -> the negotiated variant of ``codec``."""
+    ctl = cc.SlotController()
+    ctl.observe_sample(codec, sample)
+    assert ctl.finish_step() is False
+    neg = ctl.negotiate(codec)
+    assert neg.moved_frac is not None
+    return neg, ctl
+
+
+# --------------------------------------------------------------------------
+# spec grammar
+# --------------------------------------------------------------------------
+
+def test_slot_spec_tokens_parse_and_roundtrip():
+    c = codec_from_spec("taco+zle:jnp:slot=auto")
+    assert c.slot == "auto" and c.moved_frac is None
+    assert codec_to_spec(c) == "taco+zle:jnp:slot=auto"
+    assert codec_from_spec(codec_to_spec(c)) == c
+    d = codec_from_spec("taco+zle:jnp:slot=auto:headroom=0.25:chunks=4")
+    assert d.headroom == 0.25 and d.chunks == 4
+    assert codec_from_spec(codec_to_spec(d)) == d
+    # defaults stay off the normalized spec
+    assert codec_to_spec(codec_from_spec("taco+zle:jnp:slot=static")) \
+        == "taco+zle:jnp"
+
+
+@pytest.mark.parametrize("bad", [
+    "taco+zle:jnp:slot=dynamic",         # unknown mode
+    "taco+zle:jnp:headroom=-0.5",        # negative headroom
+    "taco+zle:jnp:slot=auto:slot=static",   # duplicate
+    "taco:jnp:slot=auto",                # no stage claims slot=
+])
+def test_slot_spec_rejects_bad_tokens(bad):
+    with pytest.raises(CommSpecError):
+        codec_from_spec(bad)
+
+
+def test_moved_frac_is_controller_owned():
+    base = codec_from_spec("taco+zle:jnp:slot=auto")
+    with pytest.raises(ValueError):      # only valid under slot=auto
+        dataclasses.replace(base, slot="static", moved_frac=(0.5,))
+    with pytest.raises(ValueError):      # fractions must be in (0, 1]
+        dataclasses.replace(base, moved_frac=(0.0,))
+    neg = dataclasses.replace(base, moved_frac=(0.5,))
+    # negotiated state never leaks into the spec text: unparse yields
+    # the DECLARED codec (policy), not the runtime-negotiated variant
+    assert codec_to_spec(neg) == "taco+zle:jnp:slot=auto"
+    assert codec_from_spec(codec_to_spec(neg)).moved_frac is None
+
+
+def test_plan_slot_modes_accessor():
+    plan = from_spec("tp=taco+zle:jnp:slot=auto,grad_rs=sdp4bit")
+    modes = plan.slot_modes()
+    assert modes["tp_fwd"] == "auto" and modes["grad_rs"] == "static"
+    assert plan.has_auto_slots()
+    assert not from_spec("tp=taco+zle:jnp").has_auto_slots()
+
+
+# --------------------------------------------------------------------------
+# negotiated-bound math
+# --------------------------------------------------------------------------
+
+def test_negotiated_wire_bytes_math():
+    base = codec_from_spec("taco+zle:jnp:slot=auto")
+    n = 4 * base.granule
+    layout = base.wire_layout(n)
+    assert cc.negotiated_wire_bytes(base, n) is None   # nothing negotiated
+    neg = dataclasses.replace(base, moved_frac=(0.5,))
+    got = cc.negotiated_wire_bytes(neg, n)
+    assert got == max(layout.components[-1].offset,
+                      -(-layout.total_bytes // 2))
+    # a tiny fraction clamps to the always-achieved floor (header+bitmap)
+    tiny = dataclasses.replace(base, moved_frac=(1.0 / 32.0,))
+    floor = layout.components[-1].offset
+    assert cc.negotiated_wire_bytes(tiny, n) >= floor
+    # full fraction means the full slot moves
+    full = dataclasses.replace(base, moved_frac=(1.0,))
+    assert cc.negotiated_wire_bytes(full, n) == layout.total_bytes
+    assert cc.moved_slot_bytes(full, n) == cc.wire_slot_bytes(base, n)
+
+
+def test_negotiated_wire_bytes_per_chunk_indexing():
+    base = codec_from_spec("taco+zle:jnp:slot=auto:chunks=4")
+    n = 4 * base.granule
+    neg = dataclasses.replace(base, moved_frac=(1.0, 0.25, 0.25, 0.5))
+    per = [cc.negotiated_wire_bytes(neg, n, chunk=c) for c in range(4)]
+    assert per[0] > per[1] == per[2] and per[3] > per[1]
+    # monolithic callers (chunk=None) take the widest fraction
+    assert cc.negotiated_wire_bytes(neg, n) == per[0]
+
+
+# --------------------------------------------------------------------------
+# controller state machine
+# --------------------------------------------------------------------------
+
+def test_controller_bootstraps_static_then_negotiates(rng):
+    codec = codec_from_spec("taco+zle:jnp:slot=auto")
+    ctl = cc.SlotController()
+    assert ctl.negotiate(codec) == cc._slot_key(codec)   # STATIC bootstrap
+    ctl.observe_sample(codec, sparse_flat(rng))
+    assert ctl.finish_step() is False
+    neg = ctl.negotiate(codec)
+    frac = neg.moved_frac
+    assert frac is not None and 0.0 < max(frac) < 1.0
+    # fractions sit on the 1/32 quantization grid (bounded retraces)
+    q = cc.SlotController.QUANTUM
+    assert all(abs(f / q - round(f / q)) < 1e-9 for f in frac)
+    assert ctl.renegotiations >= 1 and ctl.overflows == 0
+
+
+def test_controller_headroom_widens_the_bound(rng):
+    sample = sparse_flat(rng)
+    fracs = {}
+    for headroom in (0.0, 1.0):
+        codec = codec_from_spec(
+            f"taco+zle:jnp:slot=auto:headroom={headroom}")
+        neg, _ = negotiated(codec, sample)
+        fracs[headroom] = max(neg.moved_frac)
+    assert fracs[1.0] > fracs[0.0]
+
+
+def test_controller_watermark_rises_instantly_decays_slowly(rng):
+    codec = codec_from_spec("taco+zle:jnp:slot=auto")
+    ctl = cc.SlotController()
+    dense, sparse = dense_flat(rng), sparse_flat(rng)
+    ctl.observe_sample(codec, dense)          # spike first
+    ctl.finish_step()
+    hi = max(ctl.negotiate(codec).moved_frac)
+    for _ in range(8):                        # ~1/(1-DECAY) observations
+        ctl.observe_sample(codec, sparse)
+        ctl.finish_step()
+    mid = max(ctl.negotiate(codec).moved_frac)
+    assert mid < hi                           # spike decays...
+    ctl.observe_sample(codec, dense)
+    ctl.finish_step()
+    assert max(ctl.negotiate(codec).moved_frac) == hi   # ...rise is instant
+
+
+def test_controller_metrics_and_ignores_static_codecs(rng):
+    codec = codec_from_spec("taco+zle:jnp:slot=auto")
+    static = codec_from_spec("taco+zle:jnp")
+    ctl = cc.SlotController()
+    assert ctl.negotiate(static) is static    # non-auto passes through
+    with pytest.raises(ValueError):
+        ctl.observe_sample(static, sparse_flat(rng))
+    m = ctl.metrics()
+    assert m == {"comm/slot_renegotiations": 0, "comm/slot_resyncs": 0,
+                 "comm/slot_overflows": 0}
+
+
+# --------------------------------------------------------------------------
+# truncated transport: bit-parity + one-collective HLO
+# --------------------------------------------------------------------------
+
+@pytest.mark.parametrize("transport", TRANSPORTS)
+def test_negotiated_transport_bit_parity(transport, rng):
+    spec = f"taco+zle:jnp:slot=auto{transport}"
+    codec = codec_from_spec(spec)
+    static = codec_from_spec(spec.replace(":slot=auto", ""))
+    flat = sparse_flat(rng)
+    neg, _ = negotiated(codec, flat)
+    n = flat.shape[-1]
+    assert cc.moved_slot_bytes(neg, n) < cc.wire_slot_bytes(codec, n)
+    for make in [lambda c: (lambda v: cc.all_gather_c(v, "model", 0, c, ID)),
+                 lambda c: (lambda v: cc.psum_scatter_c(v, "model", 0, c,
+                                                        ID))]:
+        ref = run1(make(static), flat)
+        got = run1(make(neg), flat)
+        np.testing.assert_array_equal(np.asarray(ref), np.asarray(got))
+
+
+def test_hlo_negotiated_all_gather_is_one_collective(rng):
+    codec = codec_from_spec("taco+zle:jnp:slot=auto")
+    flat = sparse_flat(rng)
+    neg, _ = negotiated(codec, flat)
+    got = lowered_collectives(
+        lambda v: cc.all_gather_c(v, "model", 0, neg, ID), flat)
+    assert dict(got) == {"all_gather": 1}, got
+
+
+# --------------------------------------------------------------------------
+# overflow/resync property: adversarial achieved-bytes spike mid-run
+# --------------------------------------------------------------------------
+
+@pytest.mark.slow
+@pytest.mark.parametrize("transport", TRANSPORTS)
+@settings(max_examples=5, deadline=None)
+@given(seed=st.integers(0, 2**31 - 1), dense_rows=st.integers(3, 8))
+def test_overflow_spike_resyncs_bit_exact(transport, seed, dense_rows):
+    """Drive a negotiated hop into an adversarial density spike: the
+    overflow must be detected, the replayed static hop must decode
+    bit-exactly, and EXACTLY ONE static-slot resync hop must occur
+    before the path renegotiates — on every transport shape."""
+    rng = np.random.default_rng(seed)
+    spec = f"taco+zle:jnp:slot=auto{transport}"
+    codec = codec_from_spec(spec)
+    static = codec_from_spec(spec.replace(":slot=auto", ""))
+    sparse = sparse_flat(rng, dense_rows=1)
+    spike = dense_flat(rng) if dense_rows == 8 else \
+        sparse_flat(rng, dense_rows=dense_rows)
+    rep = telemetry.Reporter()
+    ctl = cc.SlotController(reporter=rep)
+    ctl.observe_sample(codec, sparse)
+    assert ctl.finish_step() is False
+    neg = ctl.negotiate(codec)
+    assert max(neg.moved_frac) < 1.0
+
+    hop = lambda c: (lambda v: cc.all_gather_c(v, "model", 0, c, ID))
+    ref = np.asarray(run1(hop(static), spike))
+    attempts = 0
+    out = run1(hop(ctl.negotiate(codec)), spike)
+    while ctl.finish_step():                 # overflow -> discard + replay
+        attempts += 1
+        assert attempts <= 2, "resync failed to converge"
+        out = run1(hop(ctl.negotiate(codec)), spike)
+    np.testing.assert_array_equal(np.asarray(out), ref)
+    if attempts:                             # the spike actually overflowed
+        assert ctl.resyncs == 1 and len(rep.of_kind("slot/resync")) == 1
+        # exactly one static resync hop ran; the raised watermark now
+        # renegotiates a bound wide enough for the spike
+        wide = ctl.negotiate(codec)
+        assert wide.moved_frac is not None
+        assert max(wide.moved_frac) > max(neg.moved_frac)
+    # a negotiated-at-the-new-watermark hop decodes the spike bit-exactly
+    out2 = run1(hop(ctl.negotiate(codec)), spike)
+    assert ctl.finish_step() is False
+    np.testing.assert_array_equal(np.asarray(out2), ref)
+
+
+# --------------------------------------------------------------------------
+# telemetry + trainer/serve integration
+# --------------------------------------------------------------------------
+
+def test_comm_metrics_report_negotiated_bytes(rng):
+    plan = from_spec("tp=taco+zle:jnp:slot=auto")
+    m = telemetry.comm_metrics(plan)
+    assert m["comm/tp_fwd_slot_auto"] == 1.0
+    # un-negotiated: the negotiated bound IS the slot bound
+    assert m["comm/tp_fwd_negotiated_bytes"] == \
+        m["comm/tp_fwd_bytes_per_elem"]
+    ctl = cc.SlotController()
+    ctl.observe_sample(plan.tp_fwd, sparse_flat(rng))
+    ctl.finish_step()
+    m2 = telemetry.comm_metrics(ctl.apply(plan))
+    assert m2["comm/tp_fwd_negotiated_bytes"] < \
+        m2["comm/tp_fwd_bytes_per_elem"]
+    assert "comm/grad_rs_slot_auto" not in m2  # static path stays silent
+
+
+def test_overflow_resync_deterministic_packed(rng):
+    """One deterministic overflow cycle on the packed hop — the fast-gate
+    (``ci.sh --fast``) slice of the property test above."""
+    codec = codec_from_spec("taco+zle:jnp:slot=auto")
+    static = codec_from_spec("taco+zle:jnp")
+    rep = telemetry.Reporter()
+    ctl = cc.SlotController(reporter=rep)
+    ctl.observe_sample(codec, sparse_flat(rng, dense_rows=1))
+    ctl.finish_step()
+    spike = dense_flat(rng)
+    hop = lambda c: (lambda v: cc.all_gather_c(v, "model", 0, c, ID))
+    ref = np.asarray(run1(hop(static), spike))
+    run1(hop(ctl.negotiate(codec)), spike)
+    assert ctl.finish_step() is True          # overflow detected
+    out = run1(hop(ctl.negotiate(codec)), spike)   # static resync replay
+    assert ctl.finish_step() is False
+    np.testing.assert_array_equal(np.asarray(out), ref)
+    assert ctl.resyncs == 1 and len(rep.of_kind("slot/resync")) == 1
+
+
+@pytest.mark.slow
+def test_trainer_runs_negotiated_plan(tmp_path):
+    """End-to-end: a short training run under ``slot=auto`` engages the
+    controller (donation off, renegotiated step fns) and keeps the loss
+    finite; the step metrics carry the negotiated telemetry."""
+    from test_train import mesh1, small_setup
+
+    from repro.train.trainer import Trainer
+    model, ctx, oc, tc, data = small_setup(
+        tmp_path, "tp=taco+zle:jnp:slot=auto", total_steps=6)
+    tr = Trainer(model, mesh1(), ctx, oc, tc, data)
+    assert tr.slots is not None
+    params, _, losses = tr.run(resume=False)
+    assert len(losses) == 6 and np.isfinite(losses).all()
+    assert tr.slots.overflows == 0 or tr.slots.resyncs > 0
