@@ -10,6 +10,8 @@
                  near-zero-payload (padded-batch) workloads
   serve_latency  continuous-batching decode latency/throughput per codec
                  spec (p50/p99 ms per token; recompiles gated to zero)
+  adaptive       error-driven codec escalation cycle (PolicyEngine +
+                 injected per-group outliers: fire -> hold -> recover)
   roofline_table deliverable (g) presentation from dry-run artifacts
   threed         Table 3 (3D-parallel throughput model; needs PP results)
 
@@ -40,14 +42,15 @@ def main() -> None:
                          "(default BENCH_collectives.json)")
     args = ap.parse_args()
 
-    from benchmarks import (accuracy, blocksize, comm_volume, fusion,
-                            overlap, roofline_table, serve_latency)
+    from benchmarks import (accuracy, adaptive, blocksize, comm_volume,
+                            fusion, overlap, roofline_table, serve_latency)
     tables = {
         "blocksize": blocksize.run,
         "fusion": fusion.run,
         "overlap": overlap.run,
         "comm_volume": comm_volume.run,
         "serve_latency": serve_latency.run,
+        "adaptive": adaptive.run,
         "roofline_table": roofline_table.run,
         "accuracy": accuracy.run,
     }

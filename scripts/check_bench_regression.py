@@ -30,6 +30,14 @@ Compares a fresh ``benchmarks.run --json`` output against the committed
      baseline x 1.02: the controller's watermark math is deterministic
      on these rows, so growth means renegotiation got structurally
      worse at right-sizing the moved slot.
+  6. ESCALATION CYCLES — every fresh ``adaptive/*`` row must carry
+     parseable ``escalations=``/``deescalations=`` counters matching the
+     baseline exactly (the injected-outlier scenario is fixed-seed
+     deterministic), and at least one adaptive row must record a
+     COMPLETE cycle (escalations >= 1 AND deescalations >= 1): a cycle
+     going missing means the error-escalation state machine stopped
+     firing or stopped recovering.  Missing adaptive rows fail via the
+     row-presence gate above.
 
 Timings are otherwise NOT compared (CI machines are noisy); only
 structure gates.
@@ -48,6 +56,8 @@ _RATIO = re.compile(r"(?:^|;)achieved_ratio=([0-9.]+)x(?:;|$)")
 _P50 = re.compile(r"(?:^|;)p50_ms=([0-9.]+)(?:;|$)")
 _RECOMPILES = re.compile(r"(?:^|;)recompiles=(\d+)(?:;|$)")
 _MOVED = re.compile(r"(?:^|;)moved_bytes=(\d+)(?:;|$)")
+_ESC = re.compile(r"(?:^|;)escalations=(\d+)(?:;|$)")
+_DEESC = re.compile(r"(?:^|;)deescalations=(\d+)(?:;|$)")
 
 RATIO_TOLERANCE = 0.98   # new achieved_ratio must be >= 98% of baseline
 P50_BLOWUP = 5.0         # serve p50 gated only against catastrophe
@@ -103,8 +113,8 @@ def main(argv: list[str]) -> int:
         # the committed baseline — the gate would pass vacuously forever
         print(f"FAIL: no row of {new_path} matches a {base_path.name} "
               "baseline row; regenerate the baseline "
-              "(python -m benchmarks.run "
-              "--only fusion,overlap,comm_volume --json)")
+              "(python -m benchmarks.run --only "
+              "fusion,overlap,comm_volume,serve_latency,adaptive --json)")
         return 1
     # row-presence gate over ALL rows of every re-run table: a baseline
     # row disappearing — with or without a collectives= count — is a
@@ -150,6 +160,42 @@ def main(argv: list[str]) -> int:
               f"{base_path.name}:")
         print("\n".join(moved_regr))
         return 1
+    # escalation cycle rows: the adaptive scenarios are fixed-seed
+    # deterministic, so the cycle counters must match the baseline
+    # exactly, and the injected-outlier row must keep demonstrating a
+    # complete fire->hold->recover cycle
+    adaptive_fail = []
+    complete = 0
+    gated_adaptive = 0
+    for name, derived in sorted(new_rows.items()):
+        if not name.startswith("adaptive/"):
+            continue
+        gated_adaptive += 1
+        esc, de = _ESC.search(derived), _DEESC.search(derived)
+        if esc is None or de is None:
+            adaptive_fail.append(
+                f"  {name}: missing escalations=/deescalations= fields")
+            continue
+        counts = (int(esc.group(1)), int(de.group(1)))
+        if counts[0] >= 1 and counts[1] >= 1:
+            complete += 1
+        base_d = base_rows.get(name)
+        if base_d is not None:
+            besc, bde = _ESC.search(base_d), _DEESC.search(base_d)
+            if besc and bde:
+                want = (int(besc.group(1)), int(bde.group(1)))
+                if counts != want:
+                    adaptive_fail.append(
+                        f"  {name}: escalation cycle {want} -> {counts}")
+    if gated_adaptive and complete == 0:
+        adaptive_fail.append(
+            "  no adaptive row carries a complete cycle "
+            "(escalations >= 1 and deescalations >= 1)")
+    if adaptive_fail:
+        print(f"FAIL: adaptive escalation rows regressed vs "
+              f"{base_path.name}:")
+        print("\n".join(adaptive_fail))
+        return 1
     # serving rows: recompiles must be exactly zero, p50 must exist and
     # stay within the catastrophic-blowup bound of the baseline
     serve_fail = []
@@ -182,7 +228,8 @@ def main(argv: list[str]) -> int:
     print(f"PASS: {checked} collective-count rows at or below the "
           f"{base_path.name} baseline, {gated_ratios} achieved-ratio "
           f"rows within tolerance, {gated_moved} moved-bytes rows "
-          f"within tolerance, {gated_serve} serving rows clean, "
+          f"within tolerance, {gated_adaptive} adaptive rows clean, "
+          f"{gated_serve} serving rows clean, "
           f"no dropped rows "
           f"({len(new_rows) - len(set(new_rows) & set(base_rows))} new)")
     return 0

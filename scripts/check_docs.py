@@ -63,7 +63,7 @@ _STACK_SPAN = re.compile(r"^[a-z0-9_]+(?:\+[a-z0-9_]+)+(?::[^\s`]+)*$")
 # to parse are deliberately excluded by requiring a registered head +
 # one of the claimed keys): grammar-checked through codec_from_spec
 _ARG_SPAN = re.compile(r"^[a-z0-9_]+(?:\+[a-z0-9_]+)*(?::[^\s`]+)+$")
-_STAGE_ARG = re.compile(r":(?:slot|headroom|g)=")
+_STAGE_ARG = re.compile(r":(?:slot|headroom|g|escalate|hold)=")
 _COMM_SPEC = re.compile(r"--comm-spec\s+(?:\"([^\"]+)\"|([^\s\"']+))")
 _FROM_SPEC = re.compile(r"from_spec\(\"([^\"]+)\"\)")
 

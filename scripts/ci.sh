@@ -37,6 +37,11 @@ python -m pytest -x -q tests/test_overlap.py
 # the full matrix (property test across transports + trainer
 # integration) is slow-marked and runs in the main invocation
 python -m pytest -x -q tests/test_slots.py -m "not slow"
+# Policy-engine unit slice (escalate= grammar, fallback registry, the
+# escalation state machine, engine resolve/cache/replay, probe-free HLO)
+# — the trainer/serve escalation integrations are slow-marked and run
+# in the main invocation
+python -m pytest -x -q tests/test_policy.py -m "not slow"
 
 # Docs linter: every README/ROADMAP/docs link, referenced file path, and
 # embedded compression spec must resolve against the actual tree/grammar
@@ -51,13 +56,16 @@ python scripts/check_docs.py
 # field is exact — a decode retrace under churn is structural), and fail
 # if any lowered-HLO collective count regressed, any baseline row
 # disappeared, any achieved compression ratio dropped, or any serving
-# row lost its p50/retrace guarantee versus the committed
-# BENCH_collectives.json baseline.  Timings are recorded but not gated
-# (CI machines are noisy); counts, row presence, the deterministic
-# achieved ratios, and the serve recompile counts are exact.
+# row lost its p50/retrace guarantee, or the adaptive escalation rows
+# (deterministic injected-outlier fire->hold->recover cycle) lost their
+# cycle counters versus the committed BENCH_collectives.json baseline.
+# Timings are recorded but not gated (CI machines are noisy); counts,
+# row presence, the deterministic achieved ratios, the serve recompile
+# counts, and the escalation cycle counters are exact.
 BENCH_GATE_JSON="$(mktemp /tmp/bench_gate.XXXXXX.json)"
 trap 'rm -f "$BENCH_GATE_JSON"' EXIT
-python -m benchmarks.run --only fusion,overlap,comm_volume,serve_latency \
+python -m benchmarks.run \
+    --only fusion,overlap,comm_volume,serve_latency,adaptive \
     --json "$BENCH_GATE_JSON" --quick
 python scripts/check_bench_regression.py "$BENCH_GATE_JSON"
 

@@ -40,6 +40,15 @@ keeps the hoisted all-encodes-first ordering for parity testing.  Both
 are bit-identical; ``schedule`` is ignored when ``chunks == 1`` (the
 monolithic transport has a single stage of each kind).
 
+Every compressing codec also carries the error-escalation policy knobs
+(spec tokens ``escalate=<fallback>@<threshold>`` / ``hold=<N>``): when
+set, the transport emits a sampled relative-quantization-error probe and
+a ``repro.core.policy.ErrorEscalationController`` swaps the path to the
+registered higher-precision fallback codec while the error EMA sits
+above the threshold (de-escalating after a ``hold``-step hysteresis
+window).  ``escalate=None`` (the default) traces ZERO probe ops — the
+lowered HLO is byte-identical to a codec without the fields.
+
 Wire-native fast paths: the transport calls ``encode_wire(x)`` /
 ``decode_wire(wire, n, dtype)`` / ``decode_sum_wire(wire, n, dtype)``
 rather than composing ``encode`` with :func:`pack_wire` itself.  The
@@ -67,7 +76,7 @@ __all__ = [
     "IdentityCodec", "TacoCodec", "Sdp4BitCodec", "TahQuantCodec",
     "Int8Codec", "wire_bytes_per_element", "WireComponent", "WireLayout",
     "make_wire_layout", "pack_wire", "unpack_wire", "WireFastPath",
-    "achieved_wire_bytes",
+    "achieved_wire_bytes", "DEFAULT_HOLD",
 ]
 
 
@@ -212,6 +221,30 @@ def unpack_wire(wire, layout):
         for c in layout.components)
 
 
+#: Default de-escalation hysteresis window (steps) for ``escalate=``
+#: codecs — shared by the dataclass fields and the spec normalizer.
+DEFAULT_HOLD = 20
+
+
+def _check_escalation(codec) -> None:
+    """Validate the ``escalate``/``hold`` fields shared by every lossy
+    codec (the registry additionally checks the fallback NAME against its
+    fallback table — codecs cannot import the registry)."""
+    esc = getattr(codec, "escalate", None)
+    hold = getattr(codec, "hold", DEFAULT_HOLD)
+    if not isinstance(hold, int) or hold < 1:
+        raise ValueError(f"escalation hold must be an int >= 1, got {hold!r}")
+    if esc is None:
+        return
+    if (not isinstance(esc, tuple) or len(esc) != 2
+            or not isinstance(esc[0], str) or not esc[0]):
+        raise ValueError("escalate must be a (fallback_name, threshold) "
+                         f"tuple, got {esc!r}")
+    thr = float(esc[1])
+    if not thr > 0.0:
+        raise ValueError(f"escalation threshold must be > 0, got {thr}")
+
+
 class WireFastPath:
     """Generic wire-native paths: pack/unpack composed with encode/decode.
 
@@ -219,6 +252,9 @@ class WireFastPath:
     kernels override them (emitting/consuming the packed buffer directly
     in the kernel) and must stay bit-identical to these compositions —
     the contract the transport's HLO-count and parity tests rely on."""
+
+    def __post_init__(self):
+        _check_escalation(self)
 
     def encode_wire(self, x):
         """(slots, n) -> (slots, total_bytes) uint8 wire buffer."""
@@ -284,6 +320,8 @@ class TacoCodec(WireFastPath):
     cfg: TacoConfig = TacoConfig()
     chunks: int = 1
     schedule: str = PIPELINED
+    escalate: tuple | None = None   # (fallback_name, error threshold)
+    hold: int = DEFAULT_HOLD
 
     @property
     def granule(self) -> int:
@@ -381,6 +419,8 @@ class Sdp4BitCodec(WireFastPath):
     rotate: bool = True
     chunks: int = 1
     schedule: str = PIPELINED
+    escalate: tuple | None = None   # (fallback_name, error threshold)
+    hold: int = DEFAULT_HOLD
 
     @property
     def granule(self) -> int:
@@ -411,6 +451,8 @@ class TahQuantCodec(WireFastPath):
     group: int = 64
     chunks: int = 1
     schedule: str = PIPELINED
+    escalate: tuple | None = None   # (fallback_name, error threshold)
+    hold: int = DEFAULT_HOLD
 
     @property
     def granule(self) -> int:
@@ -443,6 +485,8 @@ class Int8Codec(WireFastPath):
     group: int = 128
     chunks: int = 1
     schedule: str = PIPELINED
+    escalate: tuple | None = None   # (fallback_name, error threshold)
+    hold: int = DEFAULT_HOLD
 
     @property
     def granule(self) -> int:

@@ -226,6 +226,44 @@ def _slot_probe(codec, layout, wire, moved_bytes: int, chunk: int) -> None:
                           int(chunk)), mx)
 
 
+# --------------------------------------------------------------------------
+# error escalation: sampled relative-quantization-error probes
+# --------------------------------------------------------------------------
+
+#: Live ErrorEscalationControllers (repro.core.policy) — weak, like
+#: :data:`_CONTROLLERS`; with none registered the probes are inert.
+_ERR_CONTROLLERS: "weakref.WeakSet" = weakref.WeakSet()
+
+
+def _dispatch_err_probe(key, err):
+    """Host side of a relative-error probe (jax.debug.callback, possibly
+    a runtime thread): enqueue on every live escalation controller.
+    Thread-safe deque appends only — controllers aggregate later, under
+    ``jax.effects_barrier`` in ``finish_step``."""
+    e = float(err)
+    for ctl in list(_ERR_CONTROLLERS):
+        ctl._obs.append((key, e))
+
+
+def _err_probe(codec, x2d, wire, n: int) -> None:
+    """Emit one SAMPLED relative-quantization-error observation for a
+    hop's encoded wire when the codec carries an ``escalate=`` policy:
+    decode the first wire row back on device and stream
+    ``||dec - x|| / ||x||`` to the live ErrorEscalationControllers
+    (``repro.core.policy``) through the same ordered-effect callback
+    channel as the achieved-bytes probes — no collective, no dataflow
+    perturbation.  Codecs without the token (the default) trace ZERO
+    probe ops, keeping their lowered HLO byte-identical."""
+    if getattr(codec, "escalate", None) is None:
+        return
+    ref = x2d[:1].astype(jnp.float32)
+    dec = codec.decode_wire(wire[:1], n, jnp.float32)
+    err = jnp.sqrt(jnp.sum((dec - ref) ** 2)) \
+        / (jnp.sqrt(jnp.sum(ref * ref)) + 1e-12)
+    jax.debug.callback(
+        functools.partial(_dispatch_err_probe, _slot_key(codec)), err)
+
+
 def _transport(x2d, codec, move, *, reduce=False, dtype):
     """Shared codec plumbing for every compressed collective: pad the
     trailing dim of ``x2d`` to the codec granule, encode straight into the
@@ -253,6 +291,7 @@ def _transport(x2d, codec, move, *, reduce=False, dtype):
     moved_b = negotiated_wire_bytes(codec, pn, chunk=None)
     _slot_probe(codec, layout, wire,
                 layout.total_bytes if moved_b is None else moved_b, 0)
+    _err_probe(codec, padded, wire, pn)
     if moved_b is not None and moved_b < layout.total_bytes:
         wire = _zero_repad(move(wire[..., :moved_b]), layout.total_bytes)
     else:
@@ -373,6 +412,8 @@ def _ag_one_ring(x, ax, dim, codec):
             wire = codec.encode_wire(seg)
             m = moved[c]
             _slot_probe(codec, layout, wire, total if m is None else m, c)
+            if c == 0:   # sampled: one error probe per ring hop
+                _err_probe(codec, seg, wire, csz)
             return wire if m is None or m >= total else wire[..., :m]
         return enc
 
@@ -444,6 +485,8 @@ def _rs_one_ring(x, ax, dim, codec):
             wire = codec.encode_wire(seg)
             m = moved[c]
             _slot_probe(codec, layout, wire, total if m is None else m, c)
+            if c == 0:   # sampled: one error probe per ring hop
+                _err_probe(codec, seg, wire, csz)
             return wire if m is None or m >= total else wire[..., :m]
         return enc
 
@@ -907,6 +950,9 @@ class SlotController:
     probes are fully visible to its own ``finish_step``.
     """
 
+    #: StepController protocol (repro.core.policy): an overflow demands a
+    #: bit-exact replay, so consumers must not donate input buffers.
+    may_replay = True
     #: Negotiated fractions snap UP to this grid (bounded retrace count).
     QUANTUM = 1.0 / 32.0
     #: High-watermark decay per observation: ``max(obs, d*wm + (1-d)*obs)``

@@ -242,6 +242,18 @@ class ZleCodec(WireFastPath):
     def schedule(self) -> str:
         return getattr(self.inner, "schedule", PIPELINED)
 
+    # error-escalation policy rides on the BASE codec (spec args
+    # `escalate=`/`hold=` are unclaimed by the zle stage, so they parse
+    # into the inner codec); delegate like the other transport knobs so
+    # the transport's probe and the controller see one policy per stack
+    @property
+    def escalate(self):
+        return getattr(self.inner, "escalate", None)
+
+    @property
+    def hold(self) -> int:
+        return int(getattr(self.inner, "hold", 1))
+
     def _inner_bytes(self, n: int) -> int:
         return self.inner.wire_layout(n).total_bytes
 

@@ -187,6 +187,22 @@ class CommPlan:
         SlotController should drive this plan)."""
         return any(m == "auto" for m in self.slot_modes().values())
 
+    def escalation_modes(self) -> dict:
+        """Per-path error-escalation policy: the ``(fallback_name,
+        threshold)`` pair when the codec carries an ``escalate=`` spec
+        token, None otherwise.  Escalating paths emit the transport's
+        sampled relative-error probes and are the ones a
+        ``repro.core.policy.ErrorEscalationController`` may swap to the
+        registered fallback codec between steps."""
+        return {path: getattr(getattr(self, path), "escalate", None)
+                for path in PATHS}
+
+    def has_escalation(self) -> bool:
+        """True when any path's codec carries an ``escalate=`` policy
+        (i.e. an ErrorEscalationController should drive this plan)."""
+        return any(e is not None
+                   for e in self.escalation_modes().values())
+
 
 @dataclasses.dataclass(frozen=True)
 class ParallelCtx:

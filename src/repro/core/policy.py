@@ -1,0 +1,332 @@
+"""Step-policy engine: one owner of resolve -> compile-cache -> replay.
+
+Both CommPlan consumers — the trainer's step loop and the serving
+engine's decode tick — run the same host-side protocol around every jit
+step: resolve the frozen plan variant that should run THIS step
+(warmup scheduling, slot renegotiation, error escalation), dispatch to
+a per-plan compiled function (plans are frozen/hashable, so each
+variant caches its own executable and jit never sees a varying policy
+object), then give every controller a post-step tick that may demand a
+bit-exact REPLAY of the step.  PR 8 grew that protocol ad hoc in two
+places; this module owns it:
+
+  * :class:`StepController` — the protocol a dynamic-policy controller
+    implements.  ``apply(plan)`` proposes the frozen variant the next
+    step should run; in-jit probes (``jax.debug.callback`` host
+    streams, see ``collectives._slot_probe`` / ``collectives.
+    _err_probe``) feed it observations during the step; and
+    ``finish_step()`` drains those observations and returns True when
+    the step's outputs must be discarded and the step replayed.
+    ``collectives.SlotController`` already speaks it unchanged.
+  * :class:`PolicyEngine` — composes an ordered controller stack over a
+    base plan and a ``build(plan) -> compiled_fn`` callback, owning the
+    plan->fn compile cache and the replay loop for its consumer.
+  * :class:`ErrorEscalationController` — the first genuinely dynamic
+    controller: per-path relative-quantization-error EMAs fed by the
+    transport's sampled probes, escalating a path to its registered
+    higher-precision fallback codec (``escalate=<fallback>@<thr>`` spec
+    token, ``registry.register_fallback``) when the EMA crosses the
+    threshold, and de-escalating after a ``hold=<N>`` hysteresis
+    window.  Every variant is a frozen plan riding the same cached
+    step-fn mechanism, so retrace counts stay bounded exactly like
+    ``slot=auto``.
+
+Controller ORDER matters and :func:`default_controllers` fixes it:
+escalation first (it decides WHICH codec a path runs), slot
+renegotiation second (it negotiates that codec's moved bound).  An
+escalated path's fallback codec is a different frozen codec — its own
+``collectives._slot_key`` — so escalation can never contaminate the
+slot watermarks of the codec it replaced.
+"""
+from __future__ import annotations
+
+import collections
+import dataclasses
+from typing import Protocol, runtime_checkable
+
+import jax
+
+from repro.core import collectives as cc
+
+__all__ = ["StepController", "ErrorEscalationController", "PolicyEngine",
+           "default_controllers"]
+
+
+@runtime_checkable
+class StepController(Protocol):
+    """One dynamic compression-policy controller, driven between steps.
+
+    The engine calls ``apply`` before each step (outside jit) and
+    ``finish_step`` after it; implementations observe the step through
+    host-callback probes the transport emits while it runs.  A
+    controller whose ``finish_step`` can return True must set
+    ``may_replay = True`` (class attribute; absent reads as True) —
+    the consumer then keeps its input buffers undonated so a replay
+    lands on live data."""
+
+    #: Whether finish_step may ever demand a replay (donation gate).
+    may_replay: bool = True
+
+    def apply(self, plan):
+        """The frozen plan variant the next step should run."""
+        ...
+
+    def finish_step(self) -> bool:
+        """Drain this step's probe observations and advance the
+        controller state machine.  True = the step's decodes may be
+        wrong; the caller must discard its outputs and replay."""
+        ...
+
+    def metrics(self) -> dict:
+        """Cumulative counters in the trainer/serve ``comm/*`` family."""
+        ...
+
+
+class ErrorEscalationController:
+    """Error-driven codec escalation (``escalate=<fallback>@<thr>``).
+
+    Per escalating codec identity (:func:`collectives._slot_key`) the
+    controller keeps a decaying EMA of the transport's sampled relative
+    quantization error and runs a two-state machine::
+
+        NORMAL ──(EMA >= threshold)──> ESCALATED(hold)
+           ^                               │
+           └──(hold expired AND EMA < threshold)──┘
+
+    * In NORMAL the declared lossy codec runs and its ``_err_probe``
+      feeds the EMA (``DECAY``-weighted toward each step's worst
+      observation).
+    * In ESCALATED ``apply`` swaps every path under the key to the
+      registered fallback codec — which carries no ``escalate=`` policy
+      and so emits NO probes; the EMA pure-time-decays (``ema *=
+      DECAY`` per step) toward zero instead.  After at least ``hold``
+      steps AND once the decayed EMA sits below the threshold again,
+      the path de-escalates back to the declared codec.
+
+    Escalation never requires a replay (``may_replay = False``): the
+    escalated step already ran lossily-but-correctly; the swap only
+    changes FUTURE steps.  State flips surface as ``policy/escalate`` /
+    ``policy/deescalate`` reporter events and the ``comm/<path>_err_ema``
+    / ``comm/<path>_escalated`` metrics keys.
+    """
+
+    #: Codec swaps take effect next step; no step is ever invalidated.
+    may_replay = False
+    #: EMA weight: ``ema = DECAY*ema + (1-DECAY)*obs`` on observed steps,
+    #: ``ema *= DECAY`` on silent (escalated) steps — one spike decays
+    #: below any threshold well inside a default hold window.
+    DECAY = 0.75
+
+    def __init__(self, reporter=None):
+        self.reporter = reporter
+        self._obs: collections.deque = collections.deque()
+        self._ema: dict = {}      # key -> relative-error EMA
+        self._hold: dict = {}     # escalated key -> hold steps remaining
+        self._paths: dict = {}    # key -> set of plan path names (events)
+        self.escalations = 0
+        self.deescalations = 0
+        cc._ERR_CONTROLLERS.add(self)
+
+    # ---- plan resolution ---------------------------------------------------
+    def escalated(self, codec) -> bool:
+        """Whether ``codec``'s identity currently runs its fallback."""
+        return cc._slot_key(codec) in self._hold
+
+    def apply(self, plan):
+        """Per-path fallback swap over a CommPlan's codec fields; the
+        plan comes back unchanged when nothing is escalated (the common
+        case costs one getattr per path)."""
+        from repro.core import registry
+        changes = {}
+        for f in dataclasses.fields(plan):
+            codec = getattr(plan, f.name)
+            esc = getattr(codec, "escalate", None)
+            if esc is None:
+                continue
+            key = cc._slot_key(codec)
+            self._paths.setdefault(key, set()).add(f.name)
+            if key in self._hold:
+                changes[f.name] = registry.fallback_codec(esc[0])
+        return dataclasses.replace(plan, **changes) if changes else plan
+
+    # ---- the between-steps protocol tick ----------------------------------
+    def finish_step(self) -> bool:
+        """Drain this step's error probes, advance every key's EMA, and
+        flip escalation states.  Always returns False — escalation never
+        invalidates the step that observed the error."""
+        jax.effects_barrier()   # flush in-flight probe callbacks
+        fresh: dict = {}
+        while True:
+            try:
+                key, err = self._obs.popleft()
+            except IndexError:
+                break
+            # multiple hops (tp_fwd + tp_bwd, rings) share a key within
+            # one step: track the step's WORST observation
+            fresh[key] = max(fresh.get(key, 0.0), err)
+        for key in set(self._ema) | set(fresh):
+            if key in fresh:
+                cur = self._ema.get(key)
+                self._ema[key] = fresh[key] if cur is None else \
+                    self.DECAY * cur + (1.0 - self.DECAY) * fresh[key]
+            else:   # silent step (escalated, or the path didn't run)
+                self._ema[key] = self.DECAY * self._ema[key]
+        for key in list(self._ema):
+            fallback, threshold = key.escalate
+            ema = self._ema[key]
+            if key in self._hold:
+                self._hold[key] -= 1
+                if self._hold[key] <= 0 and ema < threshold:
+                    del self._hold[key]
+                    self.deescalations += 1
+                    self._event("policy/deescalate", key, err_ema=ema)
+            elif ema >= threshold:
+                self._hold[key] = int(getattr(key, "hold", 1))
+                self.escalations += 1
+                self._event("policy/escalate", key, err_ema=ema,
+                            fallback=fallback)
+        return False
+
+    # ---- telemetry --------------------------------------------------------
+    def _event(self, kind, key, **fields) -> None:
+        if self.reporter is not None:
+            paths = ",".join(sorted(self._paths.get(key, ()))) or "?"
+            self.reporter.event(kind, paths=paths, **fields)
+
+    def metrics(self) -> dict:
+        """Cumulative flip counters plus the per-path live EMA/state in
+        the trainer/serve ``comm/*`` key family."""
+        m = {"comm/escalations": float(self.escalations),
+             "comm/deescalations": float(self.deescalations)}
+        for key, paths in self._paths.items():
+            for path in paths:
+                m[f"comm/{path}_err_ema"] = float(self._ema.get(key, 0.0))
+                m[f"comm/{path}_escalated"] = \
+                    1.0 if key in self._hold else 0.0
+        return m
+
+
+class PolicyEngine:
+    """Resolve -> compile-cache -> replay for one plan consumer.
+
+    ``build(plan) -> compiled_fn`` is the consumer's compile callback
+    (the trainer closes over ``build_train_step``, the serve engine over
+    its decode-step builder); the engine owns the plan->fn cache, so a
+    resolved variant compiles exactly once no matter which controller
+    proposed it.  Drive a step with :meth:`run`::
+
+        engine = PolicyEngine(plan, build,
+                              controllers=default_controllers(plan))
+        out, plan = engine.run(step, lambda fn: fn(state, batch))
+
+    ``run`` resolves the step's plan (warmup via ``plan.at_step``;
+    ``step=None`` skips warmup scheduling — the serve engine's decode
+    tick has no step counter), invokes the compiled fn, then ticks every
+    controller — replaying the step while any controller demands it
+    (slot-overflow resync; the static bound cannot overflow, so the loop
+    terminates).  When :attr:`replayable` is True the consumer must not
+    donate the inputs ``invoke`` closes over."""
+
+    def __init__(self, plan, build, *, controllers: tuple = ()):
+        self.base_plan = plan
+        self._build = build
+        self.controllers = tuple(controllers)
+        self._fns: dict = {}    # resolved frozen CommPlan -> compiled fn
+
+    # ---- composition -------------------------------------------------------
+    @property
+    def replayable(self) -> bool:
+        """True when any controller may demand a post-step replay — the
+        consumer must then keep its input buffers undonated."""
+        return any(getattr(c, "may_replay", True)
+                   for c in self.controllers)
+
+    def controller(self, cls):
+        """The first attached controller of type ``cls``, or None."""
+        for c in self.controllers:
+            if isinstance(c, cls):
+                return c
+        return None
+
+    # ---- resolution --------------------------------------------------------
+    def plan_at(self, step: int | None = None):
+        """The frozen plan variant active at ``step``: the base plan's
+        warmup schedule resolved first (identity during the warmup
+        window), then every controller's proposal in stack order."""
+        plan = self.base_plan if step is None \
+            else self.base_plan.at_step(step)
+        for c in self.controllers:
+            plan = c.apply(plan)
+        return plan
+
+    def warmup_active(self, step: int) -> bool:
+        """Whether ``step`` still runs the base plan's warmup variant."""
+        return self.base_plan.at_step(step) != self.base_plan.steady()
+
+    def fn_for(self, step: int | None = None):
+        """``(compiled_fn, plan)`` for the variant active at ``step`` —
+        compiled on first use, cached by frozen plan identity after."""
+        plan = self.plan_at(step)
+        fn = self._fns.get(plan)
+        if fn is None:
+            fn = self._fns[plan] = self._build(plan)
+        return fn, plan
+
+    @property
+    def compiled_count(self) -> int:
+        """Distinct plan variants compiled so far (retrace boundedness:
+        warmup + escalation + the quantized negotiation grid)."""
+        return len(self._fns)
+
+    # ---- the step protocol -------------------------------------------------
+    def finish_step(self) -> bool:
+        """Tick EVERY controller (each drains its own probe stream —
+        no short-circuit) and report whether any demands a replay."""
+        replay = False
+        for c in self.controllers:
+            replay = bool(c.finish_step()) or replay
+        return replay
+
+    def run(self, step: int | None, invoke):
+        """One engine-owned step: resolve, ``invoke(compiled_fn)``, tick
+        controllers, and replay until every controller is satisfied.
+        Returns ``(outputs, plan)`` for the invocation that stuck."""
+        fn, plan = self.fn_for(step)
+        out = invoke(fn)
+        while self.finish_step():
+            # a controller invalidated the step (negotiated wire bound
+            # overflowed: decodes may have dropped tail bytes).  Discard
+            # the outputs — replayable engines never donate, so the
+            # inputs are alive — and replay against the resync variant;
+            # the static bound cannot overflow, so this terminates.
+            fn, plan = self.fn_for(step)
+            out = invoke(fn)
+        return out, plan
+
+    def metrics(self) -> dict:
+        """Merged cumulative counters of every attached controller."""
+        m: dict = {}
+        for c in self.controllers:
+            m.update(c.metrics())
+        return m
+
+
+def default_controllers(plan, *, reporter=None,
+                        slot_controller=None) -> tuple:
+    """The controller stack ``plan`` asks for, in canonical order:
+    escalation first (picks WHICH codec runs), slot renegotiation second
+    (negotiates that codec's moved bound).  ``slot_controller`` lets
+    consumers pool slot watermarks across engines (the serve engine's
+    sharing hook) and is attached even when the plan has no ``slot=auto``
+    path — matching the pre-engine wiring.  The plan's STEADY state
+    decides: warmup-window identity plans still want the controllers
+    that will drive the steady plan."""
+    steady = plan.steady()
+    controllers = []
+    if steady.has_escalation():
+        controllers.append(ErrorEscalationController(reporter=reporter))
+    if slot_controller is not None:
+        controllers.append(slot_controller)
+    elif steady.has_auto_slots():
+        controllers.append(cc.SlotController(reporter=reporter))
+    return tuple(controllers)

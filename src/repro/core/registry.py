@@ -39,10 +39,14 @@ Codec args (all optional; normalized output only emits non-defaults):
               dual|folded, ash|hadamard|notransform, blockscale|tensorscale,
               auto|jnp|pallas|pallas_interpret, cd<dtype> (compute dtype),
               tau<float>, eps<float>, seps<float> (scale floor), disabled,
-              chunks=<N>, schedule=pipelined|serial
-    sdp4bit   b<N> (block), norot, chunks=<N>, schedule=pipelined|serial
-    tahquant  g<N> (group), chunks=<N>, schedule=pipelined|serial
-    int8      g<N> (group), chunks=<N>, schedule=pipelined|serial
+              chunks=<N>, schedule=pipelined|serial,
+              escalate=<fallback>@<thr>, hold=<N>
+    sdp4bit   b<N> (block), norot, chunks=<N>, schedule=pipelined|serial,
+              escalate=<fallback>@<thr>, hold=<N>
+    tahquant  g<N> (group), chunks=<N>, schedule=pipelined|serial,
+              escalate=<fallback>@<thr>, hold=<N>
+    int8      g<N> (group), chunks=<N>, schedule=pipelined|serial,
+              escalate=<fallback>@<thr>, hold=<N>
     none      no args ("identity" is a whole-spec alias, not a codec name)
     +zle      lossless zero-run wire stage over any wire-publishing base
               codec (repro.core.lossless); claims g=<N> (zero-run group
@@ -62,6 +66,16 @@ interleave across chunks, ``serial`` the hoisted all-encodes-first
 baseline kept for parity testing.  Both are bit-identical; the token is
 a no-op at ``chunks=1``.
 
+``escalate=<fallback>@<thr>`` opts a lossy codec into error-driven
+codec escalation (``repro.core.policy.ErrorEscalationController``):
+the transport streams a sampled relative-quantization-error probe, and
+when the decaying error EMA crosses ``<thr>`` the controller swaps the
+path to the codec registered as fallback ``<fallback>`` (see
+:func:`register_fallback`; built-ins: ``bf16`` — the raw-tensor
+identity baseline — plus ``int8`` and ``tahquant``), de-escalating
+after a ``hold=<N>`` hysteresis window (default hold=20).  ``hold=``
+without ``escalate=`` is rejected — it would be silently inert.
+
 Examples::
 
     tp=taco:e4m3:b256:folded,grad_rs=sdp4bit,pp=tahquant,weight_ag=none
@@ -73,8 +87,8 @@ from __future__ import annotations
 import dataclasses
 from typing import Callable, Protocol, runtime_checkable
 
-from repro.core.codecs import (IdentityCodec, Int8Codec, Sdp4BitCodec,
-                               TacoCodec, TahQuantCodec)
+from repro.core.codecs import (DEFAULT_HOLD, IdentityCodec, Int8Codec,
+                               Sdp4BitCodec, TacoCodec, TahQuantCodec)
 from repro.core.lossless import ZleCodec
 from repro.core.overlap import PIPELINED, SCHEDULES
 from repro.core.parallel import PATHS, CommPlan
@@ -85,6 +99,7 @@ __all__ = [
     "register_stage", "list_stages",
     "codec_from_spec", "codec_to_spec", "from_spec", "to_spec",
     "register_alias", "list_aliases",
+    "register_fallback", "list_fallbacks", "fallback_codec",
 ]
 
 
@@ -245,6 +260,38 @@ def _apply_stage(entry: StageEntry, codec, stage_args: tuple, spec: str):
             f"bad args for stage {entry.name!r}: {spec!r} ({e})") from e
 
 
+_FALLBACKS: dict[str, str] = {}
+
+
+def register_fallback(name: str, spec: str) -> None:
+    """Register an escalation fallback: ``escalate=<name>@<thr>`` swaps
+    the escalated path to ``codec_from_spec(spec)``.  The fallback spec
+    must itself parse and must NOT carry an ``escalate=`` token (an
+    escalated codec emits no error probes — a chained escalation could
+    never fire and would be silently inert)."""
+    codec = codec_from_spec(spec)
+    if getattr(codec, "escalate", None) is not None:
+        raise CommSpecError(
+            f"fallback {name!r} -> {spec!r} carries its own 'escalate=' "
+            "token; escalation fallbacks must be terminal")
+    _FALLBACKS[name] = spec
+
+
+def list_fallbacks() -> dict[str, str]:
+    """Copy of the escalation-fallback table (name -> codec spec)."""
+    return dict(_FALLBACKS)
+
+
+def fallback_codec(name: str):
+    """The codec instance registered as escalation fallback ``name``."""
+    try:
+        return codec_from_spec(_FALLBACKS[name])
+    except KeyError:
+        raise CommSpecError(
+            f"unknown escalation fallback {name!r}; "
+            f"registered: {sorted(_FALLBACKS)}") from None
+
+
 def register_alias(name: str, spec: str) -> None:
     """Register a whole-spec alias (e.g. ``taco3d``)."""
     _ALIASES[name] = spec
@@ -374,6 +421,62 @@ def _schedule_val(tok):
     return val
 
 
+def _escalate_val(tok):
+    """``escalate=<fallback>@<thr>`` codec arg -> validated
+    ``(fallback_name, threshold)`` tuple."""
+    val = tok[len("escalate="):]
+    name, sep, thr = val.partition("@")
+    if not sep or not name or not thr:
+        raise CommSpecError(
+            f"arg {tok!r}: escalate needs <fallback>@<threshold> "
+            "(e.g. escalate=bf16@0.08)")
+    if name not in _FALLBACKS:
+        raise CommSpecError(
+            f"arg {tok!r}: unknown escalation fallback {name!r}; "
+            f"registered: {sorted(_FALLBACKS)}")
+    try:
+        t = float(thr)
+    except ValueError:
+        raise CommSpecError(
+            f"arg {tok!r}: escalation threshold must be a float") from None
+    if not t > 0.0:
+        raise CommSpecError(
+            f"arg {tok!r}: escalation threshold must be > 0, got {t}")
+    return (name, t)
+
+
+def _hold_val(tok):
+    """``hold=<N>`` codec arg -> N (>= 1)."""
+    try:
+        n = int(tok[len("hold="):])
+    except ValueError:
+        raise CommSpecError(
+            f"arg {tok!r}: hold needs an integer >= 1") from None
+    if n < 1:
+        raise CommSpecError(f"arg {tok!r}: hold must be >= 1, got {n}")
+    return n
+
+
+def _check_hold_has_escalate(kw, name):
+    """Reject ``hold=`` without ``escalate=`` — the hysteresis window is
+    meaningless (and silently inert) without an escalation policy."""
+    if "hold" in kw and "escalate" not in kw:
+        raise CommSpecError(
+            f"codec {name!r}: 'hold=' requires an 'escalate=' token")
+
+
+def _escalation_args(codec) -> list:
+    """Normalized (non-default, fixed-order) escalate/hold spec args —
+    shared tail of every lossy codec's unparse."""
+    out = []
+    if codec.escalate is not None:
+        name, thr = codec.escalate
+        out.append(f"escalate={name}@{thr!r}")
+        if codec.hold != DEFAULT_HOLD:
+            out.append(f"hold={codec.hold}")
+    return out
+
+
 def _parse_taco(args):
     kw = {}
     codec_kw = {}
@@ -389,6 +492,10 @@ def _parse_taco(args):
             put("chunks", _chunks_val(tok), tok, into=codec_kw)
         elif tok.startswith("schedule="):
             put("schedule", _schedule_val(tok), tok, into=codec_kw)
+        elif tok.startswith("escalate="):
+            put("escalate", _escalate_val(tok), tok, into=codec_kw)
+        elif tok.startswith("hold="):
+            put("hold", _hold_val(tok), tok, into=codec_kw)
         elif tok in _TACO_FMT:
             put("fmt", tok, tok)
         elif tok in _TACO_META:
@@ -415,6 +522,7 @@ def _parse_taco(args):
             put("enabled", False, tok)
         else:
             raise CommSpecError(f"unknown taco arg {tok!r}")
+    _check_hold_has_escalate(codec_kw, "taco")
     # invalid combinations (e.g. tensorscale + g<N>) raise ValueError in
     # TacoConfig.__post_init__; codec_from_spec wraps that as CommSpecError
     return TacoCodec(TacoConfig(**kw), **codec_kw)
@@ -452,6 +560,7 @@ def _unparse_taco(codec):
         out.append(f"chunks={codec.chunks}")
     if codec.schedule != PIPELINED:
         out.append(f"schedule={codec.schedule}")
+    out += _escalation_args(codec)
     return tuple(out)
 
 
@@ -462,12 +571,17 @@ def _parse_sdp4bit(args):
             kw["chunks"] = _chunks_val(tok)
         elif tok.startswith("schedule="):
             kw["schedule"] = _schedule_val(tok)
+        elif tok.startswith("escalate="):
+            kw["escalate"] = _escalate_val(tok)
+        elif tok.startswith("hold="):
+            kw["hold"] = _hold_val(tok)
         elif tok.startswith("b") and tok[1:].isdigit():
             kw["block"] = _pos_int(tok, "b")
         elif tok == "norot":
             kw["rotate"] = False
         else:
             raise CommSpecError(f"unknown sdp4bit arg {tok!r}")
+    _check_hold_has_escalate(kw, "sdp4bit")
     return Sdp4BitCodec(**kw)
 
 
@@ -481,6 +595,7 @@ def _unparse_sdp4bit(codec):
         out.append(f"chunks={codec.chunks}")
     if codec.schedule != PIPELINED:
         out.append(f"schedule={codec.schedule}")
+    out += _escalation_args(codec)
     return tuple(out)
 
 
@@ -492,10 +607,15 @@ def _make_group_codec(cls, name):
                 kw["chunks"] = _chunks_val(tok)
             elif tok.startswith("schedule="):
                 kw["schedule"] = _schedule_val(tok)
+            elif tok.startswith("escalate="):
+                kw["escalate"] = _escalate_val(tok)
+            elif tok.startswith("hold="):
+                kw["hold"] = _hold_val(tok)
             elif tok.startswith("g") and tok[1:].isdigit():
                 kw["group"] = _pos_int(tok, "g")
             else:
                 raise CommSpecError(f"unknown {name} arg {tok!r}")
+        _check_hold_has_escalate(kw, name)
         return cls(**kw)
 
     def unparse(codec):
@@ -506,6 +626,7 @@ def _make_group_codec(cls, name):
             out.append(f"chunks={codec.chunks}")
         if codec.schedule != PIPELINED:
             out.append(f"schedule={codec.schedule}")
+        out += _escalation_args(codec)
         return tuple(out)
 
     return parse, unparse
@@ -551,6 +672,14 @@ def _unparse_zle(codec):
 
 register_stage("zle", ZleCodec, _wrap_zle, unparse=_unparse_zle,
                args=("g=", "slot=", "headroom="))
+
+# built-in escalation fallbacks: the precision ladder a lossy codec can
+# climb when its error EMA spikes ("bf16" = the raw-tensor identity
+# baseline — lossless, 2 B/elem).  Registered AFTER the codecs they
+# parse through.
+register_fallback("bf16", "none")
+register_fallback("int8", "int8")
+register_fallback("tahquant", "tahquant")
 
 register_alias("identity", "baseline")
 register_alias("baseline", "")                  # identity everywhere

@@ -17,6 +17,7 @@ device work is the one cached probe encode behind
 """
 from __future__ import annotations
 
+import collections
 import logging
 import time
 
@@ -50,6 +51,15 @@ def achieved_probe_ratio(codec) -> float:
     return cached
 
 
+def clear_probe_cache() -> None:
+    """Drop every cached :func:`achieved_probe_ratio` entry.  Tests that
+    register throwaway codec variants call this (tests/conftest.py,
+    autouse) so a stale probe ratio can never leak across tests; prod
+    consumers never need it — the cache is keyed by frozen codec
+    identity and a codec's floor never changes."""
+    _PROBE_RATIO_CACHE.clear()
+
+
 def comm_metrics(plan, *, spec: str | None = None,
                  warmup_active: bool | None = None) -> dict:
     """Per-path wire telemetry for the plan that ran (static — no device
@@ -79,10 +89,24 @@ def comm_metrics(plan, *, spec: str | None = None,
             # bootstrapping or resyncing, i.e. moved_frac is unset)
             codec = getattr(plan, path)
             frac = getattr(codec, "moved_frac", None)
+            # moved_frac is a per-chunk tuple when the SlotController
+            # negotiated it, but tolerate a bare scalar (or None) —
+            # hand-built codecs and future controllers need not tuple-ize
+            if frac is None:
+                worst = 1.0
+            elif isinstance(frac, (int, float)):
+                worst = float(frac)
+            else:
+                worst = max(frac)
             m[f"comm/{path}_slot_auto"] = 1.0
             m[f"comm/{path}_negotiated_bytes"] = \
-                m[f"comm/{path}_bytes_per_elem"] * \
-                (1.0 if frac is None else max(frac))
+                m[f"comm/{path}_bytes_per_elem"] * worst
+    for path, esc in plan.escalation_modes().items():
+        if esc is not None:   # escalate= policy on path: surface the
+            # static threshold; the live error EMA / escalated flag come
+            # from the ErrorEscalationController's metrics() (merged into
+            # the same comm/* family by the trainer and serve engine)
+            m[f"comm/{path}_escalate_threshold"] = float(esc[1])
     return m
 
 
@@ -94,14 +118,28 @@ class Reporter:
     """Append-only event/counter sink.
 
     ``event(kind, **fields)`` records one row; rows are plain dicts so
-    consumers (launch CLIs, benchmarks, the future adaptive controller)
+    consumers (launch CLIs, benchmarks, the policy engine's controllers)
     aggregate without schema machinery.  An optional logger mirrors each
-    event at DEBUG and counters at the caller's discretion."""
+    event at DEBUG and counters at the caller's discretion.
 
-    def __init__(self, log: logging.Logger | None = None):
-        self.rows: list[dict] = []
+    ``maxlen`` turns the row store into a ring buffer keeping only the
+    newest ``maxlen`` rows — long serving runs emit one row per request
+    and would otherwise grow without bound (the serve engine passes
+    this).  Counters are cumulative either way, and ``drain()`` still
+    returns whatever rows are currently held and empties the store."""
+
+    def __init__(self, log: logging.Logger | None = None, *,
+                 maxlen: int | None = None):
+        if maxlen is not None and maxlen < 1:
+            raise ValueError(f"Reporter maxlen must be >= 1, got {maxlen}")
+        self.rows = [] if maxlen is None \
+            else collections.deque(maxlen=maxlen)
         self.counters: dict[str, float] = {}
         self._log = log
+
+    @property
+    def maxlen(self) -> int | None:
+        return getattr(self.rows, "maxlen", None)
 
     def event(self, kind: str, **fields) -> dict:
         row = {"kind": kind, "t": time.monotonic(), **fields}
@@ -117,15 +155,19 @@ class Reporter:
         return [r for r in self.rows if r["kind"] == kind]
 
     def drain(self) -> list[dict]:
-        rows, self.rows = self.rows, []
+        rows = list(self.rows)
+        self.rows.clear()
         return rows
 
 
 def percentile(values, q: float) -> float:
     """Nearest-rank percentile (q in [0,100]) of a non-empty sequence."""
     import math
-    xs = sorted(values)
-    if not xs:
+    values = list(values)
+    if not values:                 # before sorting: the emptiness of a
+        # one-shot iterable must be judged on the materialized values,
+        # and an empty input should not pay (or mask) the sort
         raise ValueError("percentile of empty sequence")
+    xs = sorted(values)
     rank = max(1, math.ceil(len(xs) * q / 100.0))
     return float(xs[min(rank, len(xs)) - 1])

@@ -56,6 +56,10 @@ from repro.serve.scheduler import DECODE, PREFILL, Request, Scheduler
 
 DEFAULT_BUCKETS = (8, 32)
 
+#: Ring-buffer depth of the engine's default Reporter: enough request
+#: rows for meaningful p99 percentiles, bounded for month-long runs.
+REPORTER_MAXLEN = 4096
+
 
 def _tp_hops_per_token(cfg) -> int:
     """Compressed tp_g AllReduce hops one decode token crosses (embed +
@@ -80,21 +84,28 @@ class ServeEngine:
         if not self.buckets:
             raise ValueError("need at least one prefill bucket length")
         self.collect_logits = collect_logits
+        # default reporter: ring-buffered — a long-lived engine emits one
+        # row per request and must not grow host memory without bound
+        # (counters stay cumulative; pass an unbounded Reporter to keep
+        # every row)
         self.reporter = reporter if reporter is not None \
-            else telemetry.Reporter()
-        # slot=auto on any TP path: renegotiate the decode wire bound
-        # between ticks (pass a shared SlotController to pool watermarks
-        # across engines; default builds a private one).  Decode-cache
-        # donation is disabled in that mode so an overflowed tick can be
-        # replayed bit-exactly — prefill keeps donation, its hops always
-        # move the static bound (the base plan is never negotiated).
-        from repro.core.collectives import SlotController
-        if slot_controller is not None:
-            self.slots = slot_controller
-        elif ctx.plan.has_auto_slots():
-            self.slots = SlotController(reporter=self.reporter)
-        else:
-            self.slots = None
+            else telemetry.Reporter(maxlen=REPORTER_MAXLEN)
+        # the PolicyEngine owns decode-plan resolution, the compiled-step
+        # cache, and the controller replay protocol: slot=auto TP paths
+        # renegotiate the decode wire bound between ticks (pass a shared
+        # SlotController to pool watermarks across engines; the default
+        # builds a private one) and escalate= paths swap to their
+        # fallback codec on error spikes.  Decode-cache donation is
+        # disabled while a replay-capable controller is attached so an
+        # overflowed tick can be replayed bit-exactly — prefill keeps
+        # donation, its hops always move the static bound (the base plan
+        # is never negotiated).
+        from repro.core import policy
+        self.policy = policy.PolicyEngine(
+            ctx.plan, self._build_decode_for,
+            controllers=policy.default_controllers(
+                ctx.plan, reporter=self.reporter,
+                slot_controller=slot_controller))
 
         self.pager = KVPager(self.max_batch, self.max_len, block=block,
                              total_blocks=total_blocks)
@@ -112,8 +123,7 @@ class ServeEngine:
         self.slot_pos = np.zeros((self.max_batch,), np.int32)
 
         self._decode_traces = 0
-        self._decode_fns: dict = {}   # (negotiated) CommPlan -> compiled
-        self._decode_fn_for()         # warmup trace for the current plan
+        self.policy.fn_for()          # warmup trace for the current plan
         self._prefill_fns: dict[int, object] = {}
         self._install_fn = self._build_install()
         self._extract_fn = self._build_extract()
@@ -152,25 +162,26 @@ class ServeEngine:
             self._decode_traces += 1
             return sharded(params, cache, token, pos)
         # an overflowed negotiated tick is replayed against the same
-        # cache, so the controller mode cannot donate it
-        donate = () if self.slots is not None else (1,)
+        # cache, so a replay-capable controller stack cannot donate it
+        donate = () if self.policy.replayable else (1,)
         return jax.jit(counted, donate_argnums=donate)
 
-    def _decode_fn_for(self):
-        """The compiled decode step for the plan active THIS tick —
-        the base plan, or the SlotController's negotiated variant
-        (renegotiation resolved here on the host, exactly like the
-        trainer's warmup scheduling; negotiated plans are frozen, so
-        each caches its own compiled step)."""
-        plan = self.ctx.plan
-        if self.slots is not None:
-            plan = self.slots.apply(plan)
-        fn = self._decode_fns.get(plan)
-        if fn is None:
-            ctx = self.ctx if plan is self.ctx.plan else \
-                dataclasses.replace(self.ctx, plan=plan)
-            fn = self._decode_fns[plan] = self._build_decode_step(ctx)
-        return fn
+    def _build_decode_for(self, plan):
+        """PolicyEngine build callback: compile the decode step for one
+        resolved frozen plan variant (the base plan, a SlotController
+        negotiation, or an ErrorEscalationController fallback swap —
+        each caches its own compiled step in the engine)."""
+        ctx = self.ctx if plan == self.ctx.plan else \
+            dataclasses.replace(self.ctx, plan=plan)
+        return self._build_decode_step(ctx)
+
+    @property
+    def slots(self):
+        """The engine's SlotController when ``slot=auto`` is active (or
+        one was passed in), else None (back-compat accessor — the
+        PolicyEngine owns the controller stack now)."""
+        from repro.core.collectives import SlotController
+        return self.policy.controller(SlotController)
 
     def _build_prefill_step(self, bucket: int):
         model, ctx = self.model, self.ctx
@@ -288,12 +299,12 @@ class ServeEngine:
         tok = jnp.asarray(self.slot_tok)
         pos = jnp.asarray(self.slot_pos)
         t0 = time.perf_counter()
-        out = self._decode_fn_for()(self.params, self.cache, tok, pos)
-        while self.slots is not None and self.slots.finish_step():
-            # a negotiated wire bound overflowed this tick: discard the
-            # outputs (cache was not donated) and replay against the
-            # controller's static resync plan — which cannot overflow
-            out = self._decode_fn_for()(self.params, self.cache, tok, pos)
+        # the engine resolves this tick's decode plan, dispatches the
+        # cached compiled step, ticks every controller, and replays an
+        # invalidated tick (slot-overflow resync: the cache was not
+        # donated) against the static resync plan until it lands clean
+        out, _ = self.policy.run(
+            None, lambda fn: fn(self.params, self.cache, tok, pos))
         nxt, self.cache = out[0], out[1]
         nxt = np.asarray(jax.block_until_ready(nxt))
         dt = time.perf_counter() - t0
@@ -360,9 +371,10 @@ class ServeEngine:
     def recompiles_after_warmup(self) -> int:
         """Decode-step traces beyond the expected one-per-plan warmup
         traces (0 = the slot table held its shape across all churn and
-        each compiled step was reused every tick; slot renegotiation
-        legitimately adds one trace per distinct negotiated plan)."""
-        return max(0, self._decode_traces - len(self._decode_fns))
+        each compiled step was reused every tick; slot renegotiation and
+        error escalation legitimately add one trace per distinct
+        resolved plan)."""
+        return max(0, self._decode_traces - self.policy.compiled_count)
 
     def summary(self) -> dict:
         rows = self.reporter.of_kind("serve/request")
@@ -370,11 +382,9 @@ class ServeEngine:
                    decode_steps=self.decode_steps,
                    recompiles=self.recompiles_after_warmup(),
                    requests=len(rows))
-        plan = self.ctx.plan if self.slots is None \
-            else self.slots.apply(self.ctx.plan)
-        out.update(telemetry.comm_metrics(plan, spec=None))
-        if self.slots is not None:
-            out.update(self.slots.metrics())
+        out.update(telemetry.comm_metrics(self.policy.plan_at(),
+                                          spec=None))
+        out.update(self.policy.metrics())
         if rows:
             per_tok = [r["decode_s_per_tok"] for r in rows
                        if r["decode_s_per_tok"] is not None]

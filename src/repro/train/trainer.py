@@ -5,17 +5,20 @@ step); the data pipeline is pure-functional in step. ``Trainer.run`` can be
 killed at any step and re-invoked — it resumes from the latest complete
 checkpoint and replays identically (tested in tests/test_checkpoint.py).
 
-Compression policy: the trainer owns the CommPlan *schedule*.  Each step it
-resolves ``ctx.plan.at_step(step)`` OUTSIDE jit (identity plan during the
-warmup window, the steady plan after) and dispatches to a per-plan compiled
-step function — plans are frozen/hashable, so the cache holds a few
-entries and jit never sees a varying policy object.  When any path runs
-under ``slot=auto`` a :class:`repro.core.collectives.SlotController`
-renegotiates the moved wire bound between steps through the same
-mechanism (``apply`` returns a frozen negotiated plan -> its own cached
-step function); buffer donation is disabled in that mode so a step whose
-negotiated bound overflowed can be replayed bit-exactly against the
-static bound.  The normalized spec is persisted in every checkpoint
+Compression policy: the trainer delegates the CommPlan *schedule* to a
+:class:`repro.core.policy.PolicyEngine`.  Each step the engine resolves
+the frozen plan variant to run OUTSIDE jit — warmup scheduling
+(``ctx.plan.at_step``: identity plan during the warmup window, the
+steady plan after) plus every attached controller's proposal — and
+dispatches to a per-plan compiled step function; plans are frozen/
+hashable, so the cache holds a few entries and jit never sees a varying
+policy object.  ``slot=auto`` paths attach a
+:class:`repro.core.collectives.SlotController` (renegotiated wire
+bounds; overflow -> bit-exact replay, so buffer donation is disabled
+while any replay-capable controller is attached) and ``escalate=``
+paths an :class:`repro.core.policy.ErrorEscalationController`
+(error-driven fallback-codec swaps) — both ride the same cached-step-fn
+mechanism.  The normalized spec is persisted in every checkpoint
 manifest and validated on restore; per-path wire-byte telemetry is
 merged into the metrics dict every step.
 """
@@ -30,7 +33,7 @@ import numpy as np
 
 from repro import compat
 from repro.ckpt import checkpoint as ckpt
-from repro.core import telemetry
+from repro.core import policy, telemetry
 from repro.core.registry import to_spec
 from repro.data.pipeline import DataConfig, SyntheticLM
 from repro.optim import adamw
@@ -59,35 +62,44 @@ class Trainer:
         self.oc, self.tc, self.data = oc, tc, data
         self.injector = injector
         self.comm_spec = to_spec(ctx.plan)
-        self._step_fns: dict = {}     # resolved CommPlan -> compiled step
         self.watchdog = StepWatchdog()
         self.losses: list = []
         self.reporter = telemetry.Reporter(log)
-        # slot=auto on any path: run the renegotiation protocol (and give
-        # up buffer donation so an overflowed step can be replayed)
-        from repro.core.collectives import SlotController
-        self.slots = (SlotController(reporter=self.reporter)
-                      if ctx.plan.steady().has_auto_slots() else None)
+        # the engine owns plan resolution, the compiled-step cache, and
+        # the controller replay protocol; default_controllers attaches
+        # what the plan asks for (slot=auto / escalate= paths)
+        self.policy = policy.PolicyEngine(
+            ctx.plan, self._build_step,
+            controllers=policy.default_controllers(
+                ctx.plan, reporter=self.reporter))
         log.info("comm plan: %s%s", self.comm_spec,
-                 " [slot renegotiation active]" if self.slots else "")
+                 f" [{len(self.policy.controllers)} policy controller(s)]"
+                 if self.policy.controllers else "")
 
     # ---- schedule ----------------------------------------------------------
+    @property
+    def slots(self):
+        """The engine's SlotController when ``slot=auto`` is active on
+        any path, else None (back-compat accessor — the PolicyEngine
+        owns the controller stack now)."""
+        from repro.core.collectives import SlotController
+        return self.policy.controller(SlotController)
+
+    def _build_step(self, plan):
+        """PolicyEngine build callback: compile one frozen plan variant
+        (donation stays off while any replay-capable controller is
+        attached, so an invalidated step can be replayed bit-exactly)."""
+        rctx = dataclasses.replace(self.ctx, plan=plan)
+        return build_train_step(self.model, self.mesh, rctx, self.oc,
+                                donate=not self.policy.replayable)
+
     def step_fn_for(self, step: int):
         """The compiled step function for the plan active at ``step``
-        (warmup scheduling AND slot renegotiation resolved here, outside
-        jit — negotiated plans are frozen/hashable like any other, so
-        they cache their own compiled step; the 1/32 fraction grid in
-        ``SlotController`` bounds how many exist)."""
-        plan = self.ctx.plan.at_step(step)
-        if self.slots is not None:
-            plan = self.slots.apply(plan)
-        fn = self._step_fns.get(plan)
-        if fn is None:
-            rctx = dataclasses.replace(self.ctx, plan=plan)
-            fn = build_train_step(self.model, self.mesh, rctx, self.oc,
-                                  donate=self.slots is None)
-            self._step_fns[plan] = fn
-        return fn, plan
+        (warmup scheduling AND every controller proposal resolved by the
+        PolicyEngine, outside jit — resolved plans are frozen/hashable,
+        so each caches its own compiled step; escalation variants and
+        the 1/32 negotiation grid keep the cache bounded)."""
+        return self.policy.fn_for(step)
 
     # ---- state ------------------------------------------------------------
     def init_state(self):
@@ -130,19 +142,14 @@ class Trainer:
                     self.injector.maybe_fail(step)
                 batch = self.data.place(self.data.batch(step), self.mesh,
                                         bspecs)
-                step_fn, plan = self.step_fn_for(step)
                 t0 = time.time()
-                new_params, new_opt, metrics = step_fn(
-                    params, opt_state, batch)
-                while self.slots is not None and self.slots.finish_step():
-                    # a negotiated wire bound overflowed: the step's
-                    # decodes may have dropped tail bytes.  Discard the
-                    # outputs (donate=False keeps the inputs alive) and
-                    # replay against the controller's resync plan — the
-                    # static bound cannot overflow, so this terminates.
-                    step_fn, plan = self.step_fn_for(step)
-                    new_params, new_opt, metrics = step_fn(
-                        params, opt_state, batch)
+                # the engine resolves the step's plan, dispatches the
+                # cached compiled step, ticks every controller, and
+                # replays an invalidated step (slot-overflow resync)
+                # until it lands clean — donation is off in that mode,
+                # so the inputs stay alive across a replay
+                (new_params, new_opt, metrics), plan = self.policy.run(
+                    step, lambda fn: fn(params, opt_state, batch))
                 params, opt_state = new_params, new_opt
                 loss = float(metrics["loss"])
                 dt = time.time() - t0
@@ -153,10 +160,8 @@ class Trainer:
                 # key set with the serving engine's run summary
                 metrics.update(telemetry.comm_metrics(
                     plan, spec=self.comm_spec,
-                    warmup_active=self.ctx.plan.at_step(step)
-                    != self.ctx.plan.steady()))
-                if self.slots is not None:
-                    metrics.update(self.slots.metrics())
+                    warmup_active=self.policy.warmup_active(step)))
+                metrics.update(self.policy.metrics())
                 if step % self.tc.log_every == 0:
                     log.info("step %d loss %.4f gnorm %.3f lr %.2e (%.2fs) "
                              "tp_wire %.3fB/elem",

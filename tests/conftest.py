@@ -11,6 +11,17 @@ def rng():
     return np.random.default_rng(12345)
 
 
+@pytest.fixture(autouse=True)
+def _clear_probe_ratio_cache():
+    """telemetry.achieved_probe_ratio caches per frozen codec identity;
+    tests that register throwaway codec variants under reused names must
+    never see a stale ratio from an earlier test."""
+    from repro.core import telemetry
+    telemetry.clear_probe_cache()
+    yield
+    telemetry.clear_probe_cache()
+
+
 def tp_like(rng, shape, outlier_frac=0.002, scale=0.02, tail=2.0):
     """Synthetic TP-intermediate-tensor: dense near-zero body + long tail
     (paper Fig. 4 distribution)."""

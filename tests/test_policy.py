@@ -1,0 +1,469 @@
+"""Policy-engine tests: spec grammar, escalation state machine, engine
+resolve/compile-cache/replay protocol, and the trainer/serve integration.
+
+The load-bearing invariants:
+
+  * ``escalate=<fallback>@<thr>:hold=<N>`` parses, round-trips through
+    the normalized spec, and rejects malformed policies (unknown
+    fallback, ``hold=`` without ``escalate=``, non-positive values);
+  * a codec WITHOUT the token lowers to byte-identical collective
+    structure with NO host callback — the error probe is free when off;
+  * the :class:`~repro.core.policy.ErrorEscalationController` fires when
+    the error EMA crosses the threshold, holds for at least ``hold``
+    steps, and de-escalates only once the decayed EMA sits below the
+    threshold again (property-tested);
+  * an escalated path's fallback codec has its OWN slot identity, so
+    escalation never contaminates ``slot=auto`` watermarks;
+  * the :class:`~repro.core.policy.PolicyEngine` compiles each frozen
+    variant exactly once (bounded retraces) for both the trainer and the
+    serving engine.
+"""
+import sys
+from collections import Counter
+from pathlib import Path
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from jax.sharding import PartitionSpec as P
+
+from repro.compat import shard_map
+from repro.core import collectives as cc
+from repro.core import policy, telemetry
+from repro.core.registry import (CommSpecError, codec_from_spec,
+                                 codec_to_spec, fallback_codec, from_spec,
+                                 list_fallbacks, register_fallback, to_spec)
+
+sys.path.insert(0, str(Path(__file__).resolve().parent))
+try:
+    from hypothesis import given, settings
+    from hypothesis import strategies as st
+except ImportError:                      # offline container
+    from _hypothesis_compat import given, settings
+    from _hypothesis_compat import strategies as st
+
+ID = codec_from_spec("none")
+
+
+def one_dev_mesh():
+    return jax.make_mesh((1, 1), ("data", "model"))
+
+
+def lowered_text(fn, x):
+    return jax.jit(shard_map(fn, mesh=one_dev_mesh(), in_specs=P(),
+                             out_specs=P(), check_vma=False)
+                   ).lower(x).as_text()
+
+
+def collective_counts(txt):
+    import re
+    pat = re.compile(
+        r"stablehlo\.(all_gather|all_to_all|all_reduce|reduce_scatter"
+        r"|collective_permute|collective_broadcast)\b")
+    return Counter(m.group(1) for m in pat.finditer(txt))
+
+
+# --------------------------------------------------------------------------
+# spec grammar: escalate= / hold= parse, round-trip, reject
+# --------------------------------------------------------------------------
+
+@pytest.mark.parametrize("spec", [
+    "taco:jnp:escalate=bf16@0.08",
+    "taco:folded:escalate=int8@0.05:hold=7",
+    "int8:g256:escalate=bf16@0.02:hold=4",
+    "tahquant:g128:escalate=bf16@0.1",
+    "sdp4bit:escalate=tahquant@0.25:hold=2",
+    "taco+zle:jnp:escalate=bf16@0.08:slot=auto",
+])
+def test_escalate_spec_round_trips(spec):
+    codec = codec_from_spec(spec)
+    assert codec.escalate is not None
+    assert codec_from_spec(codec_to_spec(codec)) == codec
+
+
+def test_default_hold_omitted_from_normalized_spec():
+    codec = codec_from_spec("taco:folded:escalate=bf16@0.08:hold=20")
+    assert "hold=" not in codec_to_spec(codec)     # 20 is the default
+    codec = codec_from_spec("taco:folded:escalate=bf16@0.08:hold=5")
+    assert "hold=5" in codec_to_spec(codec)
+
+
+def test_escalate_routes_past_zle_stage_to_base_codec():
+    """The zle stage claims slot=/g=/headroom= args only; escalate= must
+    parse into the wrapped base codec and surface via delegation."""
+    codec = codec_from_spec("taco+zle:jnp:escalate=int8@0.1:slot=auto")
+    assert codec.inner.escalate == ("int8", 0.1)
+    assert codec.escalate == ("int8", 0.1)         # ZleCodec delegates
+
+
+@pytest.mark.parametrize("spec", [
+    "taco:jnp:hold=5",                     # hold without escalate
+    "taco:jnp:escalate=nosuch@0.1",        # unregistered fallback
+    "taco:jnp:escalate=bf16@0",            # non-positive threshold
+    "taco:jnp:escalate=bf16",              # missing @threshold
+    "taco:jnp:escalate=bf16@abc",          # non-numeric threshold
+    "taco:jnp:escalate=bf16@0.1:hold=0",   # hold < 1
+    "int8:g256:hold=3",                    # hold-alone on group codec
+])
+def test_bad_escalation_specs_rejected(spec):
+    with pytest.raises(CommSpecError):
+        codec_from_spec(spec)
+
+
+def test_fallback_registry():
+    assert {"bf16", "int8", "tahquant"} <= set(list_fallbacks())
+    assert fallback_codec("bf16") == ID                # lossless identity
+    assert fallback_codec("int8") == codec_from_spec("int8")
+    with pytest.raises(CommSpecError):
+        fallback_codec("nosuch")
+    # fallbacks must be terminal: a fallback carrying its own escalate=
+    # policy would chain swaps and is rejected at registration
+    with pytest.raises(CommSpecError):
+        register_fallback("chained", "int8:escalate=bf16@0.1")
+
+
+def test_plan_escalation_modes():
+    plan = from_spec("tp=taco:jnp:escalate=bf16@0.08,grad_rs=int8")
+    modes = plan.escalation_modes()
+    assert modes["tp_fwd"] == ("bf16", 0.08)
+    assert modes["tp_bwd"] == ("bf16", 0.08)
+    assert modes["grad_rs"] is None
+    assert plan.has_escalation()
+    assert not from_spec("tp=taco:jnp").has_escalation()
+    m = telemetry.comm_metrics(plan)
+    assert m["comm/tp_fwd_escalate_threshold"] == 0.08
+    assert "comm/grad_rs_escalate_threshold" not in m
+
+
+# --------------------------------------------------------------------------
+# HLO: the probe is FREE when the token is absent, and never adds a
+# collective when present
+# --------------------------------------------------------------------------
+
+def test_no_escalate_token_means_no_probe_in_hlo(rng):
+    """Without escalate= the lowered decode path must contain no host
+    callback at all and exactly the baseline collective structure."""
+    x = jnp.asarray(rng.normal(0, 1, (1, 4096)), jnp.bfloat16)
+    plain = codec_from_spec("taco:jnp")
+    esc = codec_from_spec("taco:jnp:escalate=bf16@0.05")
+    hop = lambda c: (lambda v: cc.all_gather_c(v, "model", 0, c, ID))
+    plain_txt = lowered_text(hop(plain), x)
+    esc_txt = lowered_text(hop(esc), x)
+    assert "callback" not in plain_txt.lower()     # probe fully absent
+    assert "callback" in esc_txt.lower()           # probe present with token
+    assert collective_counts(plain_txt) == {"all_gather": 1}
+    assert collective_counts(esc_txt) == {"all_gather": 1}   # still fused
+
+
+def test_escalate_probe_adds_no_collectives_on_ring(rng):
+    x = jnp.asarray(rng.normal(0, 1, (1, 4096)), jnp.bfloat16)
+    plain = codec_from_spec("taco:jnp:chunks=4")
+    esc = codec_from_spec("taco:jnp:chunks=4:escalate=bf16@0.05")
+    hop = lambda c: (lambda v: cc.all_gather_c(v, "model", 0, c, ID))
+    assert collective_counts(lowered_text(hop(plain), x)) == \
+        collective_counts(lowered_text(hop(esc), x))
+
+
+# --------------------------------------------------------------------------
+# ErrorEscalationController: state-machine units
+# --------------------------------------------------------------------------
+
+PLAN = "tp_fwd=int8:g256:escalate=bf16@0.05:hold=3"
+
+
+def make_ctl(spec=PLAN, reporter=None):
+    plan = from_spec(spec)
+    ctl = policy.ErrorEscalationController(reporter=reporter)
+    ctl.apply(plan)                      # registers the key->path map
+    key = cc._slot_key(plan.tp_fwd)
+    return plan, ctl, key
+
+
+def tick(ctl, key, err=None):
+    if err is not None:
+        ctl._obs.append((key, err))
+    assert ctl.finish_step() is False    # escalation NEVER replays
+    return ctl
+
+
+def test_controller_fires_on_sustained_error():
+    plan, ctl, key = make_ctl()
+    tick(ctl, key, 0.2)                  # first obs seeds the EMA high
+    assert ctl.escalated(plan.tp_fwd)
+    assert ctl.escalations == 1
+    swapped = ctl.apply(plan)
+    assert swapped.tp_fwd == fallback_codec("bf16")
+    m = ctl.metrics()
+    assert m["comm/escalations"] == 1.0
+    assert m["comm/tp_fwd_escalated"] == 1.0
+    assert m["comm/tp_fwd_err_ema"] == pytest.approx(0.2)
+
+
+def test_controller_ignores_subthreshold_error():
+    plan, ctl, key = make_ctl()
+    for _ in range(10):
+        tick(ctl, key, 0.01)             # below 0.05 forever
+    assert not ctl.escalated(plan.tp_fwd)
+    assert ctl.escalations == 0
+    assert ctl.apply(plan) == plan       # plan untouched
+
+
+def test_controller_holds_then_deescalates():
+    plan, ctl, key = make_ctl()          # hold=3, thr=0.05, DECAY=0.75
+    tick(ctl, key, 0.2)                  # fire: EMA=0.2, hold=3
+    # escalated steps are SILENT (the fallback emits no probes): the EMA
+    # pure-time-decays while the hold counts down
+    for i in range(1, 3):
+        tick(ctl, key)
+        assert ctl.escalated(plan.tp_fwd), f"hold broke at step {i}"
+    # hold expires here AND 0.2 * 0.75^3 = 0.084 > 0.05 -> still held
+    tick(ctl, key)
+    assert ctl.escalated(plan.tp_fwd)
+    # next silent step: 0.2 * 0.75^4 = 0.063 > thr; then 0.047 < thr
+    tick(ctl, key)
+    assert ctl.escalated(plan.tp_fwd)
+    tick(ctl, key)
+    assert not ctl.escalated(plan.tp_fwd)
+    assert ctl.deescalations == 1
+    assert ctl.apply(plan) == plan       # back on the declared codec
+
+
+def test_controller_events_reach_reporter():
+    rep = telemetry.Reporter()
+    plan, ctl, key = make_ctl(reporter=rep)
+    tick(ctl, key, 0.5)
+    for _ in range(12):                  # decay through the hold window
+        tick(ctl, key)
+    kinds = [r["kind"] for r in rep.rows]
+    assert kinds.count("policy/escalate") == 1
+    assert kinds.count("policy/deescalate") == 1
+    esc = rep.of_kind("policy/escalate")[0]
+    assert esc["paths"] == "tp_fwd"
+    assert esc["fallback"] == "bf16"
+    assert esc["err_ema"] == pytest.approx(0.5)
+
+
+@settings(max_examples=25, deadline=None)
+@given(seed=st.integers(0, 2**31 - 1), hold=st.integers(1, 6))
+def test_escalate_hold_deescalate_property(seed, hold):
+    """Random error traffic: every escalation episode lasts >= hold
+    steps, de-escalation only happens with the EMA below threshold, and
+    the flip counters always reconcile with the live state."""
+    thr = 0.05
+    plan = from_spec(f"tp_fwd=int8:g256:escalate=bf16@{thr}:hold={hold}")
+    ctl = policy.ErrorEscalationController()
+    ctl.apply(plan)
+    key = cc._slot_key(plan.tp_fwd)
+    rng = np.random.default_rng(seed)
+    streak = 0
+    for _ in range(60):
+        was = ctl.escalated(plan.tp_fwd)
+        if not was:
+            # the declared codec runs and emits a probe; escalated steps
+            # are silent (the fallback carries no escalate= policy)
+            ctl._obs.append((key, float(rng.choice([0.005, 0.3]))))
+        assert ctl.finish_step() is False
+        now = ctl.escalated(plan.tp_fwd)
+        if now:
+            streak += 1
+        elif was:                        # de-escalation edge
+            assert streak >= hold, (streak, hold)
+            assert ctl._ema[key] < thr
+            streak = 0
+        assert ctl.escalations - ctl.deescalations == int(now)
+        assert (ctl.apply(plan) != plan) == now
+
+
+# --------------------------------------------------------------------------
+# slot=auto interaction: the fallback has its own slot identity
+# --------------------------------------------------------------------------
+
+def test_escalated_codec_has_distinct_slot_key():
+    base = codec_from_spec("taco+zle:jnp:slot=auto:escalate=tahquant@0.05")
+    fb = fallback_codec("tahquant")
+    assert cc._slot_key(base) != cc._slot_key(fb)
+
+
+def test_escalation_swap_skips_slot_negotiation():
+    """With both controllers attached (canonical order: escalation then
+    slots), an escalated path runs the fallback codec verbatim — the
+    SlotController must not negotiate a moved bound onto it."""
+    plan = from_spec("tp=taco+zle:jnp:slot=auto:escalate=tahquant@0.05")
+    ctls = policy.default_controllers(plan)
+    assert [type(c) for c in ctls] == \
+        [policy.ErrorEscalationController, cc.SlotController]
+    engine = policy.PolicyEngine(plan, lambda p: p, controllers=ctls)
+    esc = engine.controller(policy.ErrorEscalationController)
+    esc._obs.append((cc._slot_key(plan.tp_fwd), 0.9))
+    engine.finish_step()
+    resolved = engine.plan_at()
+    fb = fallback_codec("tahquant")
+    assert resolved.tp_fwd == fb and resolved.tp_bwd == fb
+    assert getattr(resolved.tp_fwd, "slot", None) != "auto"
+
+
+# --------------------------------------------------------------------------
+# PolicyEngine: resolve / compile-cache / replay
+# --------------------------------------------------------------------------
+
+class FakeReplayer:
+    """Demands exactly ``n`` replays, then is satisfied forever."""
+    may_replay = True
+
+    def __init__(self, n=1):
+        self.pending, self.ticks = n, 0
+
+    def apply(self, plan):
+        return plan
+
+    def finish_step(self):
+        self.ticks += 1
+        if self.pending > 0:
+            self.pending -= 1
+            return True
+        return False
+
+    def metrics(self):
+        return {"fake/ticks": float(self.ticks)}
+
+
+def test_engine_warmup_dispatch_parity():
+    plan = from_spec("tp=taco:jnp,warmup=3")
+    engine = policy.PolicyEngine(plan, lambda p: p)
+    for step in range(8):
+        fn, resolved = engine.fn_for(step)
+        assert resolved == plan.at_step(step)
+        assert fn == resolved            # build() is identity here
+        assert engine.warmup_active(step) == (step < 3)
+    assert engine.compiled_count == 2    # warmup variant + steady plan
+    # step=None (the serve decode tick) skips warmup scheduling
+    assert engine.plan_at() == plan
+
+
+def test_engine_replay_loop():
+    plan = from_spec("tp=taco:jnp")
+    ctl = FakeReplayer(n=2)
+    engine = policy.PolicyEngine(plan, lambda p: p, controllers=(ctl,))
+    assert engine.replayable
+    calls = []
+    out, ran = engine.run(0, lambda fn: calls.append(fn) or "ok")
+    assert out == "ok" and ran == plan
+    assert len(calls) == 3               # initial + two demanded replays
+    assert ctl.ticks == 3
+    assert engine.metrics() == {"fake/ticks": 3.0}
+
+
+def test_engine_replayable_gates_on_controller_capability():
+    plan = from_spec("tp=taco:jnp:escalate=bf16@0.05")
+    esc_only = policy.PolicyEngine(
+        plan, lambda p: p, controllers=policy.default_controllers(plan))
+    # escalation never invalidates a step -> donation may stay on
+    assert not esc_only.replayable
+    both = policy.PolicyEngine(
+        plan, lambda p: p,
+        controllers=(policy.ErrorEscalationController(),
+                     cc.SlotController()))
+    assert both.replayable               # slots can overflow -> replay
+
+
+def test_default_controllers_composition():
+    assert policy.default_controllers(from_spec("tp=taco:jnp")) == ()
+    (only_esc,) = policy.default_controllers(
+        from_spec("tp=taco:jnp:escalate=bf16@0.1"))
+    assert isinstance(only_esc, policy.ErrorEscalationController)
+    (only_slot,) = policy.default_controllers(
+        from_spec("tp=taco+zle:jnp:slot=auto"))
+    assert isinstance(only_slot, cc.SlotController)
+    # warmup plans attach the controllers their STEADY plan needs
+    (w,) = policy.default_controllers(
+        from_spec("tp=taco+zle:jnp:slot=auto,warmup=5"))
+    assert isinstance(w, cc.SlotController)
+    # a consumer-pooled SlotController is attached verbatim
+    mine = cc.SlotController()
+    ctls = policy.default_controllers(from_spec("tp=taco:jnp"),
+                                      slot_controller=mine)
+    assert ctls == (mine,)
+
+
+def test_engine_end_to_end_escalation_over_jit_hop(rng):
+    """Full loop against a real jit'd compressed all-gather: outlier
+    traffic fires the escalation, the engine swaps to the cached
+    fallback variant, and the retrace count stays at exactly two."""
+    mesh = one_dev_mesh()
+    plan = from_spec("tp_fwd=int8:g256:escalate=bf16@0.02:hold=3")
+
+    def build(p):
+        hop = lambda v: cc.all_gather_c(v, "model", 0, p.tp_fwd, ID)
+        return jax.jit(shard_map(hop, mesh=mesh, in_specs=P(),
+                                 out_specs=P(), check_vma=False))
+
+    engine = policy.PolicyEngine(
+        plan, build, controllers=policy.default_controllers(plan))
+    base = rng.standard_normal(256 * 64).astype(np.float32)
+    spiked = base.copy()
+    spiked[::256] = 200.0                # one outlier per quant group
+    normal = jnp.asarray(base, jnp.bfloat16).reshape(1, -1)
+    burst = jnp.asarray(spiked, jnp.bfloat16).reshape(1, -1)
+
+    ran_plans = []
+    for step in range(16):
+        x = burst if 3 <= step < 8 else normal
+        _, ran = engine.run(None, lambda fn: fn(x))
+        ran_plans.append(ran)
+    m = engine.metrics()
+    assert m["comm/escalations"] >= 1
+    assert any(p != plan for p in ran_plans)       # fallback actually ran
+    assert ran_plans[0] == plan == ran_plans[-1]   # ...and recovered
+    assert m["comm/deescalations"] >= 1
+    assert engine.compiled_count == 2              # base + fallback only
+
+
+# --------------------------------------------------------------------------
+# integration: trainer and serving engine ride the same engine
+# --------------------------------------------------------------------------
+
+@pytest.mark.slow
+def test_trainer_escalates_with_bounded_retraces(tmp_path):
+    from test_train import mesh1, small_setup
+
+    from repro.train.trainer import Trainer
+    # taco's relative error (~0.026) sits above a 1e-6 threshold, so the
+    # first steady step fires; warmup=2 exercises the 3-variant cache
+    model, ctx, oc, tc, data = small_setup(
+        tmp_path, "tp=taco:jnp:escalate=bf16@1e-6:hold=3,warmup=2",
+        total_steps=8)
+    tr = Trainer(model, mesh1(), ctx, oc, tc, data)
+    _, _, losses = tr.run(resume=False)
+    assert len(losses) == 8 and np.all(np.isfinite(losses))
+    m = tr.policy.metrics()
+    assert m["comm/escalations"] >= 1
+    assert m["comm/tp_fwd_escalated"] == 1.0       # held at run end
+    # warmup identity + steady taco + escalated fallback, nothing more
+    assert tr.policy.compiled_count <= 3
+    assert tr.slots is None              # no slot=auto path in this plan
+
+
+@pytest.mark.slow
+def test_serve_engine_escalates_without_recompile_churn():
+    from test_serve_engine import make_engine, model_and_params, prompts
+
+    from repro.core.parallel import ParallelCtx
+    from repro.serve.engine import ServeEngine
+
+    model, params = model_and_params()
+    ctx = ParallelCtx(plan=from_spec("tp=taco:jnp:escalate=bf16@1e-6:hold=2"),
+                      tp_mode="allreduce")
+    eng = ServeEngine(model, jax.make_mesh((1, 1, 1),
+                                           ("pod", "data", "model")),
+                      ctx, params, max_batch=2, max_len=48,
+                      prefill_buckets=(4, 8))
+    for p in prompts((5, 3)):
+        eng.submit(p, max_new=4)
+    eng.run_until_drained()
+    s = eng.summary()
+    assert s["comm/escalations"] >= 1
+    # the escalated variant is a cached policy plan, not recompile churn
+    assert eng.recompiles_after_warmup() == 0
+    assert eng._decode_traces <= 2       # declared + escalated variant
+    assert all(len(r.tokens) == 4 for r in eng.sched.done)
