@@ -23,9 +23,15 @@ the controller's negotiated moved bytes (watermark x headroom, snapped
 to the 1/32 fraction grid), and the achieved bytes underneath.  The
 ``moved_bytes`` field is gated by scripts/check_bench_regression.py
 (moved may not regress above baseline x 1.02), and the pad94 rows back
-the acceptance bound moved <= 0.6x slot.  All three families use
-deterministic fixed-seed data sized quick-agnostically, so the values
-are bit-stable across --quick and full runs.
+the acceptance bound moved <= 0.6x slot.
+
+A fourth family, ``comm_volume/sp/...``, covers the sequence-parallel
+attention hops (the ``sp=`` plan path): per-layer wire bytes of the
+Ulysses packed-qkv all-to-all redistribute and the ring-attention
+packed-KV ppermute hops per codec, plus a padded-sample achieved-ratio
+row for the hybrid stack.  All families use deterministic fixed-seed
+data sized quick-agnostically, so the values are bit-stable across
+--quick and full runs.
 """
 from __future__ import annotations
 
@@ -140,6 +146,69 @@ def moved_rows(quick=False):
                  f"achieved_vs_slot={ach / slot:.4f}")
 
 
+def sp_rows(quick=False):
+    """Emit sequence-parallel attention-hop volume rows
+    (``comm_volume/sp/...``): per layer and device, the Ulysses path
+    moves one packed-qkv all-to-all in and one output all-to-all back
+    (x2 for the backward — the custom_vjp bwd is the inverse
+    redistribute), the ring path moves sp-1 packed-KV ppermute hops
+    (x2 likewise).  Analytic from ``collectives.a2a_wire_bytes`` /
+    ``wire_slot_bytes`` (chunks=1 — sp hops never ring) on gpt-6.7b
+    shapes, plus one deterministic achieved-ratio row for the hybrid
+    ``taco+zle`` stack on a 94%-padded sample (gated within 2% by
+    scripts/check_bench_regression.py like the other achieved rows)."""
+    import jax.numpy as jnp
+
+    from repro.core import collectives as cc
+
+    del quick              # cheap either way; keep rows gate-comparable
+    cfg = get_config("gpt-6.7b")
+    sp, seq, batch_local = 4, 4096, 4
+    s_loc = seq // sp
+    qkv_shape = (batch_local, s_loc, cfg.n_heads, 3 * cfg.hd)
+    out_shape = (batch_local, s_loc, cfg.n_heads, cfg.hd)
+    kv_elems = batch_local * s_loc * cfg.n_heads * 2 * cfg.hd
+    specs = {
+        "baseline_bf16": "none",
+        "taco_fp8": "taco:jnp",
+        "taco_fp8_folded": "taco:jnp:folded",
+        "tahquant_int8": "tahquant",
+        "taco_zle": "taco+zle:jnp",
+    }
+    base_uly = base_ring = None
+    for name, spec in specs.items():
+        codec = codec_from_spec(spec)
+        uly = 2 * (cc.a2a_wire_bytes(qkv_shape, jnp.bfloat16, sp, codec)
+                   + cc.a2a_wire_bytes(out_shape, jnp.bfloat16, sp, codec))
+        slot = cc.wire_slot_bytes(codec, kv_elems, chunks=1)
+        if slot is None:
+            slot = kv_elems * 2                       # raw bf16
+        ring = 2 * (sp - 1) * slot
+        if base_uly is None:
+            base_uly, base_ring = uly, ring
+        emit(f"comm_volume/sp/ulysses/{name}", None,
+             f"wire_MB_per_layer={uly/1e6:.2f};vs_bf16={base_uly/uly:.2f}x")
+        emit(f"comm_volume/sp/ring/{name}", None,
+             f"wire_MB_per_layer={ring/1e6:.2f};"
+             f"vs_bf16={base_ring/ring:.2f}x")
+    # data-dependent: 94% of the local token rows exactly zero (sequence
+    # padding) on a small deterministic sample — achieved < slot via the
+    # zle length headers, reported by the a2a byte reporter itself
+    rng = np.random.default_rng(0)
+    b, s_, h, hd = 1, 256, 8, 16
+    x = rng.standard_normal((b, s_, h, 3 * hd)).astype(np.float32)
+    x[:, s_ - s_ * 94 // 100:] = 0.0
+    sample = jnp.asarray(x, jnp.bfloat16)
+    codec = codec_from_spec("taco+zle:jnp")
+    slot_b = cc.a2a_wire_bytes(sample.shape, jnp.bfloat16, sp, codec)
+    ach_b = cc.a2a_wire_bytes(sample.shape, jnp.bfloat16, sp, codec,
+                              sample=sample)
+    raw = sample.size * 2 * (sp - 1) / sp             # bf16 leave-device
+    emit("comm_volume/sp/achieved/pad94/taco_zle", None,
+         f"slot_ratio={raw / slot_b:.2f}x;"
+         f"achieved_ratio={raw / ach_b:.2f}x")
+
+
 def run(out_dir="results/bench", quick=False):
     codecs = {
         "baseline_bf16": codec_from_spec("none"),
@@ -167,3 +236,4 @@ def run(out_dir="results/bench", quick=False):
                      f"ici_ms={ici_ms:.1f}{extra}")
     achieved_rows(quick=quick)
     moved_rows(quick=quick)
+    sp_rows(quick=quick)

@@ -49,7 +49,7 @@ _SUFFIXES = (".py", ".md", ".sh", ".json", ".ini")
 # plan-level spec keys; a span starting with one of these and '=' is a
 # spec the grammar must accept (schedule=/chunks= are CODEC args and may
 # legitimately appear alone in prose, so they are not keys here)
-_SPEC_KEYS = ("tp", "tp_fwd", "tp_bwd", "grad_rs", "weight_ag", "pp",
+_SPEC_KEYS = ("tp", "tp_fwd", "tp_bwd", "grad_rs", "weight_ag", "pp", "sp",
               "skip_first", "skip_last", "warmup")
 _SPEC_SPAN = re.compile(
     r"^(?:%s)=[^\s`]+$" % "|".join(_SPEC_KEYS))

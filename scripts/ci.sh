@@ -42,6 +42,12 @@ python -m pytest -x -q tests/test_slots.py -m "not slow"
 # — the trainer/serve escalation integrations are slow-marked and run
 # in the main invocation
 python -m pytest -x -q tests/test_policy.py -m "not slow"
+# Sequence-parallel fast slice (sp= grammar/plan plumbing, Ulysses
+# redistribute round-trip properties, ring partial/merge math vs the
+# dense reference, run_ring tick order) — the 8-device dp x sp matrix
+# (tests/multidev/check_sp.py) is slow-marked and runs in the main
+# invocation
+python -m pytest -x -q tests/test_sp.py -m "not slow"
 
 # Docs linter: every README/ROADMAP/docs link, referenced file path, and
 # embedded compression spec must resolve against the actual tree/grammar

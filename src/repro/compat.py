@@ -165,13 +165,36 @@ HAS_OPTIMIZATION_BARRIER = hasattr(jax.lax, "optimization_barrier")
 
 if HAS_OPTIMIZATION_BARRIER:
 
+    @jax.custom_vjp
+    def _barrier(values):
+        return jax.lax.optimization_barrier(values)
+
+    def _barrier_fwd(values):
+        return jax.lax.optimization_barrier(values), None
+
+    def _barrier_bwd(_, ct):
+        # The barrier is semantically the identity, so its cotangent is a
+        # pass-through.  No fence on the backward: reverse-mode emission
+        # order is the autodiff engine's business, not the scheduler's.
+        return (ct,)
+
+    _barrier.defvjp(_barrier_fwd, _barrier_bwd)
+
     def optimization_barrier(values):
         """Identity on ``values`` (any pytree) that XLA may not reorder
         across: every op producing an input finishes before any op
         consuming an output starts.  The software-pipelined ring transport
         (``repro.core.overlap``) fences its stage ticks with this so the
-        compiler cannot re-serialize the interleaved chunk streams."""
-        return jax.lax.optimization_barrier(values)
+        compiler cannot re-serialize the interleaved chunk streams.
+
+        Differentiable: some installed versions define no AD rule for the
+        underlying primitive, yet the fenced ring runs under
+        ``value_and_grad`` when it carries workloads directly (the
+        ring-attention KV hops) rather than sitting inside a
+        ``custom_vjp`` collective — so the fence is wrapped in a
+        straight-through ``custom_vjp`` (forward fences, backward passes
+        cotangents through unchanged)."""
+        return _barrier(values)
 
 else:
 

@@ -610,16 +610,16 @@ def _pp_impl(x, axis_name, perm, codec):
 
 
 def _a2a_impl(x, axis_name, split_dim, concat_dim, codec):
-    """Compressed all-to-all (MoE dispatch), one packed wire buffer per
-    hop; peer-major concat along the split dim reproduces the tiled
-    ``lax.all_to_all`` layout bit-for-bit.  ``chunks=`` ignored, as for
-    ppermute."""
+    """Compressed all-to-all (MoE dispatch / the Ulysses sp hop), one
+    packed wire buffer per hop; the received peer blocks are reassembled
+    peer-major along ``concat_dim`` while ``split_dim`` shrinks by the
+    axis size — reproducing the tiled ``lax.all_to_all`` layout
+    bit-for-bit for BOTH the equal-dims (MoE) and transposed
+    (``split_dim != concat_dim``, Ulysses heads<->sequence) cases.
+    ``chunks=`` ignored, as for ppermute."""
     if isinstance(codec, IdentityCodec):
         return jax.lax.all_to_all(
             x, axis_name, split_axis=split_dim, concat_axis=concat_dim, tiled=True)
-    if concat_dim != split_dim:
-        raise NotImplementedError(
-            "compressed all_to_all currently requires split_dim == concat_dim")
     p = axis_size(axis_name)
     moved = jnp.moveaxis(x, split_dim, 0)
     d = moved.shape[0]
@@ -633,9 +633,19 @@ def _a2a_impl(x, axis_name, split_dim, concat_dim, codec):
         lambda a: jax.lax.all_to_all(a, axis_name, split_axis=0,
                                      concat_axis=0, tiled=False),
         dtype=x.dtype)
-    # peer-major concat along the split dim == lax.all_to_all tiled layout
-    dec = dec.reshape(d, *moved.shape[1:])
-    return jnp.moveaxis(dec, 0, split_dim)
+    # stack[j] = peer j's split block, shaped like the local block with
+    # split_dim already shrunk to d/p and moved to the front
+    stack = dec.reshape(p, d // p, *moved.shape[1:])
+    # undo the moveaxis inside each peer block, then insert the peer axis
+    # just before concat_dim and merge (peer-major) — exactly the tiled
+    # layout: concat_dim grows p-fold, split_dim shrinks p-fold (for
+    # split_dim == concat_dim the two compose back to size d)
+    blocks = jnp.moveaxis(stack, 1, split_dim + 1)
+    out = jnp.moveaxis(blocks, 0, concat_dim)
+    shape = list(x.shape)
+    shape[split_dim] = d // p
+    shape[concat_dim] *= p
+    return out.reshape(shape)
 
 
 # --------------------------------------------------------------------------
@@ -732,12 +742,16 @@ all_to_all_c = _compressed_collective(
         all_to_all_c(ct, axis_name, concat_dim, split_dim, bc, fc),
     n_static=5,
     doc="""Compressed all-to-all (MoE expert-parallel dispatch; the paper's
-    compressed AlltoAll). Backward swaps split/concat dims and codecs.
+    compressed AlltoAll; the Ulysses sequence-parallel redistribute).
+    Backward swaps split/concat dims and codecs — for the transposed
+    Ulysses hop that conjugate is exactly the inverse redistribute, so
+    straight-through cotangent compression falls out of the swap.
 
     Wire/parity contract: ONE ``lax.all_to_all`` moving the packed wire
-    buffer; output reproduces the tiled native layout bit-for-bit;
-    requires ``split_dim == concat_dim`` and a split dim divisible by
-    the axis size (ValueError otherwise); ``chunks=`` ignored.""")
+    buffer; output reproduces the tiled native layout bit-for-bit for
+    both ``split_dim == concat_dim`` and the transposed
+    ``split_dim != concat_dim`` case; the split dim must divide by the
+    axis size (ValueError otherwise); ``chunks=`` ignored.""")
 
 
 def psum_exact(x, axis_name):

@@ -8,6 +8,9 @@ named, compressible path (paper Fig. 7 integration points):
   grad_rs         : DP/fsdp gradient reduce-scatter  -> SDP4bit-style int4
   weight_ag       : fsdp weight all-gather           -> optional int8
   pp              : pipeline stage boundaries        -> TahQuant-style int8
+  sp              : sequence-parallel attention hops -> TACO (Ulysses a2a /
+                                                       ring-attention KV
+                                                       ppermute)
 
 The policy itself is a :class:`CommPlan` — a frozen, hashable mapping of
 paths to codecs plus two scheduling dimensions (paper §5.5 + SDP4bit /
@@ -39,7 +42,7 @@ Identity = IdentityCodec()
 
 # The named communication paths of the 3D-parallel stack (= CommPlan codec
 # fields; the registry's spec grammar accepts exactly these plus "tp").
-PATHS = ("tp_fwd", "tp_bwd", "grad_rs", "weight_ag", "pp")
+PATHS = ("tp_fwd", "tp_bwd", "grad_rs", "weight_ag", "pp", "sp")
 
 
 @dataclasses.dataclass(frozen=True)
@@ -51,6 +54,7 @@ class CommPlan:
     grad_rs: object = Identity
     weight_ag: object = Identity
     pp: object = Identity
+    sp: object = Identity    # Ulysses a2a / ring-attention KV hops
     skip_first: int = 0      # first N layers: TP identity
     skip_last: int = 0       # last N layers: TP identity
     warmup_steps: int = 0    # identity plan for the first K steps
@@ -130,13 +134,14 @@ class CommPlan:
         for path in PATHS:
             codec = getattr(self, path)
             if n is not None:
-                # the pp path is a ppermute hop, which routes chunked
-                # codecs through the monolithic transport (granule-only
-                # padding); the other paths' primary hops are AG/RS and
-                # chunk-pad (tp's a2a hop — see docstring — is the
-                # granule-only exception)
+                # the pp path is a ppermute hop and the sp path an
+                # a2a/ppermute hop — both route chunked codecs through
+                # the monolithic transport (granule-only padding); the
+                # other paths' primary hops are AG/RS and chunk-pad
+                # (tp's a2a hop — see docstring — is the granule-only
+                # exception)
                 slot = cc.wire_slot_bytes(
-                    codec, n, chunks=1 if path == "pp" else None)
+                    codec, n, chunks=1 if path in ("pp", "sp") else None)
                 if slot is not None:
                     out[path] = slot / n
                     continue
@@ -217,6 +222,14 @@ class ParallelCtx:
     pp_axis: str | None = None
     plan: CommPlan = CommPlan()
     tp_mode: str = "sp"  # "sp" (AllGather/ReduceScatter) | "allreduce" (f/g)
+    # Ulysses-style sequence parallelism: an extra mesh axis over which
+    # the SEQUENCE dim of the batch is sharded (distinct from tp_mode
+    # "sp", which is Megatron-SP residual sharding over the TP axis).
+    # Attention crosses it through the compressed `sp=` path: the a2a
+    # heads<->sequence redistribute (sp_mode="ulysses") or compressed
+    # ppermute KV-block hops (sp_mode="ring").
+    sp_axis: str | None = None
+    sp_mode: str = "ulysses"  # "ulysses" (a2a) | "ring" (KV ppermute hops)
 
     # ---- per-layer views --------------------------------------------------
     def layer_views(self, start: int, count: int,
@@ -263,6 +276,37 @@ class ParallelCtx:
     def ep_all_to_all(self, x, split_dim: int, concat_dim: int):
         return cc.all_to_all_c(x, self.tp_axis, split_dim, concat_dim,
                                self.plan.tp_fwd, self.plan.tp_bwd)
+
+    # ---- Ulysses sequence parallelism over the dedicated sp axis.
+    @property
+    def sp_active(self) -> bool:
+        return self.sp_axis is not None
+
+    def sp_size(self) -> int:
+        """Static size of the sp axis (1 when sequence parallelism is
+        off).  Must be called inside shard_map when the axis is set."""
+        return compat.axis_size(self.sp_axis) if self.sp_active else 1
+
+    def sp_index(self):
+        """This device's (traced) rank on the sp axis, 0 when off."""
+        if not self.sp_active:
+            return 0
+        import jax
+        return jax.lax.axis_index(self.sp_axis)
+
+    def sp_all_to_all(self, x, split_dim: int, concat_dim: int):
+        """The Ulysses redistribute: one compressed all-to-all over the
+        sp axis through the plan's ``sp`` codec (both directions — the
+        custom_vjp bwd swaps dims, which IS the inverse hop, so the
+        cotangent rides the same codec straight-through)."""
+        return cc.all_to_all_c(x, self.sp_axis, split_dim, concat_dim,
+                               self.plan.sp, self.plan.sp)
+
+    def sp_permute(self, x, perm):
+        """One compressed point-to-point hop over the sp axis (the
+        ring-attention KV-block transfer)."""
+        return cc.ppermute_c(x, self.sp_axis, perm,
+                             self.plan.sp, self.plan.sp)
 
     # ---- PP boundary send (ppermute with codec) lives in
     # train/pipeline_parallel.py; exposed there to keep this file lean.

@@ -13,12 +13,17 @@ Grammar::
     spec   := alias | item ("," item)*
     item   := path "=" codec | knob "=" int
     path   := "tp" | "tp_fwd" | "tp_bwd" | "grad_rs" | "weight_ag" | "pp"
+            | "sp"
     knob   := "skip_first" | "skip_last" | "warmup"
     codec  := base ("+" stage)* (":" arg)*
     base   := name
     stage  := registered lossless stage name ("zle")
 
-``tp=X`` assigns both TP directions at once.  A ``+stage`` suffix on the
+``tp=X`` assigns both TP directions at once.  ``sp=X`` compresses the
+sequence-parallel attention hops — the Ulysses heads<->sequence
+all-to-all and the ring-attention KV ppermute hops
+(``repro.models.attention``); the conjugate backward hops ride the same
+codec straight-through.  A ``+stage`` suffix on the
 codec head stacks a registered lossless wire stage over the base codec
 (e.g. ``tp=taco+zle:folded:chunks=4``).  Colon args are routed by
 PREFIX: each stage registers the ``key=`` arg prefixes it claims
@@ -755,7 +760,7 @@ def to_spec(plan: CommPlan) -> str:
     else:
         parts.append(f"tp_fwd={codec_to_spec(plan.tp_fwd)}")
         parts.append(f"tp_bwd={codec_to_spec(plan.tp_bwd)}")
-    for path in ("grad_rs", "weight_ag", "pp"):
+    for path in ("grad_rs", "weight_ag", "pp", "sp"):
         codec = getattr(plan, path)
         if codec != identity:
             parts.append(f"{path}={codec_to_spec(codec)}")

@@ -45,7 +45,8 @@ from repro.configs import (ASSIGNED, SHAPES, applicable, get_config,
 from repro.core import registry
 from repro.core.parallel import ParallelCtx
 from repro.launch import roofline as rl
-from repro.launch.mesh import make_production_mesh, mesh_axis_info
+from repro.launch.mesh import (make_production_mesh, mesh_axis_info,
+                               sp_axis_info)
 from repro.models.model import Model
 from repro.optim import adamw
 
@@ -124,16 +125,25 @@ def parse_variant(variant: str | None) -> dict:
 
 
 def lower_cell(cfg, shape: str, mesh_kind: str, policy_name: str,
-               *, tp_mode=None, remat=True, scan_layers=True, variant=None):
-    mesh = make_production_mesh(multi_pod=(mesh_kind == "multi"))
+               *, tp_mode=None, remat=True, scan_layers=True, variant=None,
+               sp=1, sp_mode="ulysses"):
+    mesh = make_production_mesh(multi_pod=(mesh_kind == "multi"), sp=sp)
     fsdp_axes, tp_axis, tp, fsdp = mesh_axis_info(mesh)
+    sp_axis, sp = sp_axis_info(mesh)
     suite = SHAPES[shape]
+    if suite.kind != "train" and sp > 1:
+        raise ValueError("--sp applies to train shapes only (the serve "
+                         "path decodes without a sequence axis to shard)")
+    if suite.seq_len % max(sp, 1):
+        raise ValueError(f"shape {shape} seq_len {suite.seq_len} not "
+                         f"divisible by sp={sp}")
     vopts = parse_variant(variant)
     plan = make_plan(cfg, tp, fsdp, remat=remat, scan_layers=scan_layers,
                      remat_policy=vopts["remat_policy"],
                      kv_strategy=vopts["kv_strategy"],
                      attn_f32=vopts["attn_f32"])
-    model = Model(cfg, plan, fsdp_axes=fsdp_axes, tp_axis=tp_axis)
+    model = Model(cfg, plan, fsdp_axes=fsdp_axes, tp_axis=tp_axis,
+                  sp_axis=sp_axis)
     policy = build_policy(policy_name)
     if vopts["wag_int8"]:
         import dataclasses as _dc
@@ -141,7 +151,7 @@ def lower_cell(cfg, shape: str, mesh_kind: str, policy_name: str,
                              weight_ag=registry.codec_from_spec("int8"))
     mode = tp_mode or ("sp" if suite.kind == "train" else "allreduce")
     ctx = ParallelCtx(tp_axis=tp_axis, fsdp_axes=fsdp_axes, plan=policy,
-                      tp_mode=mode)
+                      tp_mode=mode, sp_axis=sp_axis, sp_mode=sp_mode)
 
     if suite.kind == "train":
         from repro.train.train_step import build_train_step
@@ -156,7 +166,8 @@ def lower_cell(cfg, shape: str, mesh_kind: str, policy_name: str,
     t1 = time.time()
     compiled = lowered.compile()
     t2 = time.time()
-    meta = {"tp_mode": mode, "devices": mesh.size, "variant": variant,
+    meta = {"tp_mode": mode, "sp": sp, "sp_mode": sp_mode if sp > 1 else None,
+            "devices": mesh.size, "variant": variant,
             "lower_s": round(t1 - t0, 2), "compile_s": round(t2 - t1, 2),
             "plan": {"tp": plan.tp, "fsdp": plan.fsdp,
                      "heads_pad": plan.heads_pad, "kv_mode": plan.kv_mode,
@@ -257,12 +268,18 @@ def model_flops_for(cfg, suite) -> float:
 
 
 def run_cell(arch, shape, mesh_kind, policy_name, out_dir=None, *,
-             mode="check", tp_mode=None, variant=None):
+             mode="check", tp_mode=None, variant=None, sp=1,
+             sp_mode="ulysses"):
     cfg = get_config(arch)
     ok, reason = applicable(cfg, shape)
     suite = SHAPES[shape]
+    if ok and sp > 1 and suite.kind != "train":
+        ok, reason = False, ("--sp shards the train sequence axis; the "
+                             "serve path decodes without one")
     rec = {"arch": arch, "shape": shape, "mesh": mesh_kind,
            "policy": policy_name, "mode": mode}
+    if sp > 1:
+        rec["sp"] = sp
     if not ok:
         rec.update({"status": "skipped", "reason": reason})
         print(f"SKIP  {arch:28s} {shape:12s} {mesh_kind:6s} — {reason}",
@@ -272,7 +289,7 @@ def run_cell(arch, shape, mesh_kind, policy_name, out_dir=None, *,
             t_all = time.time()
             lowered, compiled, meta, model, suite = lower_cell(
                 cfg, shape, mesh_kind, policy_name, tp_mode=tp_mode,
-                scan_layers=True, variant=variant)
+                scan_layers=True, variant=variant, sp=sp, sp_mode=sp_mode)
             mem = compiled.memory_analysis()
             print(f"--- memory_analysis [{arch} {shape} {mesh_kind}] ---")
             print(mem)
@@ -343,6 +360,12 @@ def main():
                          "taco_folded) or a full registry spec string, "
                          "e.g. 'tp=taco:jnp,skip_first=2,skip_last=2'")
     ap.add_argument("--tp-mode", default=None)
+    ap.add_argument("--sp", type=int, default=1,
+                    help="sequence-parallel axis size; carves a 'seq' axis "
+                         "out of the data axis of the production mesh "
+                         "(train shapes only)")
+    ap.add_argument("--sp-mode", default="ulysses", dest="sp_mode",
+                    choices=["ulysses", "ring"])
     ap.add_argument("--mode", default="check",
                     choices=["check", "roofline"])
     ap.add_argument("--variant", default=None,
@@ -363,7 +386,8 @@ def main():
                 results.append(run_cell(arch, shape, mesh_kind, args.policy,
                                         args.out, mode=args.mode,
                                         tp_mode=args.tp_mode,
-                                        variant=args.variant))
+                                        variant=args.variant, sp=args.sp,
+                                        sp_mode=args.sp_mode))
     n_ok = sum(r["status"] == "ok" for r in results)
     n_skip = sum(r["status"] == "skipped" for r in results)
     n_err = sum(r["status"] == "error" for r in results)

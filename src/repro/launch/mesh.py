@@ -13,19 +13,42 @@ from repro import compat
 from repro.compat import make_mesh  # noqa: F401 — re-export, one constructor
 
 
-def make_production_mesh(*, multi_pod: bool = False):
+#: Name of the Ulysses/ring sequence-parallel mesh axis.
+SP_AXIS = "seq"
+
+
+def make_production_mesh(*, multi_pod: bool = False, sp: int = 1):
+    """Spec-mandated production mesh; ``sp > 1`` carves the sequence axis
+    out of the data axis (total device count is fixed), inserted between
+    data and model so sp groups are model-axis-contiguous."""
     shape = (2, 16, 16) if multi_pod else (16, 16)
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    if sp > 1:
+        data = shape[-2]
+        if data % sp:
+            raise ValueError(f"sp={sp} does not divide data axis {data}")
+        shape = shape[:-2] + (data // sp, sp, shape[-1])
+        axes = axes[:-1] + (SP_AXIS, axes[-1])
     return compat.make_mesh(shape, axes)
 
 
 def mesh_axis_info(mesh):
-    """(fsdp_axes, tp_axis, tp, fsdp_size, dp_axes) for a production mesh."""
+    """(fsdp_axes, tp_axis, tp, fsdp_size) for a production mesh.  The
+    sequence-parallel axis (``SP_AXIS``) is neither fsdp nor tp — query it
+    with :func:`sp_axis_info`."""
     names = mesh.axis_names
     tp_axis = "model"
-    fsdp_axes = tuple(n for n in names if n != tp_axis)
+    fsdp_axes = tuple(n for n in names if n not in (tp_axis, SP_AXIS))
     tp = mesh.shape[tp_axis]
     fsdp = 1
     for n in fsdp_axes:
         fsdp *= mesh.shape[n]
     return fsdp_axes, tp_axis, tp, fsdp
+
+
+def sp_axis_info(mesh):
+    """(sp_axis_name | None, sp_size) — a size-1 seq axis counts as
+    inactive (no redistribution, no extra psums)."""
+    if SP_AXIS in mesh.axis_names and mesh.shape[SP_AXIS] > 1:
+        return SP_AXIS, mesh.shape[SP_AXIS]
+    return None, 1

@@ -17,7 +17,8 @@ from repro.core.parallel import ParallelCtx
 from repro.core.registry import from_spec, to_spec
 from repro.data.pipeline import DataConfig, SyntheticLM
 from repro.launch._args import add_policy_alias, resolve_comm_spec
-from repro.launch.mesh import make_mesh, mesh_axis_info
+from repro.launch.mesh import (SP_AXIS, make_mesh, mesh_axis_info,
+                               sp_axis_info)
 from repro.models.model import Model
 from repro.optim.adamw import OptConfig
 from repro.train.trainer import Trainer, TrainerConfig
@@ -33,6 +34,16 @@ def main():
     ap.add_argument("--batch", type=int, default=8)
     ap.add_argument("--mesh", default="1,1,1",
                     help="pod,data,model sizes (needs matching device count)")
+    ap.add_argument("--sp", type=int, default=1,
+                    help="sequence-parallel axis size; carves a 'seq' axis "
+                         "out of the data axis (data must stay divisible). "
+                         "Attention crosses it via the 'sp=' codec path "
+                         "(--comm-spec \"sp=taco:folded\")")
+    ap.add_argument("--sp-mode", default="ulysses", dest="sp_mode",
+                    choices=["ulysses", "ring"],
+                    help="sp attention flavor: Ulysses heads<->sequence "
+                         "all-to-all, or blockwise ring over compressed "
+                         "KV ppermute hops")
     ap.add_argument("--comm-spec", default=None, dest="comm_spec",
                     help="compression plan spec or alias, e.g. "
                          "'tp=taco:folded:chunks=4,grad_rs=sdp4bit,"
@@ -49,18 +60,30 @@ def main():
     logging.basicConfig(level=logging.INFO,
                         format="%(asctime)s %(name)s %(message)s")
     shape = tuple(int(x) for x in args.mesh.split(","))
-    mesh = make_mesh(shape, ("pod", "data", "model"))
+    axes = ("pod", "data", "model")
+    if args.sp > 1:
+        if shape[1] % args.sp:
+            raise SystemExit(f"--sp {args.sp} must divide the data axis "
+                             f"size {shape[1]}")
+        shape = (shape[0], shape[1] // args.sp, args.sp, shape[2])
+        axes = ("pod", "data", SP_AXIS, "model")
+    mesh = make_mesh(shape, axes)
     fsdp_axes, tp_axis, tp, fsdp = mesh_axis_info(mesh)
+    sp_axis, sp = sp_axis_info(mesh)
 
     cfg = get_config(args.arch)
     if args.smoke:
         cfg = smoke_config(cfg)
     plan = make_plan(cfg, tp, fsdp)
-    model = Model(cfg, plan, fsdp_axes=fsdp_axes, tp_axis=tp_axis)
+    model = Model(cfg, plan, fsdp_axes=fsdp_axes, tp_axis=tp_axis,
+                  sp_axis=sp_axis)
     comm_plan = from_spec(resolve_comm_spec(args))
-    ctx = ParallelCtx(tp_axis=tp_axis, fsdp_axes=fsdp_axes, plan=comm_plan)
+    ctx = ParallelCtx(tp_axis=tp_axis, fsdp_axes=fsdp_axes, plan=comm_plan,
+                      sp_axis=sp_axis, sp_mode=args.sp_mode)
 
     seq = args.seq or (64 if args.smoke else 4096)
+    if seq % sp:
+        raise SystemExit(f"--seq {seq} must be divisible by --sp {sp}")
     data = SyntheticLM(DataConfig(vocab_size=cfg.vocab_size, seq_len=seq,
                                   global_batch=args.batch), cfg)
     oc = OptConfig(lr_max=args.lr, lr_min=args.lr / 10,

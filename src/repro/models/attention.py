@@ -218,6 +218,141 @@ def attention_core(q, k, v, *, causal: bool, window: int | None,
 
 
 # --------------------------------------------------------------------------
+# sequence parallelism over ctx.sp_axis (Ulysses a2a / ring attention)
+# --------------------------------------------------------------------------
+
+def ulysses_attention(q, k, v, ctx, *, causal, window):
+    """DeepSpeed-Ulysses attention over the sp axis.
+
+    q/k/v arrive sequence-sharded ``(B, S/sp, H, hd)`` (rope already
+    applied with GLOBAL positions).  ONE compressed all-to-all — q, k, v
+    packed along the feature dim into a single wire buffer — splits the
+    head dim and concatenates the sequence dim (the transposed
+    ``all_to_all_c`` layout), so the monolithic :func:`attention_core`
+    runs on the full sequence with ``H/sp`` local heads; the inverse hop
+    redistributes the output back.  Both hops ride the plan's ``sp``
+    codec; the custom_vjp backward of a transposed a2a is exactly the
+    inverse redistribute, so cotangents are compressed straight-through.
+    """
+    sp = ctx.sp_size()
+    if sp == 1:
+        return attention_core(q, k, v, causal=causal, window=window)
+    h = q.shape[2]
+    if h % sp:
+        raise ValueError(
+            f"Ulysses attention: local head count {h} not divisible by "
+            f"sp axis {ctx.sp_axis!r} of size {sp}")
+    qkv = jnp.concatenate([q, k, v], axis=-1)      # (B, S/sp, H, 3*hd)
+    qkv = ctx.sp_all_to_all(qkv, 2, 1)             # (B, S, H/sp, 3*hd)
+    qf, kf, vf = jnp.split(qkv, 3, axis=-1)
+    out = attention_core(qf, kf, vf, causal=causal, window=window)
+    return ctx.sp_all_to_all(out, 1, 2)            # (B, S/sp, H, hd)
+
+
+def _block_bias(q_pos, kv_pos, *, causal, window):
+    """Additive (Sq, Sk) mask between global q/kv position vectors."""
+    m = jnp.zeros((q_pos.shape[0], kv_pos.shape[0]), jnp.float32)
+    if causal:
+        m = jnp.where(kv_pos[None, :] > q_pos[:, None], NEG_INF, m)
+    if window is not None:
+        m = jnp.where(kv_pos[None, :] <= q_pos[:, None] - window, NEG_INF, m)
+    return m
+
+
+def _block_partial(qf, kb, vb, bias):
+    """Online-softmax partial of pre-scaled f32 q ``(B,H,Sq,hd)`` against
+    one KV block ``(B,H,Sk,hd)``: returns ``(acc, m, l)``.  Safe under a
+    fully-masked block (future blocks under causal masking): its partial
+    is exactly ``(0, NEG_INF, 0)`` and merges as a no-op."""
+    s_ = jnp.einsum("bhqd,bhkd->bhqk", qf, kb.astype(jnp.float32))
+    s_ = s_ + bias[None, None]
+    m = jnp.max(s_, axis=-1)
+    finite = m > NEG_INF * 0.5
+    msafe = jnp.where(finite, m, 0.0)
+    p_ = jnp.where(finite[..., None], jnp.exp(s_ - msafe[..., None]), 0.0)
+    l = jnp.sum(p_, axis=-1)
+    acc = jnp.einsum("bhqk,bhkd->bhqd", p_, vb.astype(jnp.float32))
+    return acc, jnp.where(finite, m, NEG_INF), l
+
+
+def _merge_partial(a, b):
+    """Fold two online-softmax partials (associative rescale-and-add)."""
+    acc1, m1, l1 = a
+    acc2, m2, l2 = b
+    m = jnp.maximum(m1, m2)
+    c1 = jnp.exp(m1 - m)
+    c2 = jnp.exp(m2 - m)
+    # both-empty: exp(0) = 1 but acc/l are exactly 0, so still a no-op
+    return (acc1 * c1[..., None] + acc2 * c2[..., None], m,
+            l1 * c1 + l2 * c2)
+
+
+def ring_attention(q, k, v, ctx, *, causal, window):
+    """Blockwise ring attention over the sp axis.
+
+    q stays sequence-local ``(B, S/sp, H, hd)``; every peer's KV block is
+    delivered by ONE compressed ppermute (k and v packed along the
+    feature dim into a single wire buffer, direct-send to the peer ``t``
+    ranks ahead — the two-shot idiom of the ring transports) and folded
+    into an online-softmax accumulator with global-position masking.
+
+    Hop emission is owned by :func:`repro.core.overlap.run_ring` exactly
+    like the chunked AG/RS rings: the ``sp`` codec's ``schedule`` knob
+    picks pipelined (barrier-fenced ticks — hop ``t-1``'s ppermute and
+    block ``t-2``'s attention partial share a tick, so the softmax
+    compute provably interleaves between the ppermute hops in the
+    lowered HLO) or the hoisted serial baseline.  Output matches the
+    monolithic core within online-softmax re-association tolerance
+    (merge order is arrival order, which differs per device)."""
+    sp = ctx.sp_size()
+    if sp == 1:
+        return attention_core(q, k, v, causal=causal, window=window)
+    from repro.core import overlap
+
+    b, s_loc, h, hd = q.shape
+    i = ctx.sp_index()
+    q_pos = i * s_loc + jnp.arange(s_loc)
+    qf = q.transpose(0, 2, 1, 3).astype(jnp.float32) / np.sqrt(hd)
+    kv = jnp.concatenate([k, v], axis=-1)          # one wire buffer per hop
+
+    def partial_for(block, src):
+        kb, vb = jnp.split(block, 2, axis=-1)
+        kv_pos = src * s_loc + jnp.arange(s_loc)
+        bias = _block_bias(q_pos, kv_pos, causal=causal, window=window)
+        return _block_partial(qf, kb.transpose(0, 2, 1, 3),
+                              vb.transpose(0, 2, 1, 3), bias)
+
+    def transfer(t):
+        perm = tuple((s, (s + t) % sp) for s in range(sp))
+        return lambda blk: ctx.sp_permute(blk, perm)
+
+    def decode(t):
+        return lambda blk: partial_for(blk, (i - t) % sp)
+
+    parts = overlap.run_ring(
+        [kv] * (sp - 1),
+        encode=lambda blk: blk,                    # hop = the full
+        transfer=[transfer(t) for t in range(1, sp)],  # compressed ppermute
+        decode=[decode(t) for t in range(1, sp)],
+        schedule=overlap.ring_schedule(ctx.plan.sp))
+    state = partial_for(kv, i)                     # own (diagonal) block
+    for part in parts:
+        state = _merge_partial(state, part)
+    acc, _, l = state
+    out = acc / jnp.maximum(l, 1e-30)[..., None]
+    return out.transpose(0, 2, 1, 3).astype(COMPUTE_DTYPE)
+
+
+def sp_attention(q, k, v, ctx, *, causal, window):
+    """Dispatch the sp-axis attention flavor (``ctx.sp_mode``)."""
+    if ctx.sp_mode == "ring":
+        return ring_attention(q, k, v, ctx, causal=causal, window=window)
+    if ctx.sp_mode != "ulysses":
+        raise ValueError(f"unknown sp_mode {ctx.sp_mode!r}")
+    return ulysses_attention(q, k, v, ctx, causal=causal, window=window)
+
+
+# --------------------------------------------------------------------------
 # full attention layer (train path)
 # --------------------------------------------------------------------------
 
@@ -225,20 +360,32 @@ def attention_apply(x_full, p, cfg, plan, ctx, *, causal=True,
                     window=None, positions=None, kv_source=None):
     """x_full (B, S, D) -> partial output (B, S, D) (caller reduces).
 
+    Under an active ``ctx.sp_axis`` the sequence dim of ``x_full`` is the
+    LOCAL sp shard and ``positions`` must be the shard's global positions
+    (the caller offsets them); attention crosses the axis through
+    :func:`sp_attention`.
+
     kv_source: encoder output (B, S_enc, D) for cross-attention (keys and
     values are projected from it with this layer's wk/wv, no rope)."""
     b, s, _ = x_full.shape
     hd = cfg.hd
     if positions is None:
-        positions = jnp.arange(s)
+        positions = ctx.sp_index() * s + jnp.arange(s) if ctx.sp_active \
+            else jnp.arange(s)
     q = q_project(x_full, p, cfg, plan, ctx, positions)
     if kv_source is not None:
+        if ctx.sp_active:
+            raise NotImplementedError(
+                "cross-attention under an active sp axis is not supported")
         k, v = kv_project(kv_source, p, cfg, plan, ctx, None)
     else:
         k, v = kv_project(x_full, p, cfg, plan, ctx, positions)
     k = _expand_kv(k, plan, ctx, cfg)
     v = _expand_kv(v, plan, ctx, cfg)
-    out = attention_core(q, k, v, causal=causal, window=window)
+    if ctx.sp_active:
+        out = sp_attention(q, k, v, ctx, causal=causal, window=window)
+    else:
+        out = attention_core(q, k, v, causal=causal, window=window)
     out = out * head_mask(plan, ctx, cfg.n_heads)[None, None, :, None]
     wo = ctx.weight_gather(p["wo"], 1)
     return out.reshape(b, s, plan.q_local * hd) @ wo

@@ -32,6 +32,10 @@ class Model:
     plan: RunPlan
     fsdp_axes: tuple = ("pod", "data")
     tp_axis: str = "model"
+    #: Ulysses/ring sequence-parallel mesh axis ("seq"); None = inactive.
+    #: Params are fully replicated over it; batches shard their sequence
+    #: dim over it; grads are psum'd over it in finalize_grads.
+    sp_axis: str | None = None
 
     # ---- parameters -------------------------------------------------------
     def specs(self):
@@ -64,6 +68,10 @@ class Model:
             axes.append(self.tp_axis)
         if spec.fsdp_dim is None:
             axes.extend(self.fsdp_axes)
+        if self.sp_axis is not None:
+            # every param is replicated over the sp axis but sees only a
+            # sequence shard of the batch -> always psum over it
+            axes.append(self.sp_axis)
         return tuple(axes)
 
     # ---- batches ----------------------------------------------------------
@@ -91,10 +99,19 @@ class Model:
         return shapes
 
     def batch_pspecs(self) -> dict:
-        """Batch arrays shard over the dp axes on dim 0."""
+        """Batch arrays shard over the dp axes on dim 0, and over the sp
+        axis (when active) on the sequence dim 1."""
         dp = self.fsdp_axes if len(self.fsdp_axes) > 1 else \
             (self.fsdp_axes[0] if self.fsdp_axes else None)
-        specs = {"tokens": P(dp), "labels": P(dp), "mask": P(dp)}
+        sp = self.sp_axis
+        if sp is not None and (self.cfg.family == "encdec"
+                               or self.cfg.frontend == "patches"):
+            raise NotImplementedError(
+                "sequence parallelism supports the decoder-only token "
+                "frontend (encdec/patches sequence composition is not "
+                "sp-sharded)")
+        row = P(dp) if sp is None else P(dp, sp)
+        specs = {"tokens": row, "labels": row, "mask": row}
         if self.cfg.family == "encdec":
             specs["frames"] = P(dp)
         if self.cfg.frontend == "patches":

@@ -268,11 +268,14 @@ def add_positional(x_shard, params, cfg, ctx, seq: int):
         start = idx * s_loc
     else:
         start = 0
+    if ctx.sp_active:
+        # seq is the sp-LOCAL shard length; offset to global positions
+        start = start + ctx.sp_index() * seq
     if cfg.pos == "learned":
         table = ctx.weight_gather(params["pos_embed"], 0)
         pe = jax.lax.dynamic_slice_in_dim(table, start, s_loc, axis=0)
     else:
-        pe = sinusoid_pos(seq, cfg.d_model)
+        pe = sinusoid_pos(seq * ctx.sp_size(), cfg.d_model)
         pe = jax.lax.dynamic_slice_in_dim(pe, start, s_loc, axis=0)
     return x_shard + pe[None].astype(x_shard.dtype)
 
@@ -329,9 +332,12 @@ def forward_train(params, batch, cfg, plan, ctx):
     x = tp_exit(partial, ctx)
     x = add_positional(x, params, cfg, ctx, seq)
 
+    positions = jnp.arange(seq)
+    if ctx.sp_active:
+        positions = positions + ctx.sp_index() * seq
     x, aux = run_segments(x, params["segments"], layer_segments(cfg),
                           cfg, plan, ctx,
-                          positions=jnp.arange(seq), enc_kv=enc_kv,
+                          positions=positions, enc_kv=enc_kv,
                           causal=True)
     x = apply_norm(x, params["final_norm"], cfg.norm, cfg.norm_eps)
     x_full = tp_enter(x, ctx)                             # TACO gather site

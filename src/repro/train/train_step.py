@@ -20,7 +20,11 @@ from repro.optim import adamw
 
 
 def dp_axes(model):
-    return model.fsdp_axes
+    """Axes the scalar loss/count (and MoE aux) are psum'd over: the fsdp
+    data axes plus, when active, the sequence-parallel axis (each sp rank
+    holds a sequence shard of the batch, so token sums are partial)."""
+    sp = getattr(model, "sp_axis", None)
+    return model.fsdp_axes + ((sp,) if sp is not None else ())
 
 
 def build_train_step(model, mesh, ctx: ParallelCtx, oc: adamw.OptConfig,

@@ -25,7 +25,16 @@ bounded-but-ragged variable wire layouts, repro.core.lossless):
      hoists every encode above the first ppermute with no fences, and the
      ring reduce-scatter's hoisted per-peer send gather leaves ZERO
      dynamic-slices of the wire matrix in the step loop;
-  5. negotiated (slot=auto) hops: a static BOOTSTRAP step (probes
+  5. transposed (Ulysses, ``split_dim != concat_dim``) all-to-all: the
+     identity codec is BIT-IDENTICAL to raw tiled ``lax.all_to_all`` in
+     both directions (and round-trips to the input), every compressing
+     codec reproduces the flat equal-dims transport of the moved layout
+     bit-for-bit (packed and multibuffer), its gradient is the inverse
+     redistribute with swapped codecs (the ``custom_vjp`` contract), the
+     compressed hop lowers to exactly ONE all-to-all, and the negotiated
+     (slot=auto) bound keeps the hop bit-identical while moving fewer
+     bytes;
+  6. negotiated (slot=auto) hops: a static BOOTSTRAP step (probes
      observing the true per-device chunk geometry) feeds the
      SlotController, whose negotiated moved bound then keeps the AG and
      RS transports BIT-IDENTICAL to their static-bound hops on the
@@ -482,6 +491,144 @@ with cc.multibuffer_wire():
                      lambda v: cc.all_gather_c(v, "model", 0, TACO_RING, ID),
                      x_ag, *ag_specs),
                  {"all_gather": 3})
+
+# ----------------------- transposed (Ulysses) all-to-all layout matrix
+# split_dim=2 (heads), concat_dim=1 (sequence): the heads<->sequence
+# redistribute of the sequence-parallel attention path.  Sequence dim
+# sharded over the 4-way model axis on the way in, heads on the way out.
+x_u = jnp.asarray(rng.normal(0, 0.02, (4, 8, 16, 6)).astype(np.float32))
+u_in = (P(None, "model"), P(None, None, "model"))       # seq -> heads
+u_out = (P(None, None, "model"), P(None, "model"))      # heads -> seq
+
+
+def a2a_t(v, c):
+    return cc.all_to_all_c(v, "model", 2, 1, c, ID)
+
+
+def a2a_t_inv(v, c):
+    return cc.all_to_all_c(v, "model", 1, 2, c, ID)
+
+
+def a2a_t_flat_ref(v, c):
+    """The transposed hop's value reference: run the SAME codec through
+    the flat equal-dims transport (parity-pinned above) on the moved
+    layout, then rearrange with the tiled-layout algebra — which the
+    identity rows pin against raw ``lax.all_to_all`` below, so a layout
+    bug in the implementation cannot also hide here."""
+    moved = jnp.moveaxis(v, 2, 0)
+    flat = cc.all_to_all_c(moved.reshape(TP * 4, -1), "model", 0, 0, c, ID)
+    stack = flat.reshape(TP, 4, *moved.shape[1:])
+    out = jnp.moveaxis(jnp.moveaxis(stack, 1, 3), 0, 1)
+    shape = list(v.shape)
+    shape[2] //= TP
+    shape[1] *= TP
+    return out.reshape(shape)
+
+
+# identity codec: bit-parity with raw lax.all_to_all, both directions,
+# and the round trip is the identity
+nat_fwd = run(lambda v: jax.lax.all_to_all(v, "model", 2, 1, tiled=True),
+              x_u, *u_in)
+got_fwd = run(lambda v: a2a_t(v, ID), x_u, *u_in)
+check_equal("a2a_transposed/identity_vs_native_fwd", got_fwd, nat_fwd)
+check_equal("a2a_transposed/identity_vs_native_inv",
+            run(lambda v: a2a_t_inv(v, ID), nat_fwd, *u_out),
+            run(lambda v: jax.lax.all_to_all(v, "model", 1, 2, tiled=True),
+                nat_fwd, *u_out))
+check_equal("a2a_transposed/identity_roundtrip",
+            run(lambda v: a2a_t_inv(a2a_t(v, ID), ID), x_u,
+                u_in[0], u_in[0]), x_u)
+# the flat-reference rearrangement itself, pinned at identity vs native
+check_equal("a2a_transposed/flat_ref_vs_native_identity",
+            run(lambda v: a2a_t_flat_ref(v, ID), x_u, *u_in), nat_fwd)
+
+for name, codec in CODECS.items():
+    got = run(lambda v, c=codec: a2a_t(v, c), x_u, *u_in)
+    check_equal(f"{name}/a2a_transposed_vs_flat_transport",
+                got, run(lambda v, c=codec: a2a_t_flat_ref(v, c),
+                         x_u, *u_in))
+    check_equal(f"{name}/a2a_transposed_packed_vs_multibuf",
+                got, _mb(lambda v, c=codec: a2a_t(v, c), x_u, *u_in))
+    check_equal(f"{name}/a2a_transposed_chunked_codec_ignores_chunks",
+                got, run(lambda v, c=with_ring(codec): a2a_t(v, c),
+                         x_u, *u_in))
+
+# gradients: the custom_vjp bwd of a transposed a2a is the INVERSE
+# redistribute with swapped codecs — identity grads must match native
+# lax.all_to_all grads bit-for-bit; compressed cotangents must equal the
+# explicit inverse hop applied to the upstream cotangent
+w_u = jnp.asarray(rng.normal(0, 0.1, (6,)).astype(np.float32))
+
+
+def grad_t(fn):
+    def loss(v):
+        y = fn(v)
+        return jnp.sum(jnp.tanh(y @ w_u))
+    return run(lambda v: jax.grad(loss)(v), x_u, u_in[0], u_in[0])
+
+
+check_equal("grad/a2a_transposed_identity_vs_native",
+            grad_t(lambda v: a2a_t(v, ID)),
+            grad_t(lambda v: jax.lax.all_to_all(v, "model", 2, 1,
+                                                tiled=True)))
+ct_u = jnp.asarray(rng.normal(0, 0.02, (4, 8, 16, 6)).astype(np.float32))
+
+
+def _vjp_taco(v, ct):
+    _, f = jax.vjp(lambda a: cc.all_to_all_c(a, "model", 2, 1, TACO,
+                                             CODECS["sdp4bit"]), v)
+    return f(ct)[0]
+check_equal("grad/a2a_transposed_bwd_is_swapped_inverse_hop",
+            jit_sm(_vjp_taco, (u_in[0], u_in[1]), u_in[0])(x_u, ct_u),
+            run(lambda c: cc.all_to_all_c(c, "model", 1, 2,
+                                          CODECS["sdp4bit"], TACO),
+                ct_u, u_in[1], u_in[0]))
+
+# HLO: ONE all-to-all per compressed transposed hop (taco AND the
+# variable-layout hybrid), one per wire component under multibuffer
+check_counts("hlo/a2a_transposed_packed_one_collective",
+             collectives_of(lambda v: a2a_t(v, TACO), x_u, *u_in),
+             {"all_to_all": 1})
+check_counts("hlo/hybrid_zle_a2a_transposed_one_collective",
+             collectives_of(lambda v: a2a_t(v, TACO_ZLE), x_u, *u_in),
+             {"all_to_all": 1})
+with cc.multibuffer_wire():
+    check_counts("hlo/a2a_transposed_multibuf_three_collectives",
+                 collectives_of(lambda v: a2a_t(v, TACO), x_u, *u_in),
+                 {"all_to_all": 3})
+
+# negotiated (slot=auto) transposed a2a: bootstrap -> negotiate -> the
+# negotiated bound moves strictly fewer bytes, stays bit-identical to
+# the static bound, never overflows, and still lowers to ONE all-to-all
+# heads 1-3 of every group of 4 are zero: the head dim is the a2a split
+# dim, so every peer slot's wire buffer ends in a contiguous 3/4 zero
+# run; hd is sized so each slot spans several codec granule groups and
+# the zero tail covers whole groups (the ASH transform mixes only
+# within a group) — otherwise the lossless stage has nothing to compact
+x_u_pad_np = rng.normal(0, 0.02, (4, 8, 16, 48)).astype(np.float32)
+x_u_pad_np[:, :, np.arange(16) % 4 != 0, :] = 0.0
+x_u_pad = jnp.asarray(x_u_pad_np)
+auto_u = codec_from_spec("taco+zle:jnp:slot=auto")
+static_u = codec_from_spec("taco+zle:jnp")
+ctl_u = cc.SlotController()
+boot_u = run(lambda v: a2a_t(v, auto_u), x_u_pad, *u_in)
+assert not ctl_u.finish_step()
+neg_u = ctl_u.negotiate(auto_u)
+# local elems (sequence dim sharded TP ways) split into TP peer slots
+slot_elems = x_u_pad.size // (TP * TP)
+moved_u = cc.moved_slot_bytes(neg_u, slot_elems)
+slot_u = cc.wire_slot_bytes(auto_u, slot_elems, chunks=1)
+check_true("negotiated_a2a_transposed/moved_below_slot",
+           moved_u < slot_u, f"moved={moved_u} slot={slot_u}")
+base_u = run(lambda v: a2a_t(v, static_u), x_u_pad, *u_in)
+check_equal("negotiated_a2a_transposed/bootstrap_vs_static", base_u, boot_u)
+check_equal("negotiated_a2a_transposed/negotiated_vs_static_bound",
+            base_u, run(lambda v: a2a_t(v, neg_u), x_u_pad, *u_in))
+check_true("negotiated_a2a_transposed/no_overflow",
+           not ctl_u.finish_step(), f"overflows={ctl_u.overflows}")
+check_counts("negotiated_a2a_transposed/hlo_one_collective",
+             collectives_of(lambda v: a2a_t(v, neg_u), x_u_pad, *u_in),
+             {"all_to_all": 1})
 
 if FAILURES:
     raise SystemExit(f"FAILED: {FAILURES}")

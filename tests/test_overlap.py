@@ -209,7 +209,7 @@ def test_bad_schedule_specs_rejected(bad):
 def test_chunks_threads_through_plan_telemetry():
     plan = from_spec("tp=taco:chunks=4,grad_rs=sdp4bit:chunks=2")
     assert plan.wire_chunks() == {"tp_fwd": 4, "tp_bwd": 4, "grad_rs": 2,
-                                  "weight_ag": 1, "pp": 1}
+                                  "weight_ag": 1, "pp": 1, "sp": 1}
     assert from_spec("baseline").wire_chunks() == \
         {p: 1 for p in plan.wire_chunks()}
 
@@ -725,7 +725,7 @@ def test_commplan_wire_variable_flags():
     plan = from_spec("tp=taco+zle,grad_rs=sdp4bit")
     assert plan.wire_variable() == {
         "tp_fwd": True, "tp_bwd": True, "grad_rs": False,
-        "weight_ag": False, "pp": False}
+        "weight_ag": False, "pp": False, "sp": False}
     assert from_spec("baseline").wire_variable() == \
         {p: False for p in plan.wire_variable()}
 

@@ -1,0 +1,340 @@
+"""Sequence-parallel (Ulysses a2a + ring attention) tests.
+
+Fast in-process coverage: the ``sp=`` spec path and CommPlan/ParallelCtx
+plumbing, hypothesis property tests for the Ulysses redistribute
+round-trip (a2a then its inverse == identity at the identity codec,
+bounded double-roundtrip error per lossy codec), the ring-attention
+online-softmax partial/merge math against a dense softmax reference
+(including the fully-masked-block guard), and a single-device ring
+simulation whose hop emission goes through ``core/overlap.run_ring``
+(tick order pinned with the same logged-stages fixture style as
+tests/test_overlap.py).
+
+The real 8-device matrix — Ulysses/ring vs monolithic attention parity,
+dp x sp train-step loss/grad parity vs the single-axis baseline, one
+all-to-all per compressed hop, ring permutes fenced and interleaved by
+the pipelined scheduler — runs in a subprocess
+(tests/multidev/check_sp.py); scripts/ci.sh runs the fast subset here in
+its fail-fast gate.
+"""
+import os
+import subprocess
+import sys
+from pathlib import Path
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from jax.sharding import PartitionSpec as P
+
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:                      # offline container
+    from _hypothesis_compat import given, settings, strategies as st
+
+from test_overlap import _logged_stages
+
+from repro.compat import shard_map
+from repro.core import overlap
+from repro.core import parallel as par
+from repro.core.registry import codec_from_spec, from_spec, to_spec
+from repro.models import attention as attn
+
+REPO = Path(__file__).resolve().parents[1]
+ID = codec_from_spec("none")
+
+SP_CODEC_SPECS = ["taco:jnp", "taco:jnp:folded", "sdp4bit", "tahquant",
+                  "int8", "taco+zle:jnp"]
+
+
+def mesh1():
+    return jax.make_mesh((1, 1), ("data", "seq"))
+
+
+def run_sp1(fn, *arrays):
+    return jax.jit(shard_map(fn, mesh=mesh1(),
+                             in_specs=(P(),) * len(arrays),
+                             out_specs=P(), check_vma=False))(*arrays)
+
+
+# --------------------------------------------------------------------------
+# spec grammar / plan plumbing
+# --------------------------------------------------------------------------
+
+def test_sp_is_a_plan_path():
+    assert "sp" in par.PATHS
+    plan = from_spec("sp=taco:folded")
+    assert plan.sp.cfg.metadata == "folded"
+    assert from_spec(to_spec(plan)) == plan        # spec round trip
+
+
+def test_sp_wire_accounting_is_monolithic():
+    """The sp hop never rings: chunks=1 byte accounting even on a
+    chunked codec spec, like pp."""
+    plan = from_spec("sp=taco:chunks=4")
+    bytes_per = plan.wire_bytes_per_element()
+    assert "sp" in bytes_per
+    assert bytes_per["sp"] == from_spec("sp=taco").wire_bytes_per_element()["sp"]
+
+
+def test_parallel_ctx_sp_defaults():
+    ctx = par.ParallelCtx(plan=from_spec("baseline"))
+    assert not ctx.sp_active
+    assert ctx.sp_size() == 1
+    assert ctx.sp_index() == 0
+    ctx_on = par.ParallelCtx(plan=from_spec("sp=taco:jnp"), sp_axis="seq")
+    assert ctx_on.sp_active
+    assert ctx_on.sp_mode == "ulysses"
+
+
+def test_model_sp_axis_plumbing():
+    import dataclasses
+    from repro.configs import get_config, make_plan, smoke_config
+    from repro.models.model import Model
+    cfg = dataclasses.replace(smoke_config(get_config("gpt-350m")),
+                              n_layers=2)
+    model = Model(cfg, make_plan(cfg, 1, 1), fsdp_axes=("data",),
+                  sp_axis="seq")
+    bspecs = model.batch_pspecs()
+    assert bspecs["tokens"] == P("data", "seq")
+    spec = next(s for s in jax.tree_util.tree_leaves(
+        model.specs(), is_leaf=lambda s: hasattr(s, "tp_dim")))
+    assert "seq" in model.replicated_grad_axes(spec)
+    from repro.train.train_step import dp_axes
+    assert dp_axes(model) == ("data", "seq")
+    assert dp_axes(Model(cfg, make_plan(cfg, 1, 1),
+                         fsdp_axes=("data",))) == ("data",)
+
+
+def test_sp_mode_dispatch_rejects_unknown():
+    ctx = par.ParallelCtx(plan=from_spec("baseline"), sp_axis="seq",
+                          sp_mode="bogus")
+    x = jnp.zeros((1, 2, 2, 2))
+    with pytest.raises(ValueError, match="unknown sp_mode"):
+        attn.sp_attention(x, x, x, ctx, causal=True, window=None)
+
+
+def test_sp_telemetry_key_flows():
+    from repro.core import telemetry
+    ctx = par.ParallelCtx(plan=from_spec("sp=taco:jnp"))
+    metrics = telemetry.comm_metrics(ctx.plan)
+    assert "comm/sp_bytes_per_elem" in metrics
+
+
+# --------------------------------------------------------------------------
+# Ulysses redistribute round-trip (property, 1-device axis)
+# --------------------------------------------------------------------------
+
+@settings(max_examples=12, deadline=None)
+@given(b=st.integers(1, 3), s=st.integers(1, 5), h=st.integers(1, 6),
+       hd=st.integers(1, 8), seed=st.integers(0, 2**31 - 1))
+def test_ulysses_roundtrip_identity_codec(b, s, h, hd, seed):
+    """a2a(2,1) then a2a(1,2) is the identity, bit-for-bit, for any
+    shape at the identity codec."""
+    rng = np.random.default_rng(seed)
+    x = jnp.asarray(rng.normal(size=(b, s, h, hd)).astype(np.float32))
+    ctx = par.ParallelCtx(plan=par.CommPlan(sp=ID), sp_axis="seq")
+    out = run_sp1(lambda v: ctx.sp_all_to_all(
+        ctx.sp_all_to_all(v, 2, 1), 1, 2), x)
+    assert jnp.array_equal(out, x)
+
+
+@settings(max_examples=8, deadline=None)
+@given(spec=st.sampled_from(SP_CODEC_SPECS), b=st.integers(1, 2),
+       s=st.integers(1, 4), h=st.integers(1, 4),
+       seed=st.integers(0, 2**31 - 1))
+def test_ulysses_roundtrip_lossy_codec_bounded(spec, b, s, h, seed):
+    """Per compressing codec: the redistribute round trip applies the
+    codec twice (once per hop) — deterministic, shape-preserving, with
+    bounded relative error (two lossy passes, each within the codec's
+    quantization tolerance)."""
+    rng = np.random.default_rng(seed)
+    x = jnp.asarray(
+        rng.normal(0, 0.02, (b, s, h, 16)).astype(np.float32))
+    codec = codec_from_spec(spec)
+    ctx = par.ParallelCtx(plan=par.CommPlan(sp=codec), sp_axis="seq")
+
+    def rt(v):
+        return ctx.sp_all_to_all(ctx.sp_all_to_all(v, 2, 1), 1, 2)
+
+    out = run_sp1(rt, x)
+    assert out.shape == x.shape
+    assert jnp.array_equal(out, run_sp1(rt, x))      # deterministic
+    denom = float(jnp.linalg.norm(x)) + 1e-12
+    rel = float(jnp.linalg.norm(out - x)) / denom
+    assert rel < 0.35, (spec, rel)
+
+
+# --------------------------------------------------------------------------
+# ring-attention partial/merge math vs a dense softmax reference
+# --------------------------------------------------------------------------
+
+def _dense_reference(q, k, v, *, causal, window):
+    """(B,S,H,hd) f32 attention by direct softmax — no chunking."""
+    b, s, h, hd = q.shape
+    qf = q.transpose(0, 2, 1, 3).astype(jnp.float32) / np.sqrt(hd)
+    kf = k.transpose(0, 2, 1, 3).astype(jnp.float32)
+    vf = v.transpose(0, 2, 1, 3).astype(jnp.float32)
+    scores = jnp.einsum("bhqd,bhkd->bhqk", qf, kf)
+    pos = jnp.arange(s)
+    bias = attn._block_bias(pos, pos, causal=causal, window=window)
+    probs = jax.nn.softmax(scores + bias[None, None], axis=-1)
+    return jnp.einsum("bhqk,bhkd->bhqd", probs, vf)
+
+
+@settings(max_examples=10, deadline=None)
+@given(p=st.integers(1, 4), causal=st.booleans(),
+       window=st.sampled_from([None, 8]), seed=st.integers(0, 2**31 - 1))
+def test_ring_partial_merge_equals_dense_softmax(p, causal, window, seed):
+    """Splitting KV into p blocks, computing online-softmax partials per
+    block and merging them reproduces the dense softmax to f32 tolerance
+    for every block count, mask, and window."""
+    rng = np.random.default_rng(seed)
+    b, s, h, hd = 2, 16, 2, 8
+    q = jnp.asarray(rng.normal(size=(b, s, h, hd)).astype(np.float32))
+    k = jnp.asarray(rng.normal(size=(b, s, h, hd)).astype(np.float32))
+    v = jnp.asarray(rng.normal(size=(b, s, h, hd)).astype(np.float32))
+    qf = q.transpose(0, 2, 1, 3).astype(jnp.float32) / np.sqrt(hd)
+    s_blk = s // p
+    pos = jnp.arange(s)
+    state = None
+    for j in range(p):
+        kb = k[:, j * s_blk:(j + 1) * s_blk].transpose(0, 2, 1, 3)
+        vb = v[:, j * s_blk:(j + 1) * s_blk].transpose(0, 2, 1, 3)
+        bias = attn._block_bias(pos, pos[j * s_blk:(j + 1) * s_blk],
+                                causal=causal, window=window)
+        part = attn._block_partial(qf, kb, vb, bias)
+        state = part if state is None else attn._merge_partial(state, part)
+    acc, _, l = state
+    out = acc / jnp.maximum(l, 1e-30)[..., None]
+    ref = _dense_reference(q, k, v, causal=causal, window=window)
+    assert jnp.allclose(out, ref, atol=1e-5), float(
+        jnp.max(jnp.abs(out - ref)))
+
+
+def test_fully_masked_block_partial_is_a_merge_noop():
+    """A KV block entirely in the causal future yields the empty partial
+    (acc=0, m=NEG_INF, l=0) — no NaNs — and merging it changes nothing."""
+    rng = np.random.default_rng(0)
+    qf = jnp.asarray(rng.normal(size=(1, 1, 4, 8)).astype(np.float32))
+    kb = jnp.asarray(rng.normal(size=(1, 1, 4, 8)).astype(np.float32))
+    vb = jnp.asarray(rng.normal(size=(1, 1, 4, 8)).astype(np.float32))
+    bias = attn._block_bias(jnp.arange(4), jnp.arange(4) + 100,
+                            causal=True, window=None)
+    acc, m, l = attn._block_partial(qf, kb, vb, bias)
+    assert bool(jnp.all(jnp.isfinite(acc))) and bool(jnp.all(acc == 0))
+    assert bool(jnp.all(m == attn.NEG_INF))
+    assert bool(jnp.all(l == 0))
+    live_bias = attn._block_bias(jnp.arange(4), jnp.arange(4),
+                                 causal=True, window=None)
+    live = attn._block_partial(qf, kb, vb, live_bias)
+    merged = attn._merge_partial(live, (acc, m, l))
+    for a, b in zip(merged, live):
+        assert jnp.array_equal(a, b)
+    # symmetric order: empty-first must merge identically
+    merged_rev = attn._merge_partial((acc, m, l), live)
+    for a, b in zip(merged_rev, live):
+        assert jnp.array_equal(a, b)
+
+
+# --------------------------------------------------------------------------
+# ring hop emission through core/overlap.run_ring
+# --------------------------------------------------------------------------
+
+def _simulated_ring(q, k, v, p, *, schedule, causal=True, window=None):
+    """Single-host simulation of device 0's ring attention: blocks
+    arrive through ``overlap.run_ring`` exactly like the distributed
+    path (transfer stage selects the source block instead of a
+    ppermute), partials merge in arrival order."""
+    b, s, h, hd = q.shape
+    s_blk = s // p
+    qf = q[:, :s_blk].transpose(0, 2, 1, 3).astype(jnp.float32) \
+        / np.sqrt(hd)
+    kv = jnp.concatenate([k, v], axis=-1)
+    blocks = [kv[:, j * s_blk:(j + 1) * s_blk] for j in range(p)]
+    q_pos = jnp.arange(s_blk)
+
+    def partial_for(block, src):
+        kb, vb = jnp.split(block, 2, axis=-1)
+        bias = attn._block_bias(
+            q_pos, src * s_blk + jnp.arange(s_blk),
+            causal=causal, window=window)
+        return attn._block_partial(qf, kb.transpose(0, 2, 1, 3),
+                                   vb.transpose(0, 2, 1, 3), bias)
+
+    def transfer(t):
+        return lambda blk: blocks[(0 - t) % p]
+
+    def decode(t):
+        return lambda blk: partial_for(blk, (0 - t) % p)
+
+    parts = overlap.run_ring(
+        [blocks[0]] * (p - 1),
+        encode=lambda blk: blk,
+        transfer=[transfer(t) for t in range(1, p)],
+        decode=[decode(t) for t in range(1, p)],
+        schedule=schedule)
+    state = partial_for(blocks[0], 0)
+    for part in parts:
+        state = attn._merge_partial(state, part)
+    acc, _, l = state
+    out = acc / jnp.maximum(l, 1e-30)[..., None]
+    return out.transpose(0, 2, 1, 3)
+
+
+@pytest.mark.parametrize("schedule", [overlap.PIPELINED, overlap.SERIAL])
+def test_simulated_ring_matches_monolithic_core(schedule):
+    """Device 0's blockwise ring (hops emitted by run_ring under either
+    schedule) matches the monolithic chunked attention core within f32
+    merge-order tolerance."""
+    rng = np.random.default_rng(1)
+    p, b, s, h, hd = 4, 2, 32, 2, 8
+    q = jnp.asarray(rng.normal(size=(b, s, h, hd)).astype(np.float32))
+    k = jnp.asarray(rng.normal(size=(b, s, h, hd)).astype(np.float32))
+    v = jnp.asarray(rng.normal(size=(b, s, h, hd)).astype(np.float32))
+    got = _simulated_ring(q, k, v, p, schedule=schedule)
+    ref = attn.attention_core(q, k, v, causal=True, window=None)
+    ref0 = ref[:, :s // p].astype(jnp.float32)
+    assert jnp.allclose(got, ref0, atol=1e-2), float(
+        jnp.max(jnp.abs(got - ref0)))
+
+
+def test_ring_stage_ticks_match_overlap_fixture():
+    """The ring-attention hop/partial chain is the standard run_ring
+    3-stage schedule: the pipelined tick order for sp-1 = 3 streams is
+    exactly the overlap fixture's (encode[t], transfer[t-1],
+    decode[t-2]) diagram."""
+    log = []
+    enc, tx, dec = _logged_stages(log)
+    segs = [jnp.float32(c) for c in range(3)]   # sp=4 -> 3 KV hops
+    outs = overlap.run_ring(segs, encode=enc, transfer=tx, decode=dec,
+                            schedule=overlap.PIPELINED)
+    assert [int(o) for o in outs] == [1, 11, 21]
+    assert log == [
+        ("E", 0),
+        ("E", 1), ("T", 0),
+        ("E", 2), ("T", 1), ("D", 0),
+        ("T", 2), ("D", 1),
+        ("D", 2),
+    ]
+
+
+# --------------------------------------------------------------------------
+# the full 8-device matrix
+# --------------------------------------------------------------------------
+
+@pytest.mark.slow
+def test_multidevice_sp_subprocess():
+    """Ulysses/ring vs monolithic attention parity, dp x sp train-step
+    loss/grad parity vs the single-axis baseline (sp=none loss
+    bit-exact), one all-to-all per compressed hop, ring permutes fenced
+    + interleaved by the pipelined scheduler — on a real 8-device mesh."""
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+    env["PYTHONPATH"] = str(REPO / "src")
+    proc = subprocess.run(
+        [sys.executable, str(REPO / "tests" / "multidev" / "check_sp.py")],
+        env=env, capture_output=True, text=True, timeout=900)
+    assert proc.returncode == 0, proc.stdout + proc.stderr
+    assert "ALL SP CHECKS PASSED" in proc.stdout
